@@ -1,0 +1,47 @@
+"""Paper Table: latency (abstract steps / NOR cycles) + area (cells) for
+all 16 arithmetic variants, bit-serial and bit-parallel, 16/32-bit."""
+
+from __future__ import annotations
+
+from repro.core import (bitparallel, bitparallel_fp, bitserial, bitserial_fp)
+from repro.core.floatfmt import BF16, FP16, FP32
+
+
+def rows():
+    out = []
+
+    def add(name, prog, parallel=False):
+        c = prog.parallel_cost() if parallel else prog.cost()
+        out.append({
+            "op": name,
+            "steps": c.abstract_steps,
+            "nor_cycles": c.nor_gates,
+            "nor_cycles_norm9": c.nor_gates_normalized,
+            "cells": c.cells,
+        })
+
+    for n in (16, 32):
+        add(f"serial add{n}", bitserial.build_add(n))
+        add(f"serial sub{n}", bitserial.build_sub(n))
+        add(f"serial mul{n} (shift-add)",
+            bitserial.build_mul(n, karatsuba=False))
+        add(f"serial mul{n} (karatsuba)", bitserial.build_mul(n))
+        add(f"serial div{n}", bitserial.build_div(n))
+        add(f"parallel add{n}", bitparallel.build_bp_add(n), parallel=True)
+        add(f"parallel mul{n}", bitparallel.build_bp_mul(n, cpk=256),
+            parallel=True)
+        add(f"parallel div{n}", bitparallel.build_bp_div(n, cpk=384),
+            parallel=True)
+    for fname, fmt in (("fp16", FP16), ("bf16", BF16), ("fp32", FP32)):
+        add(f"serial {fname} add (signed)", bitserial_fp.build_fp_add(fmt))
+        add(f"serial {fname} add (unsigned)",
+            bitserial_fp.build_fp_add(fmt, signed=False))
+        add(f"serial {fname} mul", bitserial_fp.build_fp_mul(fmt))
+        add(f"serial {fname} div", bitserial_fp.build_fp_div(fmt))
+        add(f"parallel {fname} add", bitparallel_fp.build_bp_fp_add(fmt),
+            parallel=True)
+        add(f"parallel {fname} mul",
+            bitparallel_fp.build_bp_fp_mul(fmt, cpk=512), parallel=True)
+        add(f"parallel {fname} div",
+            bitparallel_fp.build_bp_fp_div(fmt, cpk=640), parallel=True)
+    return out

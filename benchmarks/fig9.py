@@ -1,0 +1,53 @@
+"""Paper Fig. 9: AritPIM throughput & throughput/Watt vs a bandwidth-bound
+GPU, 32-bit (and 16-bit) numbers, memristive case study (RACER params,
+8 GB of 1024x1024 crossbars = 64 Mi parallel rows)."""
+
+from __future__ import annotations
+
+from repro.core import bitparallel, bitparallel_fp, bitserial, bitserial_fp
+from repro.core.device_model import GPU_DEFAULT, PIM_DEFAULT
+from repro.core.floatfmt import FP16, FP32
+
+
+def rows():
+    pim, gpu = PIM_DEFAULT, GPU_DEFAULT
+    out = []
+
+    def add(name, cost, elem_bytes, parallel):
+        thr = pim.parallel_rows / (pim.cycles(cost) * pim.cycle_ns * 1e-9)
+        tpw = pim.throughput_per_watt(cost)
+        gthr = gpu.throughput_ops(elem_bytes)
+        gtpw = gpu.throughput_per_watt(elem_bytes)
+        out.append({
+            "op": name,
+            "pim_gops": round(thr / 1e9, 1),
+            "gpu_gops": round(gthr / 1e9, 1),
+            "speedup": round(thr / gthr, 1),
+            "pim_gops_per_w": round(tpw / 1e9, 2),
+            "gpu_gops_per_w": round(gtpw / 1e9, 3),
+            "energy_ratio": round(tpw / gtpw, 1),
+        })
+
+    add("int32 add (bit-serial)", bitserial.build_add(32).cost(), 4, False)
+    add("int32 mul (bit-serial)", bitserial.build_mul(32).cost(), 4, False)
+    add("int32 div (bit-serial)", bitserial.build_div(32).cost(), 4, False)
+    add("fp32 add (bit-serial)", bitserial_fp.build_fp_add(FP32).cost(),
+        4, False)
+    add("fp32 mul (bit-serial)", bitserial_fp.build_fp_mul(FP32).cost(),
+        4, False)
+    add("fp32 div (bit-serial)", bitserial_fp.build_fp_div(FP32).cost(),
+        4, False)
+    add("fp16 add (bit-serial)", bitserial_fp.build_fp_add(FP16).cost(),
+        2, False)
+    # bit-parallel: fewer rows per array are usable as operands span k
+    # partitions, but latency shrinks; throughput shown per-row-equal for
+    # comparability with the paper's presentation
+    add("int32 add (bit-parallel)",
+        bitparallel.build_bp_add(32).parallel_cost(), 4, True)
+    add("int32 mul (bit-parallel)",
+        bitparallel.build_bp_mul(32, cpk=256).parallel_cost(), 4, True)
+    add("int32 div (bit-parallel)",
+        bitparallel.build_bp_div(32, cpk=384).parallel_cost(), 4, True)
+    add("fp32 add (bit-parallel)",
+        bitparallel_fp.build_bp_fp_add(FP32).parallel_cost(), 4, True)
+    return out

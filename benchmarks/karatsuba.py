@@ -1,0 +1,27 @@
+"""Paper §3.2 fn.3: the Karatsuba crossover sits near N≈20 for bit-serial
+in-memory multiplication (vs thousands of digits on CPUs)."""
+
+from __future__ import annotations
+
+from repro.core import bitserial
+
+
+def rows():
+    out = []
+    for n in (8, 12, 16, 20, 24, 32, 48, 64):
+        naive = bitserial.build_mul(n, karatsuba=False).cost()
+        kar = bitserial.build_mul(n, karatsuba=True, thresh=14).cost()
+        out.append({
+            "N": n,
+            "shift_add_nor": naive.nor_gates,
+            "karatsuba_nor": kar.nor_gates,
+            "speedup": round(naive.nor_gates / kar.nor_gates, 3),
+        })
+    return out
+
+
+def crossover():
+    for r in rows():
+        if r["speedup"] > 1.0:
+            return r["N"]
+    return None

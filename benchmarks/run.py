@@ -1,0 +1,86 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run`` prints ``name,us_per_call,derived`` CSV rows:
+  * per-algorithm NOR-cycle latencies -> microseconds on the memristive
+    device model (paper Tables / Fig. 9 substrate),
+  * Karatsuba crossover (paper §3.2 fn. 3),
+  * variable-normalization overhead (paper §4.4),
+  * Fig. 9 throughput / throughput-per-Watt vs the GPU roofline,
+  * PIM executor kernel wall-time (element-parallel emulation rate).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.device_model import PIM_DEFAULT
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import cycles, fig9, karatsuba, varshift
+
+    for r in cycles.rows():
+        us = r["nor_cycles"] * PIM_DEFAULT.cycle_ns * 1e-3
+        print(f"cycles/{r['op'].replace(' ', '_')},{us:.3f},"
+              f"steps={r['steps']};nor={r['nor_cycles']};"
+              f"nor9={r['nor_cycles_norm9']};cells={r['cells']}")
+
+    for r in karatsuba.rows():
+        us = r["karatsuba_nor"] * PIM_DEFAULT.cycle_ns * 1e-3
+        print(f"karatsuba/N{r['N']},{us:.3f},"
+              f"speedup_vs_shift_add={r['speedup']}")
+    print(f"karatsuba/crossover,{0.0:.3f},N={karatsuba.crossover()}")
+
+    for r in varshift.rows():
+        us = r["var_norm_nor"] * PIM_DEFAULT.cycle_ns * 1e-3
+        print(f"varnorm/Nx{r['Nx']},{us:.3f},"
+              f"overhead_pct={r['overhead_pct']};"
+              f"naive_overhead_pct={r['naive_overhead_pct']}")
+
+    for r in fig9.rows():
+        us = 0.0
+        print(f"fig9/{r['op'].replace(' ', '_')},{us:.3f},"
+              f"pim_gops={r['pim_gops']};gpu_gops={r['gpu_gops']};"
+              f"speedup={r['speedup']};energy_ratio={r['energy_ratio']}")
+
+    # fp64 extension (beyond the paper's 32-bit evaluation)
+    from repro.core import bitserial_fp as bsf64
+    from repro.core.floatfmt import FP64
+    c64 = bsf64.build_fp_add(FP64).cost()
+    print(f"cycles/serial_fp64_add,{c64.nor_gates * PIM_DEFAULT.cycle_ns * 1e-3:.3f},"
+          f"steps={c64.abstract_steps};nor={c64.nor_gates}")
+
+    # PIM-offload planner (AritPIM as a serving feature)
+    from repro.core.offload import decode_step_plan
+    from repro.configs import registry
+    for arch in ("rwkv6-1.6b", "qwen3-8b"):
+        plans = decode_step_plan(registry.get(arch), batch=128, seq=32768)
+        n_off = sum(p.offload for p in plans)
+        tot_tpu = sum(p.tpu_us for p in plans)
+        tot_pim = sum(p.pim_us if p.offload else p.tpu_us for p in plans)
+        print(f"offload/{arch},{tot_pim:.1f},"
+              f"classes_offloaded={n_off}/{len(plans)};"
+              f"elementwise_us_tpu={tot_tpu:.1f}")
+
+    # kernel wall-time: element-parallel fp16 add on the Pallas executor
+    from repro.core import bitserial_fp
+    from repro.core.floatfmt import FP16
+    from repro.kernels import ops as kops
+    prog = bitserial_fp.build_fp_add(FP16)
+    rng = np.random.default_rng(0)
+    n = 8192
+    x = FP16.random_bits(rng, n, emin=10, emax=20).astype(np.uint64)
+    y = FP16.random_bits(rng, n, emin=10, emax=20).astype(np.uint64)
+    kops.run_program(prog, {"x": x, "y": y}, n, backend="ref")  # warm up
+    t0 = time.time()
+    kops.run_program(prog, {"x": x, "y": y}, n, backend="ref")
+    dt = time.time() - t0
+    print(f"kernel/fp16_add_8k_rows,{dt * 1e6:.1f},"
+          f"rows_per_s={n / dt:.0f}")
+
+
+if __name__ == "__main__":
+    main()

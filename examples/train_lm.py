@@ -1,0 +1,19 @@
+"""End-to-end driver: train a ~small qwen3-family LM for a few hundred
+steps with the production code path (pjit sharding rules, fault-tolerant
+loop, async checkpoints, deterministic data).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if not any(a.startswith("--steps") for a in args):
+        args += ["--steps", "200"]
+    train.main(["--arch", "qwen3-8b", "--reduced", "--d-model", "128",
+                "--layers", "4", "--batch", "8", "--seq", "128",
+                "--ckpt-dir", "/tmp/repro_example_ckpt",
+                "--ckpt-every", "50"] + args)

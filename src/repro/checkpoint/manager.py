@@ -1,0 +1,145 @@
+"""Sharded checkpoint manager: atomic, async, reshard-on-restore.
+
+Layout::
+
+    <dir>/step_000123/
+        manifest.json      tree structure, shapes, dtypes, data hash
+        arr_000.npy ...    one file per leaf (host-gathered)
+    <dir>/LATEST           atomic pointer file
+
+Writes go to ``step_x.tmp`` and are renamed only after fsync -- a preempted
+save can never corrupt LATEST.  ``save_async`` runs the host-side write in a
+daemon thread (compute continues; the next save joins the previous).
+Restore accepts a *target sharding tree*: arrays are ``jax.device_put`` onto
+whatever mesh the restarted job has (elastic restart = restore on a new
+mesh).  Retention keeps the newest k checkpoints.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any) -> str:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        return self._write(step, host_tree)
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree) -> str:
+        leaves, tdef = jax.tree.flatten(host_tree)
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {"step": step, "n_leaves": len(leaves),
+                    "treedef": str(tdef),
+                    "leaves": []}
+        h = hashlib.sha256()
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            dtype_name = str(arr.dtype)
+            if dtype_name in _EXOTIC:       # np.save can't roundtrip these
+                arr = arr.view(_EXOTIC[dtype_name])
+            path = os.path.join(tmp, f"arr_{i:04d}.npy")
+            np.save(path, arr)
+            h.update(arr.tobytes()[:4096])
+            manifest["leaves"].append(
+                {"shape": list(arr.shape), "dtype": dtype_name})
+        manifest["digest"] = h.hexdigest()
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._update_latest(step)
+        self._retain()
+        return final
+
+    def _update_latest(self, step: int) -> None:
+        tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(tmp, "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self.dir, "LATEST"))
+
+    def _retain(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return int(f.read().strip())
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``template``; with ``shardings``
+        (a matching tree of jax.sharding.Sharding) arrays are placed onto
+        the *current* mesh -- resharding happens here, which is what makes
+        restarts elastic across device counts."""
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint found"
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        leaves, tdef = jax.tree.flatten(template)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["n_leaves"] == len(leaves), "tree mismatch"
+        out = []
+        for i, leaf in enumerate(leaves):
+            arr = np.load(os.path.join(d, f"arr_{i:04d}.npy"))
+            want = manifest["leaves"][i]["dtype"]
+            if want in _EXOTIC:
+                arr = arr.view(getattr(ml_dtypes, want))
+            out.append(arr)
+        tree = tdef.unflatten(out)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree

@@ -1,0 +1,470 @@
+"""Gate-level IR for the AritPIM abstract machine.
+
+The paper's abstract model (Fig. 1e): memory is a collection of arrays of
+``r x c`` bits; one bitwise *column* operation (e.g. NOR of two columns into a
+third) executes per cycle, in parallel over all rows and all arrays.  An
+arithmetic algorithm is therefore a straight-line *gate program* over cell
+(column) indices of a single row; element parallelism is the trivial
+replication of that program over rows.
+
+Two levels of IR:
+
+* **abstract programs** -- instructions drawn from ``G`` (NOT/NOR/AND/OR/XOR/
+  XNOR/MUX/FA/...).  One instruction == one "step" in the paper's terminology.
+* **NOR programs** -- the same program lowered to the stateful-logic gate set
+  {INIT0, INIT1, NOT, NOR} actually supported by memristive PIM (MAGIC) and,
+  with trivial substitutions, DRAM PIM.  One instruction == one cycle.
+
+``Program`` carries named ports (cell ranges) so callers can write inputs /
+read outputs without knowing the internal allocation, and a cost model
+(abstract steps, NOR gates, init cycles, cell footprint == area).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from enum import IntEnum
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class G(IntEnum):
+    INIT0 = 0   # out <- 0                     (memristive output init)
+    INIT1 = 1   # out <- 1
+    NOT = 2     # out <- ~a
+    NOR = 3     # out <- ~(a | b)
+    OR = 4      # out <- a | b
+    AND = 5     # out <- a & b
+    NAND = 6    # out <- ~(a & b)
+    XOR = 7     # out <- a ^ b
+    XNOR = 8    # out <- ~(a ^ b)
+    MUX = 9     # out <- a if s else b     ins = (s, a, b)
+    MUXN = 10   # mux with precomputed ~s  ins = (s, ns, a, b)
+    FA = 11     # out,out2 <- sum,carry    ins = (a, b, c)
+    FACC = 12   # carry-complement FA      ins = (a, b, c, nc) outs = (sum, cout, ncout)
+    ID = 13     # out <- a                 (copy)
+
+
+# NOR-lowering cost (gates) per abstract op; INIT cycles equal the number of
+# *written* cells (output init) per lowered NOR/NOT gate and are reported
+# separately -- see CostModel.
+_NOR_GATES = {
+    G.INIT0: 0, G.INIT1: 0, G.NOT: 1, G.NOR: 1, G.OR: 2, G.AND: 3,
+    G.NAND: 4, G.XOR: 5, G.XNOR: 4, G.MUX: 4, G.MUXN: 3, G.FA: 12,
+    G.FACC: 11, G.ID: 2,
+}
+
+# Paper fn. 14 normalizes every compared algorithm to a 9-NOR full adder; we
+# report both our concrete netlist cost and the normalized cost.
+FA_NORS_NORMALIZED = 9
+
+
+@dataclasses.dataclass
+class Instr:
+    op: int
+    ins: tuple        # cell ids (length depends on op)
+    outs: tuple       # cell ids
+
+
+@dataclasses.dataclass
+class Cost:
+    abstract_steps: int
+    nor_gates: int
+    nor_gates_normalized: int   # FAs counted at 9 NORs (paper's convention)
+    init_cycles: int
+    cells: int                  # peak cell footprint (area proxy)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class Program:
+    """A straight-line gate program over cells of one row."""
+
+    def __init__(self, n_cells: int, instrs: List[Instr],
+                 ports: Dict[str, List[int]], parallel_steps=None):
+        self.n_cells = n_cells
+        self.instrs = instrs
+        self.ports = ports          # name -> list of cell ids (LSB first)
+        # bit-parallel programs: list of (list of instr indices) per cycle,
+        # None for purely serial programs.
+        self.parallel_steps = parallel_steps
+
+    # ------------------------------------------------------------------ cost
+    def cost(self) -> Cost:
+        steps = 0
+        nor = 0
+        nor_norm = 0
+        init = 0
+        for ins in self.instrs:
+            op = ins.op
+            if op in (G.INIT0, G.INIT1):
+                init += 1
+                continue
+            steps += 1
+            g = _NOR_GATES[op]
+            nor += g
+            nor_norm += FA_NORS_NORMALIZED if op in (G.FA, G.FACC) else g
+            init += g  # each lowered NOR/NOT writes one freshly-initialized cell
+        return Cost(steps, nor, nor_norm, init, self.n_cells)
+
+    def parallel_cost(self) -> Optional[Cost]:
+        """Latency when executed under the partition schedule: per cycle the
+        *maximum* NOR depth among concurrent gates (sections run in parallel,
+        each section serially evaluating its gate's NOR decomposition)."""
+        if self.parallel_steps is None:
+            return None
+        steps = len(self.parallel_steps)
+        nor = 0
+        nor_norm = 0
+        init = 0
+        for idxs in self.parallel_steps:
+            ops = [self.instrs[i].op for i in idxs]
+            ops = [o for o in ops if o not in (G.INIT0, G.INIT1)]
+            if not ops:
+                init += 1
+                continue
+            nor += max(_NOR_GATES[o] for o in ops)
+            nor_norm += max(
+                FA_NORS_NORMALIZED if o in (G.FA, G.FACC) else _NOR_GATES[o]
+                for o in ops)
+            init += max(_NOR_GATES[o] for o in ops)
+        return Cost(steps, nor, nor_norm, init, self.n_cells)
+
+    # ----------------------------------------------------------------- exec
+    def exec_row(self, inputs: Dict[str, int]) -> Dict[str, int]:
+        """Reference single-row execution; integers in/out per port."""
+        state = np.zeros(self.n_cells, dtype=bool)
+        for name, val in inputs.items():
+            for k, cell in enumerate(self.ports[name]):
+                state[cell] = (val >> k) & 1
+        _exec_bool(self.instrs, state)
+        out = {}
+        for name, cells in self.ports.items():
+            out[name] = sum(int(state[c]) << k for k, c in enumerate(cells))
+        return out
+
+    def exec_packed(self, state: np.ndarray) -> np.ndarray:
+        """Element-parallel execution over bit-packed rows.
+
+        ``state``: uint32[n_words, n_cells]; bit ``w`` of ``state[i, c]`` is
+        cell ``c`` of row ``32*i + w``.  Mutated in place and returned.
+        """
+        assert state.dtype == np.uint32 and state.shape[1] == self.n_cells
+        _exec_packed(self.instrs, state)
+        return state
+
+    # ------------------------------------------------------------- lowering
+    def lower_to_nor(self) -> "Program":
+        """Lower to the {INIT0, INIT1, NOT, NOR} gate set."""
+        b = Builder(reserve=self.n_cells)
+        for ins in self.instrs:
+            _lower_instr(b, ins)
+        return Program(b.n_cells, b.instrs, dict(self.ports))
+
+    def to_arrays(self):
+        """Dense (op, a, b, out) int32 arrays of the NOR-lowered program, the
+        transport format consumed by the Pallas executor."""
+        low = self.lower_to_nor()
+        ops, aa, bb, oo = [], [], [], []
+        for ins in low.instrs:
+            op = ins.op
+            if op in (G.INIT0, G.INIT1):
+                ops.append(int(op)); aa.append(0); bb.append(0)
+            elif op == G.NOT:
+                ops.append(int(op)); aa.append(ins.ins[0]); bb.append(ins.ins[0])
+            else:
+                assert op == G.NOR, op
+                ops.append(int(op)); aa.append(ins.ins[0]); bb.append(ins.ins[1])
+            oo.append(ins.outs[0])
+        return (np.asarray(ops, np.int32), np.asarray(aa, np.int32),
+                np.asarray(bb, np.int32), np.asarray(oo, np.int32),
+                low.n_cells)
+
+
+# --------------------------------------------------------------------------
+# execution helpers
+# --------------------------------------------------------------------------
+
+def _gate_eval(op, vals):
+    if op == G.NOT:
+        return ~vals[0]
+    if op == G.NOR:
+        return ~(vals[0] | vals[1])
+    if op == G.OR:
+        return vals[0] | vals[1]
+    if op == G.AND:
+        return vals[0] & vals[1]
+    if op == G.NAND:
+        return ~(vals[0] & vals[1])
+    if op == G.XOR:
+        return vals[0] ^ vals[1]
+    if op == G.XNOR:
+        return ~(vals[0] ^ vals[1])
+    if op == G.MUX:
+        s, a, b = vals
+        return (s & a) | (~s & b)
+    if op == G.MUXN:
+        s, ns, a, b = vals
+        return (s & a) | (ns & b)
+    if op == G.ID:
+        return vals[0]
+    raise ValueError(op)
+
+
+def _exec_generic(instrs, state, zero, one):
+    for ins in instrs:
+        op = ins.op
+        if op == G.INIT0:
+            state[ins.outs[0]] = zero
+        elif op == G.INIT1:
+            state[ins.outs[0]] = one
+        elif op == G.FA:
+            a, b, c = (state[i] for i in ins.ins)
+            state[ins.outs[0]] = a ^ b ^ c
+            state[ins.outs[1]] = (a & b) | (a & c) | (b & c)
+        elif op == G.FACC:
+            a, b, c, _nc = (state[i] for i in ins.ins)
+            s = a ^ b ^ c
+            co = (a & b) | (a & c) | (b & c)
+            state[ins.outs[0]] = s
+            state[ins.outs[1]] = co
+            state[ins.outs[2]] = ~co
+        else:
+            state[ins.outs[0]] = _gate_eval(op, [state[i] for i in ins.ins])
+
+
+def _exec_bool(instrs, state):
+    _exec_generic(instrs, state, False, True)
+
+
+def _exec_packed(instrs, state):
+    # state: uint32[n_words, n_cells]; operate on columns state[:, c].
+    cols = state.T  # view: [n_cells, n_words]
+    zero = np.uint32(0)
+    one = np.uint32(0xFFFFFFFF)
+    full = np.full(state.shape[0], one, np.uint32)
+    _exec_generic(instrs, cols, zero, full)
+
+
+# --------------------------------------------------------------------------
+# builder
+# --------------------------------------------------------------------------
+
+class Builder:
+    """Allocates cells and appends instructions.
+
+    Cells are integers; ``free`` returns intermediates to a free list so the
+    peak footprint (area) stays honest.  ``vec`` helpers treat ``list[int]``
+    as little-endian bit vectors.
+    """
+
+    def __init__(self, reserve: int = 0):
+        self.n_cells = reserve
+        self.instrs: List[Instr] = []
+        self._free: List[int] = []
+        self._const = {}
+        self.ports: Dict[str, List[int]] = {}
+        self._steps: Optional[List[List[int]]] = None  # parallel schedule
+
+    # --------------------------------------------------------- cell mgmt
+    def alloc(self, n: int = 1):
+        out = []
+        for _ in range(n):
+            if self._free:
+                out.append(self._free.pop())
+            else:
+                out.append(self.n_cells)
+                self.n_cells += 1
+        return out if n != 1 else out[0]
+
+    def free(self, cells):
+        if isinstance(cells, int):
+            cells = [cells]
+        port_cells = {c for v in self.ports.values() for c in v}
+        for c in set(cells):
+            if c in self._const.values() or c in port_cells \
+                    or c in self._free:
+                continue
+            self._free.append(c)
+
+    def input(self, name: str, n: int) -> List[int]:
+        v = [self.alloc() for _ in range(n)]
+        self.ports[name] = v
+        return v
+
+    def output(self, name: str, cells: Sequence[int]):
+        self.ports[name] = list(cells)
+
+    # ---------------------------------------------------------- emission
+    def emit(self, op, ins, outs):
+        self.instrs.append(Instr(op, tuple(ins), tuple(outs)))
+        if self._steps is not None:
+            self._steps.append([len(self.instrs) - 1])
+        return outs[0] if len(outs) == 1 else outs
+
+    def const(self, bit: int) -> int:
+        if bit not in self._const:
+            c = self.alloc()
+            self.emit(G.INIT1 if bit else G.INIT0, (), (c,))
+            self._const[bit] = c
+        return self._const[bit]
+
+    def _unary(self, op, a):
+        return self.emit(op, (a,), (self.alloc(),))
+
+    def _binary(self, op, a, b):
+        return self.emit(op, (a, b), (self.alloc(),))
+
+    def not_(self, a): return self._unary(G.NOT, a)
+    def id_(self, a): return self._unary(G.ID, a)
+    def nor(self, a, b): return self._binary(G.NOR, a, b)
+    def or_(self, a, b): return self._binary(G.OR, a, b)
+    def and_(self, a, b): return self._binary(G.AND, a, b)
+    def nand(self, a, b): return self._binary(G.NAND, a, b)
+    def xor(self, a, b): return self._binary(G.XOR, a, b)
+    def xnor(self, a, b): return self._binary(G.XNOR, a, b)
+
+    def mux(self, s, a, b):
+        """out <- a if s else b."""
+        return self.emit(G.MUX, (s, a, b), (self.alloc(),))
+
+    def muxn(self, s, ns, a, b):
+        """mux with hoisted ~s (3 NORs instead of 4; Alg 4.1 amortization)."""
+        return self.emit(G.MUXN, (s, ns, a, b), (self.alloc(),))
+
+    def fa(self, a, b, c):
+        s, co = self.alloc(), self.alloc()
+        self.emit(G.FA, (a, b, c), (s, co))
+        return s, co
+
+    def facc(self, a, b, c, nc):
+        s, co, nco = self.alloc(), self.alloc(), self.alloc()
+        self.emit(G.FACC, (a, b, c, nc), (s, co, nco))
+        return s, co, nco
+
+    # ------------------------------------------------------- vector ops
+    def vec_input(self, name, n):
+        return self.input(name, n)
+
+    def vec_const(self, value: int, n: int) -> List[int]:
+        return [self.const((value >> k) & 1) for k in range(n)]
+
+    def vec_map(self, fn, *vecs):
+        n = len(vecs[0])
+        assert all(len(v) == n for v in vecs)
+        return [fn(*(v[i] for v in vecs)) for i in range(n)]
+
+    def vec_xor(self, x, y): return self.vec_map(self.xor, x, y)
+    def vec_and(self, x, y): return self.vec_map(self.and_, x, y)
+    def vec_or(self, x, y): return self.vec_map(self.or_, x, y)
+    def vec_not(self, x): return self.vec_map(self.not_, x)
+    def vec_id(self, x): return self.vec_map(self.id_, x)
+
+    def vec_and_bit(self, x, bit):
+        return [self.and_(xi, bit) for xi in x]
+
+    def vec_mux(self, s, a, b):
+        """elementwise a if s else b, with ~s hoisted once."""
+        ns = self.not_(s)
+        out = [self.muxn(s, ns, ai, bi) for ai, bi in zip(a, b)]
+        self.free(ns)
+        return out
+
+    def or_reduce(self, bits):
+        acc = bits[0]
+        first = True
+        for b in bits[1:]:
+            nxt = self.or_(acc, b)
+            if not first:
+                self.free(acc)
+            acc, first = nxt, False
+        return acc if not first else self.id_(acc)
+
+    # ------------------------------------------------------ finalization
+    def finish(self) -> Program:
+        return Program(self.n_cells, self.instrs, dict(self.ports),
+                       parallel_steps=self._steps)
+
+
+# --------------------------------------------------------------------------
+# NOR lowering
+# --------------------------------------------------------------------------
+
+def _lower_instr(b: Builder, ins: Instr):
+    """Append the NOR/NOT/INIT expansion of ``ins`` to builder ``b`` writing
+    results into the *original* output cells (cells ids are preserved because
+    the builder was reserved with the abstract program's cell count)."""
+    op = ins.op
+    I, O = ins.ins, ins.outs
+
+    def nor(a, bb, out=None):
+        out = b.alloc() if out is None else out
+        b.emit(G.NOR, (a, bb), (out,))
+        return out
+
+    def not_(a, out=None):
+        out = b.alloc() if out is None else out
+        b.emit(G.NOT, (a,), (out,))
+        return out
+
+    if op in (G.INIT0, G.INIT1):
+        b.emit(op, (), O)
+    elif op == G.NOT:
+        not_(I[0], O[0])
+    elif op == G.NOR:
+        nor(I[0], I[1], O[0])
+    elif op == G.OR:
+        t = nor(I[0], I[1]); not_(t, O[0]); b.free(t)
+    elif op == G.AND:
+        na, nb = not_(I[0]), not_(I[1])
+        nor(na, nb, O[0]); b.free([na, nb])
+    elif op == G.NAND:
+        na, nb = not_(I[0]), not_(I[1])
+        t = nor(na, nb); not_(t, O[0]); b.free([na, nb, t])
+    elif op == G.XNOR:
+        n1 = nor(I[0], I[1]); n2 = nor(I[0], n1); n3 = nor(I[1], n1)
+        nor(n2, n3, O[0]); b.free([n1, n2, n3])
+    elif op == G.XOR:
+        n1 = nor(I[0], I[1]); n2 = nor(I[0], n1); n3 = nor(I[1], n1)
+        n4 = nor(n2, n3); not_(n4, O[0]); b.free([n1, n2, n3, n4])
+    elif op in (G.MUX, G.MUXN):
+        if op == G.MUX:
+            s, a, c = I
+            ns = not_(s); tmp_ns = True
+        else:
+            s, ns, a, c = I
+            tmp_ns = False
+        # out = (s&a)|(~s&c) = NOR(NOR(a, ns), NOR(c, s))
+        t1 = nor(a, ns); t2 = nor(c, s)
+        nor(t1, t2, O[0])
+        b.free([t1, t2] + ([ns] if tmp_ns else []))
+    elif op == G.ID:
+        t = not_(I[0]); not_(t, O[0]); b.free(t)
+    elif op in (G.FA, G.FACC):
+        if op == G.FACC:
+            a, x, c, ncin = I
+            s_out, co_out, nco_out = O
+        else:
+            a, x, c = I
+            s_out, co_out = O
+            nco_out = None
+            ncin = not_(c)
+        # 11-gate carry-complement netlist (see DESIGN.md §7):
+        n1 = nor(a, x)          # ~a~b
+        n2 = nor(a, n1)         # ~a b
+        n3 = nor(x, n1)         # a ~b
+        n4 = nor(n2, n3)        # xnor
+        xo = not_(n4)           # xor
+        t1 = nor(n4, ncin)      # xor & c
+        t2 = nor(xo, c)         # ~xor & ~c
+        ab = nor(n1, xo)        # a & b
+        nco = nor(ab, t1, out=nco_out)  # ~cout (fresh cell if nco_out is None)
+        not_(nco, co_out)
+        nor(t1, t2, s_out)      # sum = ~(xor&c | ~xor&~c) = xor ^ c
+        b.free([n1, n2, n3, n4, xo, t1, t2, ab])
+        if nco_out is None:
+            b.free([nco, ncin])
+    else:
+        raise ValueError(op)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: PIM gate-program executor.
+
+TPU adaptation of the paper's core insight (DESIGN.md §2): a PIM column of r
+row-bits is a dense bitvector, and an arithmetic algorithm is a straight-line
+NOR program over columns.  Executing the *entire program* while a row-tile's
+cells are resident in VMEM pays HBM traffic once per tile instead of once per
+gate, lifting arithmetic intensity from ~1 bit-op/byte to ~program-length
+bit-ops/byte -- the memory-wall argument of the paper, restated for the
+TPU memory hierarchy (HBM -> VMEM -> VREG).
+
+Layout: ``state[cell, word]`` (uint32), 32 rows packed per word along the
+lane dimension; one grid step owns a ``(n_cells, TILE_W)`` VMEM block.  The
+lowered program (ops/a/b/out int32 arrays, ops in {INIT0=0, INIT1=1, NOT=2,
+NOR=3}) arrives via scalar prefetch and drives a ``fori_loop``; NOT is NOR
+with b==a, so the compute is a single branchless select per gate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_W = 256          # lane-dim words per block (multiple of 128)
+_FULL = 0xFFFFFFFF
+
+
+def _pim_kernel(ops_ref, a_ref, b_ref, o_ref, state_ref, out_ref):
+    # bring the tile into the output buffer once; all gates run in-place
+    out_ref[...] = state_ref[...]
+    n = ops_ref.shape[0]
+
+    def body(i, carry):
+        op = ops_ref[i]
+        av = pl.load(out_ref, (pl.ds(a_ref[i], 1), slice(None)))
+        bv = pl.load(out_ref, (pl.ds(b_ref[i], 1), slice(None)))
+        nor = ~(av | bv)                      # NOT == NOR with b == a
+        init = jnp.where(op == 1, jnp.uint32(_FULL), jnp.uint32(0))
+        res = jnp.where(op >= 2, nor, jnp.broadcast_to(init, nor.shape))
+        pl.store(out_ref, (pl.ds(o_ref[i], 1), slice(None)), res)
+        return carry
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_cells", "interpret"))
+def pim_exec_padded(state, ops, a, b, o, *, n_cells, interpret=True):
+    """Run a lowered NOR program over ``state`` (uint32[n_cells, n_words]),
+    n_words a multiple of TILE_W.  Returns the final state."""
+    n_words = state.shape[1]
+    assert state.shape[0] == n_cells and n_words % TILE_W == 0
+    grid = (n_words // TILE_W,)
+    return pl.pallas_call(
+        _pim_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[pl.BlockSpec((n_cells, TILE_W), lambda i, *_: (0, i))],
+            out_specs=pl.BlockSpec((n_cells, TILE_W), lambda i, *_: (0, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(state.shape, jnp.uint32),
+        interpret=interpret,
+    )(ops, a, b, o, state)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the PIM gate-program executor kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_FULL = 0xFFFFFFFF
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pim_exec_ref(state, ops, a, b, o):
+    """Reference executor: state uint32[n_cells, n_words]; ops/a/b/o int32[n].
+    Semantics identical to kernels.pim_exec (INIT0=0, INIT1=1, NOT=2, NOR=3;
+    NOT encoded with b == a)."""
+
+    def body(i, st):
+        op = ops[i]
+        av = jax.lax.dynamic_slice_in_dim(st, a[i], 1, axis=0)
+        bv = jax.lax.dynamic_slice_in_dim(st, b[i], 1, axis=0)
+        nor = ~(av | bv)
+        init = jnp.where(op == 1, jnp.uint32(_FULL), jnp.uint32(0))
+        res = jnp.where(op >= 2, nor, jnp.broadcast_to(init, nor.shape))
+        return jax.lax.dynamic_update_slice_in_dim(st, res, o[i], axis=0)
+
+    return jax.lax.fori_loop(0, ops.shape[0], body, state)

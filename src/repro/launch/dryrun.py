@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM, and unsupported collectives all surface here.
+Emits one JSON record per cell (memory analysis, cost analysis, collective
+byte census parsed from the post-SPMD HLO) consumed by launch.roofline and
+EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k [--multi-pod] [--all] [--out results/dryrun]
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from ..configs import registry                              # noqa: E402
+from ..optim import adamw                                   # noqa: E402
+from . import sharding as SH                                # noqa: E402
+from .mesh import make_production_mesh                      # noqa: E402
+from .steps import (SHAPES, accum_for, batch_specs, cell_skip_reason,
+                    input_specs, make_decode_step, make_prefill_step,
+                    make_train_step)                        # noqa: E402
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|c64|c128)\[([0-9,]*)\]")
+
+# wire-cost multiplier per collective (ring algorithms, large N limit)
+_WIRE = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_census(hlo_text: str):
+    """Sum collective payload bytes (per device) by op kind."""
+    out = {k: {"count": 0, "bytes": 0.0} for k in _WIRE}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dm in _SHAPE_RE.finditer(shapes):
+            dims = [int(x) for x in dm.group(2).split(",") if x]
+            nbytes += int(np.prod(dims)) * _DTYPE_BYTES[dm.group(1)] \
+                if dims else _DTYPE_BYTES[dm.group(1)]
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes * _WIRE[kind]
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             force: bool = False, serve_tp: bool = False,
+             embed_d: bool = False, fused_accum: bool = False,
+             accum_override: int = 0, variant: str = "",
+             seq_cache: bool = False):
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if variant:
+        tag += f"__{variant}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        print(f"[skip-cached] {tag}")
+        return json.load(open(path))
+
+    cfg = registry.get(arch)
+    plan = SHAPES[shape_name]
+    skip = cell_skip_reason(cfg, plan)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": plan.kind, "skip": skip}
+    if skip:
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[skip] {tag}: {skip}")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    SH.install_activation_sharder(mesh)
+    import repro.launch.steps as steps_mod
+    if accum_override:
+        orig_accum = steps_mod.accum_for
+        steps_mod.accum_for = lambda c, s: (accum_override
+                                            if s.kind == "train"
+                                            else orig_accum(c, s))
+    specs = input_specs(cfg, plan)
+    pshard = SH.param_shardings(
+        mesh, specs["params"],
+        serve=serve_tp and plan.kind != "train", embed_d=embed_d)
+    bshard = SH.batch_shardings(mesh, specs["batch"],
+                                accum=(plan.kind == "train"))
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    if plan.kind == "train":
+        oshard = SH.opt_shardings(mesh, specs["opt"], pshard)
+        import jax.numpy as jnp
+        fn = make_train_step(cfg, accum_for(cfg, plan),
+                             fused_accum=fused_accum,
+                             acc_dtype=jnp.bfloat16 if os.environ.get(
+                                 "REPRO_BF16_ACC") else jnp.float32)
+        jfn = jax.jit(fn, in_shardings=(pshard, oshard, bshard),
+                      out_shardings=(pshard, oshard,
+                                     jax.tree.map(lambda _: repl,
+                                                  {"loss": 0, "grad_norm": 0,
+                                                   "lr": 0})),
+                      donate_argnums=(0, 1))
+        args = (specs["params"], specs["opt"], specs["batch"])
+    elif plan.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        jfn = jax.jit(fn, in_shardings=(pshard, bshard))
+        args = (specs["params"], specs["batch"])
+    else:
+        cshard = SH.cache_shardings(mesh, specs["caches"],
+                                    batch=plan.global_batch,
+                                    seq_shard=seq_cache)
+        fn = make_decode_step(cfg)
+        jfn = jax.jit(fn, in_shardings=(pshard, cshard, bshard),
+                      donate_argnums=(1,))
+        args = (specs["params"], specs["caches"], specs["batch"])
+
+    with mesh:
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+        print(ma)
+    except Exception as e:                      # CPU backend gaps
+        mem["error"] = str(e)
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and np.isfinite(v)}
+        print({k: cost[k] for k in ("flops", "bytes accessed")
+               if k in cost})
+    except Exception as e:
+        cost["error"] = str(e)
+    from .hlo_census import census
+    cen = census(compiled.as_text())
+
+    if accum_override:
+        steps_mod.accum_for = orig_accum
+    rec.update({
+        "variant": variant or "baseline",
+        "accum": accum_override or accum_for(cfg, plan),
+        "n_params": cfg.n_params, "n_params_active": cfg.n_params_active,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, "cost": cost,
+        "hlo_dot_flops": cen["dot_flops"],          # loop-aware, per device
+        "hlo_mem_bytes": cen["mem_bytes"],          # proxy (CPU fusion != TPU)
+        "collectives": cen["collectives"],          # loop-aware, per device
+    })
+    json.dump(rec, open(path, "w"), indent=1)
+    print(f"[ok] {tag} lower={t_lower:.0f}s compile={t_compile:.0f}s "
+          f"flops={cost.get('flops', 0):.3g}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--serve-tp", action="store_true")
+    ap.add_argument("--embed-d", action="store_true")
+    ap.add_argument("--fused-accum", action="store_true")
+    ap.add_argument("--accum", type=int, default=0)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--seq-cache", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(registry.ARCHS) if args.all or not args.arch \
+        else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp, args.out, force=args.force,
+                             serve_tp=args.serve_tp, embed_d=args.embed_d,
+                             fused_accum=args.fused_accum,
+                             accum_override=args.accum,
+                             variant=args.variant,
+                             seq_cache=args.seq_cache)
+                except Exception:
+                    failures.append((arch, shape, mp))
+                    traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

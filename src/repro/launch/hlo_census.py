@@ -1,0 +1,162 @@
+"""Loop-aware HLO census: exact per-device dot-FLOPs and collective bytes.
+
+XLA's ``cost_analysis()`` counts each ``while`` body once; our steps are
+scan-heavy (layer groups, grad accumulation, attention chunks), so raw
+numbers undercount by the trip product.  The post-SPMD HLO text annotates
+every while with ``backend_config={"known_trip_count":{"n":...}}`` and names
+its body computation -- so we recover exact totals by walking the call graph
+from ENTRY and multiplying by enclosing trip counts.
+
+Census per cell:
+  * dot FLOPs (2 * prod(out_dims) * contraction), per-device (post-SPMD
+    shapes are shard shapes);
+  * collective payload bytes by kind, with ring wire-cost multipliers
+    (all-reduce 2x, others 1x).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict
+
+import numpy as np
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "c64": 8, "c128": 16}
+WIRE = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+        "all-to-all": 1.0, "collective-permute": 1.0}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^=]*\)|"
+                     r"(?:f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                     r"pred|c64|c128|token)\[[0-9,]*\]\S*)\s+([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred)\[([0-9,]*)\]")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(r"body=%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_NO_MEM_OPS = {"get-tuple-element", "tuple", "bitcast", "constant",
+               "parameter", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_info(txt):
+    """dims + bytes of the first shape literal(s) in ``txt``."""
+    total_bytes = 0
+    first_dims = None
+    for m in _SHAPE_RE.finditer(txt):
+        dims = [int(x) for x in m.group(2).split(",") if x]
+        total_bytes += int(np.prod(dims)) * DTYPE_BYTES[m.group(1)]
+        if first_dims is None:
+            first_dims = dims
+    return first_dims, total_bytes
+
+
+class HloCensus:
+    def __init__(self, hlo_text: str):
+        self.defs: Dict[str, list] = {}     # op name -> dims
+        self.comps: Dict[str, dict] = {}
+        self.entry = None
+        self._parse(hlo_text)
+
+    def _parse(self, txt):
+        cur = None
+        for line in txt.splitlines():
+            h = _HDR_RE.match(line)
+            if h and not line.startswith(" "):
+                cur = h.group(2)
+                self.comps[cur] = {"colls": [], "whiles": [], "dots": [],
+                                   "calls": [], "mem_bytes": 0.0}
+                if h.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            c = self.comps[cur]
+            d = _DEF_RE.match(line)
+            if d:                       # non-tuple defs: shape map for dots
+                name, shape_txt, op = d.groups()
+                dims, _ = _shape_info(shape_txt)
+                self.defs[name] = dims
+                if op not in _NO_MEM_OPS:
+                    # loop-aware HBM-traffic proxy: output + operand bytes
+                    # (fusions are the natural memory-traffic units)
+                    _, obytes = _shape_info(shape_txt)
+                    a = line.find("(")
+                    ops_bytes = 0
+                    if a > 0:
+                        import re as _re
+                        for om in _re.finditer(r"%([\w\.\-]+)",
+                                               line[a:line.find(")", a) + 1]):
+                            od = self.defs.get(om.group(1))
+                            if od is not None:
+                                ops_bytes += int(np.prod(od or [1])) * 4
+                    c["mem_bytes"] += obytes + ops_bytes
+                if op == "dot":
+                    ops_m = _OPERANDS_RE.search(line[line.index("dot("):])
+                    lhs = ops_m.group(1).split(",")[0].strip().lstrip("%")
+                    lc = _LHS_C_RE.search(line)
+                    cdims = [int(x) for x in lc.group(1).split(",") if x] \
+                        if lc else []
+                    lhs_dims = self.defs.get(lhs) or []
+                    k = int(np.prod([lhs_dims[i] for i in cdims
+                                     if i < len(lhs_dims)])) if cdims else 1
+                    flops = 2.0 * float(np.prod(dims or [1])) * k
+                    c["dots"].append(flops)
+                    continue
+            if " while(" in line:
+                bm = _WHILE_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                if bm:
+                    c["whiles"].append(
+                        (bm.group(1), int(tm.group(1)) if tm else 1))
+                continue
+            cm = re.search(
+                r"=\s+((?:\([^;]*?\)|\S+))\s+"
+                r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                r"collective-permute)(?:-start)?\(", line)
+            if cm:
+                _, nbytes = _shape_info(cm.group(1))
+                c["colls"].append((cm.group(2), nbytes))
+                continue
+            if "calls=" in line:
+                for k2 in _CALLS_RE.finditer(line):
+                    c["calls"].append(k2.group(1))
+
+    def totals(self):
+        flops = 0.0
+        mem = 0.0
+        coll = {k: {"count": 0.0, "bytes": 0.0} for k in WIRE}
+        seen_stack = []
+
+        def walk(name, mult):
+            if name not in self.comps or name in seen_stack:
+                return
+            seen_stack.append(name)
+            c = self.comps[name]
+            nonlocal flops, mem
+            flops += mult * sum(c["dots"])
+            mem += mult * c["mem_bytes"]
+            for kind, nbytes in c["colls"]:
+                coll[kind]["count"] += mult
+                coll[kind]["bytes"] += mult * nbytes * WIRE[kind]
+            for body, trips in c["whiles"]:
+                walk(body, mult * trips)
+            for callee in c["calls"]:
+                walk(callee, mult)
+            seen_stack.pop()
+
+        walk(self.entry, 1.0)
+        return {"dot_flops": flops, "mem_bytes": mem, "collectives": coll}
+
+
+def census(hlo_text: str) -> dict:
+    return HloCensus(hlo_text).totals()
+
+
+if __name__ == "__main__":
+    import sys
+    print(json.dumps(census(open(sys.argv[1]).read()), indent=1))

@@ -1,0 +1,22 @@
+"""Production mesh builders (functions, never module-level constants, so
+importing this module never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """The batch / FSDP axes of a mesh ('pod' composes with 'data')."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_smoke_mesh():
+    """1-device mesh for CPU smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,77 @@
+"""Batched serving driver: prefill + decode with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import registry
+from ..models import model as M
+from . import sharding as SH
+from .steps import make_decode_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    assert not cfg.encoder_only, "encoder-only archs have no decode"
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+    SH.install_activation_sharder(mesh)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_model(cfg, key)
+    max_seq = args.prompt_len + args.gen
+    b = args.batch
+
+    toks = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab)
+    vis = None
+    batch = {"tokens": toks}
+    if cfg.frontend == "vision":
+        vis = jax.random.normal(key, (b, cfg.vision_seq, cfg.frontend_dim))
+        batch["vision"] = vis
+
+    # prefill: teacher-forced pass builds the caches at size prompt_len;
+    # decode caches are pre-sized to max_seq, so we re-init + write
+    caches = M.init_caches(cfg, b, max_seq)
+    t0 = time.time()
+    jdecode = jax.jit(make_decode_step(cfg))
+    cur = toks[:, 0]
+    out_toks = [cur]
+    # teacher-force the prompt, then free-run
+    for t in range(max_seq - 1):
+        step_batch = {"token": cur, "pos": jnp.int32(t)}
+        if vis is not None:
+            step_batch["vision"] = vis
+        nxt, logits, caches = jdecode(params, caches, step_batch)
+        cur = toks[:, t + 1] if t + 1 < args.prompt_len else nxt
+        out_toks.append(cur)
+    dt = time.time() - t0
+    gen = np.stack([np.asarray(t) for t in out_toks], axis=1)
+    print(f"generated {b}x{max_seq} tokens in {dt:.2f}s "
+          f"({b * max_seq / dt:.1f} tok/s incl. compile)")
+    print("sample row:", gen[0].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

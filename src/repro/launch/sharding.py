@@ -1,0 +1,204 @@
+"""Sharding rules: parameter FSDP x TP, batch DP, cache layouts.
+
+Conventions (DESIGN.md §5):
+  * ``model`` axis: tensor parallel -- attention heads / ffn hidden /
+    experts / vocab.
+  * ``data`` axis: batch + ZeRO-style full sharding of params & optimizer.
+  * ``pod`` axis: extra data parallelism (params replicated across pods,
+    gradients all-reduced over pod+data).
+Rules are name-based over the parameter tree; stacked group params get a
+leading replicated (scan) dimension automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+FSDP = "data"       # params are fully sharded over the in-pod data axis
+
+
+def _divisible(dim: int, mesh, axis) -> bool:
+    if axis is None:
+        return True
+    size = int(np.prod([mesh.shape[a] for a in
+                        (axis if isinstance(axis, tuple) else (axis,))]))
+    return dim % size == 0
+
+
+def _spec_for(path: str, shape, mesh, serve: bool = False,
+              embed_d: bool = True) -> P:
+    """TP/FSDP rule table, keyed on parameter path substrings.
+
+    ``serve``: inference shardings -- TP only, weights replicated over the
+    data axis (no per-token FSDP all-gathers; perf iteration A1).
+    ``embed_d``: shard the embedding on d_model over (data, model) instead
+    of vocab-sharding -- token gathers become device-local (iteration C3,
+    fixes XLA "involuntary full rematerialization" on the vocab gather).
+    """
+    fsdp = None if serve else FSDP
+
+    def pick(*axes):
+        # drop axes that don't divide; keep rank aligned with shape
+        out = []
+        for dim, ax in zip(shape, axes):
+            out.append(ax if _divisible(dim, mesh, ax) else None)
+        return P(*out)
+
+    if "embed" in path:
+        if embed_d:
+            return pick(None, (FSDP, "model") if not serve else "model")
+        return pick("model", fsdp)
+    if "lm_head" in path or "frontend" in path:
+        return pick(fsdp, "model")
+    if any(k in path for k in ("wq", "wk", "wv", "wg", "w_x", "w_gate",
+                               "wq_a", "wq_b", "wkv_a", "wkv_b", "w1", "w3",
+                               "ck", "cr", "wA", "w_in_gate", "w_rec_gate",
+                               "router")):
+        if len(shape) == 3:                       # MoE expert stacks [E,d,f]
+            return pick("model", fsdp, None)
+        if len(shape) == 2:
+            return pick(fsdp, "model")
+        return pick("model")                      # bias vectors
+    if any(k in path for k in ("wo", "w2", "w_out", "cv", "wB")):
+        if len(shape) == 3:
+            return pick("model", None, fsdp)
+        if len(shape) == 2:
+            return pick("model", fsdp)
+        return pick(fsdp)
+    if "conv" in path:
+        return pick(None, "model")
+    # norms, scalars, gates, mu, lam, u, w0 ...
+    return P(*([None] * len(shape)))
+
+
+def param_shardings(mesh, params_shape: Any, *, serve: bool = False,
+                    embed_d: bool = True):
+    """Tree of NamedSharding matching a params (shape) tree."""
+    def visit(path, leaf):
+        pathstr = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        stacked = "groups" in pathstr
+        if stacked:
+            spec = _spec_for(pathstr, shape[1:], mesh, serve, embed_d)
+            spec = P(None, *spec)
+        else:
+            spec = _spec_for(pathstr, shape, mesh, serve, embed_d)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, params_shape)
+
+
+def opt_shardings(mesh, opt_shape: Any, pshard):
+    """Optimizer state: m/v follow params; step replicated."""
+    def visit(path, leaf):
+        pathstr = jax.tree_util.keystr(path)
+        if leaf.ndim == 0 or "step" in pathstr:
+            return NamedSharding(mesh, P())
+        stacked = "groups" in pathstr
+        spec = _spec_for(pathstr, leaf.shape[1:] if stacked else leaf.shape,
+                         mesh)
+        if stacked:
+            spec = P(None, *spec)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, opt_shape)
+
+
+def batch_shardings(mesh, batch_shape: Any, *, accum: bool = False):
+    """Batch sharding over the DP axes.  With ``accum`` the leading dim is
+    the (unsharded) gradient-accumulation axis and the batch dim is dim 1."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def visit(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        bdim = 1 if (accum and leaf.ndim >= 2) else 0
+        dims = [None] * leaf.ndim
+        if leaf.shape[bdim] % dp_size == 0:
+            dims[bdim] = dp
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(visit, batch_shape)
+
+
+def cache_shardings(mesh, cache_shape: Any, *, batch: int,
+                    seq_shard: bool = False):
+    """KV/state caches: batch over DP when divisible, plus one dim over
+    'model'.
+
+    ``seq_shard`` (perf iteration A2): prefer the *sequence* dim (dim 1)
+    for the model axis -- flash-decoding-style distributed attention where
+    score partials are exchanged (MBs) instead of the cache being
+    all-gathered (GBs).  Default/baseline: last divisible dim (head_dim /
+    lora)."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    msize = mesh.shape["model"]
+
+    def visit(path, leaf):
+        pathstr = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        stacked = "groups" in pathstr
+        core = shape[1:] if stacked else shape
+        dims = [None] * len(core)
+        if core and core[0] % dp_size == 0 and batch % dp_size == 0:
+            dims[0] = dp
+        cands = ([1] + list(reversed(range(2, len(core))))) if seq_shard             else list(reversed(range(1, len(core))))
+        for cand in cands:
+            if cand < len(core) and core[cand] % msize == 0:
+                dims[cand] = "model"
+                break
+        spec = P(*([None] + dims if stacked else dims))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shape)
+
+
+def install_activation_sharder(mesh):
+    """Hook the model's with_sharding_constraint points to this mesh."""
+    from ..models import layers as L
+    from ..models import model as M
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    L.set_moe_groups(dp_size)
+
+    def sharder(tag, x):
+        if tag == "moe_eo":
+            dims = [None] * x.ndim
+            if x.shape[0] % dp_size == 0:
+                dims[0] = dp
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*dims)))
+        if tag == "moe_w":
+            # experts stay EP-sharded on 'model'; FSDP axis gathered
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P("model", None, None)))
+        if tag == "moe_buf":
+            dims = [None] * x.ndim
+            if x.shape[0] % dp_size == 0:
+                dims[0] = dp
+            if x.shape[1] % mesh.shape["model"] == 0:
+                dims[1] = "model"
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*dims)))
+        if tag == "act" and x.shape[0] % int(
+                np.prod([mesh.shape[a] for a in dp])) == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1)))))
+        if tag == "logits" and x.shape[-1] % mesh.shape["model"] == 0:
+            dims = [None] * x.ndim
+            if x.shape[0] % int(np.prod([mesh.shape[a] for a in dp])) == 0:
+                dims[0] = dp
+            dims[-1] = "model"
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*dims)))
+        return x
+
+    M.set_activation_sharder(sharder)

@@ -1,0 +1,174 @@
+"""Step builders + (architecture x input-shape) cell definitions.
+
+The assigned LM shape grid:
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> prefill (logits + caches)
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288, global_batch 1     -> serve_step; sub-quadratic
+                                                 archs only
+
+Skips (recorded, per assignment): long_500k for full-attention archs;
+decode shapes for encoder-only archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapePlan:
+    name: str
+    kind: str            # train / prefill / decode
+    seq: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapePlan("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapePlan("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapePlan("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapePlan("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapePlan) -> Optional[str]:
+    if cfg.encoder_only and shape.kind == "decode":
+        return "encoder-only: no autoregressive step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "full attention is quadratic at 500k ctx (DESIGN.md)"
+    return None
+
+
+def accum_for(cfg: ModelConfig, shape: ShapePlan) -> int:
+    """Gradient-accumulation depth: keep the dispatched/activation working
+    set of a microbatch inside HBM (MoE dispatch inflates by top_k)."""
+    if shape.kind != "train":
+        return 1
+    if cfg.moe is not None or cfg.n_layers >= 90 or cfg.d_model >= 8192:
+        return 16
+    if cfg.n_params > 2e10:
+        return 8
+    return 4
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapePlan) -> Dict:
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        a = accum_for(cfg, shape)
+        mb = shape.global_batch // a
+        assert mb >= 1, (cfg.name, shape.name)
+        out = {}
+        if cfg.frontend == "audio":
+            out["frames"] = sd((a, mb, shape.seq, cfg.frontend_dim),
+                               jnp.float32)
+        else:
+            out["tokens"] = sd((a, mb, shape.seq), jnp.int32)
+        out["labels"] = sd((a, mb, shape.seq), jnp.int32)
+        if cfg.frontend == "vision":
+            out["vision"] = sd((a, mb, cfg.vision_seq, cfg.frontend_dim),
+                               jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        b = shape.global_batch
+        out = {}
+        if cfg.frontend == "audio":
+            out["frames"] = sd((b, shape.seq, cfg.frontend_dim), jnp.float32)
+        else:
+            out["tokens"] = sd((b, shape.seq), jnp.int32)
+        if cfg.frontend == "vision":
+            out["vision"] = sd((b, cfg.vision_seq, cfg.frontend_dim),
+                               jnp.float32)
+        return out
+    # decode
+    out = {"token": sd((shape.global_batch,), jnp.int32),
+           "pos": sd((), jnp.int32)}
+    if cfg.frontend == "vision":
+        out["vision"] = sd((shape.global_batch, cfg.vision_seq,
+                            cfg.frontend_dim), jnp.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapePlan) -> Dict:
+    """All abstract inputs for the cell: batch + params (+opt/caches)."""
+    params = jax.eval_shape(
+        lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+    specs = {"params": params, "batch": batch_specs(cfg, shape)}
+    if shape.kind == "train":
+        specs["opt"] = jax.eval_shape(lambda: adamw.init(params))
+    if shape.kind == "decode":
+        specs["caches"] = jax.eval_shape(
+            lambda: M.init_caches(cfg, shape.global_batch, shape.seq))
+    return specs
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, accum: int,
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    acc_dtype=jnp.float32, fused_accum: bool = False):
+    """Gradient-accumulated train step.
+
+    ``fused_accum`` (perf iteration C1): microbatch accumulation happens
+    *inside* autodiff -- grad of a scan over microbatches -- so the gradient
+    reduce-to-sharded-layout collective fires once per step instead of once
+    per microbatch (accum-x less gradient all-reduce traffic).
+    """
+    def train_step(params, opt_state, batch):
+        if fused_accum:
+            def total_loss(p):
+                def body(c, mb):
+                    return c + M.loss_fn(cfg, p, mb)[0], None
+                s, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), batch)
+                return s / accum
+            loss, gacc = jax.value_and_grad(total_loss)(params)
+            losses = loss[None]
+        else:
+            def micro(gacc, mb):
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: M.loss_fn(cfg, p, mb), has_aux=True)(params)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), gacc, grads)
+                return gacc, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            gacc, losses = jax.lax.scan(micro, zeros, batch)
+            gacc = jax.tree.map(lambda g: g / accum, gacc)
+        new_p, new_opt, om = adamw.update(opt_cfg, gacc, opt_state, params)
+        return new_p, new_opt, {"loss": losses.mean(), **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, caches, batch):
+        logits, new_caches = M.decode_step(
+            cfg, params, caches, batch["token"], batch["pos"],
+            vision=batch.get("vision"))
+        # greedy next token (sampling is host-side policy)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_caches
+    return serve_step

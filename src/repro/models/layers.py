@@ -1,0 +1,549 @@
+"""Pure-JAX layer library for the assigned architecture families.
+
+Functional style: ``init_*`` builds parameter pytrees (nested dicts of
+jnp arrays), ``apply_*`` are pure functions.  Everything is scan-friendly
+(shape-static) and sharding-annotation free -- sharding is applied by the
+launcher via in/out shardings + a few with_sharding_constraint hooks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+ATTN_CHUNK = 512          # query-chunked attention threshold / block
+
+# activation-sharding hook installed by the launcher: (tag, array) -> array
+_SHARDER = lambda tag, x: x
+
+
+def set_activation_sharder(fn) -> None:
+    global _SHARDER
+    _SHARDER = fn
+
+
+def _shard(tag, x):
+    return _SHARDER(tag, x)
+
+
+def _dense_init(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale
+            ).astype(jnp.bfloat16)
+
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rotary(x, pos, theta, rot_dim=None):
+    """x: [..., S, H, hd]; pos: [..., S] int32."""
+    hd = x.shape[-1]
+    rd = rot_dim or hd
+    freqs = 1.0 / (theta ** (np.arange(0, rd, 2, dtype=np.float32) / rd))
+    ang = pos[..., None].astype(jnp.float32) * freqs        # [..., S, rd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    xr, rest = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., : rd // 2], xr[..., rd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([out.astype(x.dtype), rest], -1)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": _dense_init(ks[0], (d, cfg.n_heads * hd)),
+        "wk": _dense_init(ks[1], (d, cfg.n_kv_heads * hd)),
+        "wv": _dense_init(ks[2], (d, cfg.n_kv_heads * hd)),
+        "wo": _dense_init(ks[3], (cfg.n_heads * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.bfloat16)
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.zeros((hd,), jnp.float32)
+        p["knorm"] = jnp.zeros((hd,), jnp.float32)
+    if cross:
+        p["gate"] = jnp.zeros((), jnp.float32)   # zero-init cross-attn gate
+    return p
+
+
+def _group_attn(q, k, v, mask):
+    """Grouped-query attention core (no KV-head replication).
+    q: [B,Sq,H,hd]; k,v: [B,Sk,K,hd]; mask broadcastable to [B,Sq,Sk]."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (1.0 / np.sqrt(hd))
+    s = jnp.where(mask[:, :, None, None, :], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", a.astype(v.dtype), v)
+    return o.reshape(b, sq, h, v.shape[-1])   # v head dim may differ (MLA)
+
+
+def _sdpa(q, k, v, *, causal, window, q_offset=0):
+    """Query-chunked attention: bounds the [chunk, Sk] score tile (the
+    flash-style memory fix expressed in pure JAX; XLA fuses the softmax)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kpos = jnp.arange(sk)
+
+    def attend(qc, qpos):
+        m = jnp.ones((qc.shape[1], sk), bool)
+        if causal:
+            m &= kpos[None, :] <= qpos[:, None]
+        if window:
+            m &= kpos[None, :] > qpos[:, None] - window
+        return _group_attn(qc, k, v, m[None])
+
+    if sq <= ATTN_CHUNK:
+        return attend(q, jnp.arange(sq) + q_offset)
+    nc = sq // ATTN_CHUNK
+    qs = q.reshape(b, nc, ATTN_CHUNK, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        qpos = i * ATTN_CHUNK + jnp.arange(ATTN_CHUNK) + q_offset
+        return None, attend(qc, qpos)
+
+    _, out = jax.lax.scan(body, None, (qs, jnp.arange(nc)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, -1)  # -1: MLA vhd
+
+
+def apply_attention(cfg: ModelConfig, p: Params, x, *, pos, kind: str,
+                    cache=None, cross_kv=None):
+    """kind: attn | local | cross.  Returns (out, new_cache)."""
+    b, s, d = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"] + (p.get("bq", 0))
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    if kind == "cross":
+        k, v = cross_kv
+    else:
+        k = (x @ p["wk"] + p.get("bk", 0)).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (x @ p["wv"] + p.get("bv", 0)).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"], cfg.norm_eps)
+        if kind != "cross":
+            k = rms_norm(k, p["knorm"], cfg.norm_eps)
+    if kind != "cross":
+        q = rotary(q, pos, cfg.rope_theta)
+        k = rotary(k, pos, cfg.rope_theta)
+
+    new_cache = None
+    if isinstance(cache, dict) and kind != "cross":  # decode: append + read
+        if kind == "local":
+            w = cfg.window
+            i = pos[0, 0] % w                       # ring-buffer slot
+            ck = cache["k"].at[:, i].set(k[:, 0])
+            cv = cache["v"].at[:, i].set(v[:, 0])
+            kpos = cache["pos"].at[:, i].set(pos[:, 0])
+            new_cache = {"k": ck, "v": cv, "pos": kpos}
+            k, v = ck, cv
+            valid = (kpos <= pos[:, :1]) & (kpos > pos[:, :1] - w)
+        else:
+            i = pos[0, 0]
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, i, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, i, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+            valid = (jnp.arange(k.shape[1])[None] <= i) & \
+                jnp.ones((b, 1), bool)
+        out = _group_attn(q, k, v, valid[:, None, :])
+    else:
+        causal = not cfg.encoder_only and kind != "cross"
+        out = _sdpa(q, k, v, causal=causal,
+                    window=cfg.window if kind == "local" else 0)
+        if cache == "collect":                  # prefill: emit decode cache
+            if kind == "local":
+                w = cfg.window
+                n = min(s, w)
+                pp = jnp.arange(s - n, s)
+                slots = pp % w
+                ring = lambda z: jnp.zeros(
+                    (b, w) + z.shape[2:], z.dtype).at[:, slots].set(z[:, -n:])
+                posbuf = jnp.full((w,), -10 ** 9, jnp.int32
+                                  ).at[slots].set(pp.astype(jnp.int32))
+                new_cache = {"k": ring(k), "v": ring(v),
+                             "pos": jnp.broadcast_to(posbuf[None], (b, w))}
+            elif kind == "cross":
+                new_cache = {}
+            else:
+                new_cache = {"k": k, "v": v}
+        elif isinstance(cache, dict) and kind == "cross":
+            new_cache = {}
+    out = out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+    if kind == "cross":
+        out = out * jnp.tanh(p["gate"]).astype(out.dtype)
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# --------------------------------------------------------------------------
+
+def init_mla(cfg: ModelConfig, key) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qdim = h * (m.nope_head_dim + m.rope_head_dim)
+    return {
+        "wq_a": _dense_init(ks[0], (d, m.q_lora)),
+        "q_norm": jnp.zeros((m.q_lora,), jnp.float32),
+        "wq_b": _dense_init(ks[1], (m.q_lora, qdim)),
+        "wkv_a": _dense_init(ks[2], (d, m.kv_lora + m.rope_head_dim)),
+        "kv_norm": jnp.zeros((m.kv_lora,), jnp.float32),
+        "wkv_b": _dense_init(
+            ks[3], (m.kv_lora, h * (m.nope_head_dim + m.v_head_dim))),
+        "wo": _dense_init(ks[4], (h * m.v_head_dim, d)),
+    }
+
+
+def apply_mla(cfg: ModelConfig, p: Params, x, *, pos, cache=None):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nhd, rhd, vhd = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+
+    q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, s, h, nhd + rhd)
+    q_nope, q_rope = q[..., :nhd], q[..., nhd:]
+    q_rope = rotary(q_rope, pos, cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]
+    c_kv = rms_norm(kv[..., : m.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = rotary(kv[..., m.kv_lora:][:, :, None, :], pos, cfg.rope_theta)
+
+    wkv_b = p["wkv_b"].reshape(m.kv_lora, h, nhd + vhd)
+    scale = 1.0 / np.sqrt(nhd + rhd)
+
+    if isinstance(cache, dict):
+        i = pos[0, 0]
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_kv, i, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["r"], k_rope[:, :, 0], i, axis=1)
+        new_cache = {"c": cc, "r": cr}
+        # absorbed decode: score via the latent space (the MLA cache win)
+        q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                           wkv_b[..., :nhd].astype(jnp.float32))
+        sc = jnp.einsum("bqhl,bkl->bhqk", q_abs, cc.astype(jnp.float32))
+        sc += jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
+                         cr.astype(jnp.float32))
+        sc = sc * scale
+        valid = jnp.arange(cc.shape[1])[None] <= i
+        sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+        a = jax.nn.softmax(sc, axis=-1)
+        o_lat = jnp.einsum("bhqk,bkl->bqhl", a, cc.astype(jnp.float32))
+        out = jnp.einsum("bqhl,lhv->bqhv", o_lat,
+                         wkv_b[..., nhd:].astype(jnp.float32))
+        out = out.astype(x.dtype)
+    else:
+        new_cache = {"c": c_kv, "r": k_rope[:, :, 0]} if cache == "collect" \
+            else None
+        kvu = jnp.einsum("bkl,lhx->bkhx", c_kv, wkv_b)
+        k_nope, v = kvu[..., :nhd], kvu[..., nhd:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, rhd))], -1)
+        qf = jnp.concatenate([q_nope, q_rope], -1)
+        out = _sdpa(qf, k, v, causal=True, window=0)
+    out = out.reshape(b, s, h * vhd) @ p["wo"]
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# feed-forward / MoE
+# --------------------------------------------------------------------------
+
+def init_ffn(key, d, ff) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"w1": _dense_init(ks[0], (d, ff)),
+            "w3": _dense_init(ks[1], (d, ff)),
+            "w2": _dense_init(ks[2], (ff, d))}
+
+
+def apply_ffn(p: Params, x):
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, m.n_experts)).astype(jnp.float32),
+        "w1": _dense_init(ks[1], (m.n_experts, d, m.d_expert)),
+        "w3": _dense_init(ks[2], (m.n_experts, d, m.d_expert)),
+        "w2": _dense_init(ks[3], (m.n_experts, m.d_expert, d)),
+    }
+    if m.n_shared:
+        p["shared"] = init_ffn(ks[4], d, m.n_shared * m.d_expert)
+    return p
+
+
+# dispatch groups: set by the launcher to the DP shard count so the
+# per-group sort/scatter is device-local (no cross-shard gathers)
+_MOE_GROUPS = 1
+
+
+def set_moe_groups(n: int) -> None:
+    global _MOE_GROUPS
+    _MOE_GROUPS = max(1, int(n))
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x) -> Tuple[jnp.ndarray,
+                                                       jnp.ndarray]:
+    """Grouped sort-based capacity MoE (drop on overflow).
+
+    Tokens are split into G groups (G == DP shards): the argsort /
+    position-cumsum / scatter are group-local, so under batch sharding the
+    dispatch never leaves the device; only the expert einsums touch the
+    'model'-sharded expert weights.  Returns (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    g = _MOE_GROUPS if t % _MOE_GROUPS == 0 else 1
+    tg = t // g
+    xf = x.reshape(g, tg, d)
+    logits = xf.astype(jnp.float32) @ p["router"]            # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, m.top_k)                   # [G,Tg,k]
+    w = w / (w.sum(-1, keepdims=True) + 1e-9)
+    cap = int(np.ceil(tg * m.top_k / m.n_experts * m.capacity_factor))
+
+    def dispatch(xg, idxg, wg):
+        e_flat = idxg.reshape(-1)                            # [Tg*k]
+        src = jnp.repeat(jnp.arange(tg), m.top_k)
+        perm = jnp.argsort(e_flat)
+        se, ss = e_flat[perm], src[perm]
+        counts = jnp.bincount(e_flat, length=m.n_experts)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(tg * m.top_k) - starts[se]
+        keep = pos < cap
+        pos = jnp.where(keep, pos, cap - 1)
+        buf = jnp.zeros((m.n_experts, cap, d), x.dtype)
+        buf = buf.at[se, pos].set(
+            jnp.where(keep[:, None], xg[ss], jnp.zeros((), x.dtype)))
+        return buf, (se, ss, pos, keep, wg.reshape(-1)[perm], counts)
+
+    buf, (se, ss, pos, keep, wp, counts) = jax.vmap(dispatch)(xf, idx, w)
+    buf = _shard("moe_buf", buf)
+    # ZeRO-3 style: gather the (small) FSDP-sharded expert weights at use
+    # instead of letting XLA psum the (large) expert activations (perf C2)
+    w1 = _shard("moe_w", p["w1"])
+    w3 = _shard("moe_w", p["w3"])
+    w2 = _shard("moe_w", p["w2"])
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, w1)) * \
+        jnp.einsum("gecd,edf->gecf", buf, w3)
+    eo = jnp.einsum("gecf,efd->gecd", h, w2)
+    # replicate expert outputs across the EP axis once (one all-gather of
+    # [E,C,d]) so the token-indexed combine gather is shard-local -- beats
+    # XLA's masked all-reduce per gather (perf C4)
+    eo = _shard("moe_eo", eo)
+
+    def combine(eog, se1, ss1, pos1, keep1, wp1):
+        # bf16 end-to-end: the [tg*topk, d] gather payload crosses the EP
+        # shards; keeping it bf16 halves the combine collective (perf C3)
+        w16 = jnp.where(keep1, wp1, 0).astype(x.dtype)
+        out = eog[se1, pos1] * w16[:, None]
+        return jnp.zeros((tg, d), x.dtype).at[ss1].add(out)
+
+    y = jax.vmap(combine)(eo, se, ss, pos, keep, wp)
+
+    # load-balance aux loss (Switch-style), computed globally
+    frac = counts.sum(0).astype(jnp.float32) / (t * m.top_k)
+    imp = probs.mean((0, 1))
+    aux = (frac * imp).sum() * m.n_experts
+
+    y = y.reshape(b, s, d)
+    if m.n_shared:
+        y = y + apply_ffn(p["shared"], x)
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# --------------------------------------------------------------------------
+
+def init_rglru(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    dr = cfg.d_rnn or d
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": _dense_init(ks[0], (d, dr)),
+        "w_gate": _dense_init(ks[1], (d, dr)),
+        "conv": (jax.random.normal(ks[2], (4, dr)) * 0.1).astype(jnp.bfloat16),
+        "w_in_gate": _dense_init(ks[3], (dr, dr), scale=0.01),
+        "w_rec_gate": _dense_init(ks[4], (dr, dr), scale=0.01),
+        "lam": jnp.full((dr,), 3.0, jnp.float32),   # a = sigmoid(lam)^(8 r)
+        "w_out": _dense_init(ks[5], (dr, d)),
+    }
+
+
+def apply_rglru(cfg: ModelConfig, p: Params, x, *, cache=None):
+    """Griffin recurrent block: conv1d(4) + RG-LRU, gated."""
+    b, s, _ = x.shape
+    u = x @ p["w_x"]                                   # [B,S,dr]
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32))
+    # causal depthwise conv width 4
+    if isinstance(cache, dict):
+        hist = jnp.concatenate([cache["conv"], u], axis=1)   # [B,3+S,dr]
+        new_conv = hist[:, -3:]
+    else:
+        hist = jnp.pad(u, ((0, 0), (3, 0), (0, 0)))
+        new_conv = hist[:, -3:]
+    u = sum(hist[:, i: i + s] * p["conv"][i] for i in range(4))
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_rec_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_in_gate"].astype(jnp.float32))
+    log_a = -8.0 * r * jax.nn.softplus(-p["lam"])      # log sigmoid(lam)^(8r)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * uf)
+
+    if isinstance(cache, dict):                        # single-step decode
+        h0 = cache["h"]
+        h = a[:, 0] * h0 + gated[:, 0]
+        hs = h[:, None]
+        new_cache = {"h": h, "conv": new_conv}
+    else:
+        def comb(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        aa, hs = jax.lax.associative_scan(comb, (a, gated), axis=1)
+        new_cache = {"h": hs[:, -1], "conv": new_conv} \
+            if cache == "collect" else None
+    out = (hs * gate).astype(x.dtype) @ p["w_out"]
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# RWKV6 (Finch): time mix with data-dependent decay + channel mix
+# --------------------------------------------------------------------------
+
+WKV_CHUNK = 64
+
+
+def init_rwkv(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    lora = 64
+    return {
+        "mu": (jnp.full((5, d), 0.5, jnp.float32)),     # r,k,v,w,g mixes
+        "wr": _dense_init(ks[0], (d, d)),
+        "wk": _dense_init(ks[1], (d, d)),
+        "wv": _dense_init(ks[2], (d, d)),
+        "wg": _dense_init(ks[3], (d, d)),
+        "w0": jnp.full((d,), -5.0, jnp.float32),
+        "wA": _dense_init(ks[4], (d, lora), scale=0.01).astype(jnp.float32),
+        "wB": _dense_init(ks[5], (lora, d), scale=0.01).astype(jnp.float32),
+        "u": (jax.random.normal(ks[6], (d,)) * 0.1).astype(jnp.float32),
+        "wo": _dense_init(ks[7], (d, d)),
+        "mu_c": jnp.full((2, d), 0.5, jnp.float32),     # channel-mix mixes
+        "ck": _dense_init(ks[8], (d, cfg.d_ff)),
+        "cv": _dense_init(ks[9], (cfg.d_ff, d)),
+        "cr": _dense_init(jax.random.split(ks[8])[0], (d, d)),
+    }
+
+
+def _wkv_chunked(r, k, v, w, u, s0):
+    """Chunked WKV6 scan.  r,k,v: [B,H,T,hd]; w (decay in (0,1)): same;
+    u: [H,hd]; s0: [B,H,hd,hd] initial state.  Returns (y, sT)."""
+    b, h, t, hd = r.shape
+    c = min(WKV_CHUNK, t)
+    nc = t // c
+    rs, ks_, vs, ws = (z.reshape(b, h, nc, c, hd).transpose(2, 0, 1, 3, 4)
+                       for z in (r, k, v, w))
+    lw = jnp.log(ws)                                   # [nc,B,H,C,hd] (<0)
+    L = jnp.cumsum(lw, axis=3)                         # inclusive
+
+    def step(s, inp):
+        rc, kc, vc, lwc, Lc = inp                      # [B,H,C,hd]
+        # cross-chunk: y_t += (r_t * P_{t-1}) @ s, P_{t-1} = exp(L_{t-1})
+        Pprev = jnp.exp(Lc - lwc)                      # exp(L_{t-1})
+        y = jnp.einsum("bhcd,bhde->bhce", rc * Pprev, s)
+        # intra-chunk: A[t,tau] = sum_d r_t[d] k_tau[d] exp(L_{t-1}-L_tau)
+        ratio = jnp.exp((Lc - lwc)[:, :, :, None, :] - Lc[:, :, None, :, :])
+        am = jnp.tril(jnp.ones((c, c)), -1)[None, None, :, :, None]
+        A = ((rc[:, :, :, None, :] * kc[:, :, None, :, :]) * ratio * am
+             ).sum(-1)
+        y += jnp.einsum("bhct,bhte->bhce", A, vc)
+        # current-token bonus: y_t += (r_t . u . k_t) v_t
+        y += (rc * u[None, :, None, :] * kc).sum(-1, keepdims=True) * vc
+        # state update: s' = diag(exp(L_C)) s + sum_tau exp(L_C - L_tau) k v^T
+        decay_all = jnp.exp(Lc[:, :, -1, :])            # [B,H,hd]
+        kw = kc * jnp.exp(Lc[:, :, -1:, :] - Lc)
+        s_new = decay_all[:, :, :, None] * s + \
+            jnp.einsum("bhcd,bhce->bhde", kw, vc)
+        return s_new, y
+
+    sT, ys = jax.lax.scan(step, s0, (rs, ks_, vs, lw, L))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, t, hd)
+    return y, sT
+
+
+def apply_rwkv_timemix(cfg: ModelConfig, p: Params, x, *, cache=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    if isinstance(cache, dict):
+        xprev = jnp.concatenate([cache["xa"][:, None], x[:, :-1]], 1)
+    else:
+        xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    mixes = [x + (xprev - x) * p["mu"][i].astype(x.dtype) for i in range(5)]
+    r = (mixes[0] @ p["wr"]).reshape(b, s, h, hd)
+    k = (mixes[1] @ p["wk"]).reshape(b, s, h, hd)
+    v = (mixes[2] @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(mixes[4] @ p["wg"])
+    wlog = p["w0"] + jnp.tanh(mixes[3].astype(jnp.float32) @ p["wA"]) @ p["wB"]
+    w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, h, hd)   # decay in (0,1)
+
+    tb = lambda z: z.transpose(0, 2, 1, 3)             # [B,H,S,hd]
+    rf, kf, vf = (tb(z).astype(jnp.float32) for z in (r, k, v))
+    wf = tb(w)
+    u = p["u"].reshape(h, hd)
+    s0 = cache["s"] if isinstance(cache, dict) else \
+        jnp.zeros((b, h, hd, hd), jnp.float32)
+    if s == 1 and isinstance(cache, dict):              # decode fast path
+        y = ((rf * u[None, :, None]) * kf).sum(-1, keepdims=True) * vf + \
+            jnp.einsum("bhcd,bhde->bhce", rf, s0)
+        sT = wf[:, :, 0, :, None] * s0 + \
+            jnp.einsum("bhd,bhe->bhde", kf[:, :, 0], vf[:, :, 0])
+    else:
+        y, sT = _wkv_chunked(rf, kf, vf, wf, u, s0)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    new_cache = {"s": sT, "xa": x[:, -1]} if cache is not None else None
+    return out, new_cache
+
+
+def apply_rwkv_channelmix(cfg, p, x, *, cache=None):
+    if isinstance(cache, dict):
+        xprev = jnp.concatenate([cache["xc"][:, None], x[:, :-1]], 1)
+    else:
+        xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    mk = x + (xprev - x) * p["mu_c"][0].astype(x.dtype)
+    mr = x + (xprev - x) * p["mu_c"][1].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(mk @ p["ck"]))
+    out = jax.nn.sigmoid(mr @ p["cr"]).astype(x.dtype) * (kk @ p["cv"])
+    new_cache = {"xc": x[:, -1]} if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,300 @@
+"""Model assembly: parameter init, forward (train/prefill), decode step.
+
+Layers are organized as ``prefix`` (non-repeated, e.g. deepseek-v2's dense
+first layer) plus ``n_groups`` repetitions of ``cfg.group``; the repeated
+groups are *stacked* pytrees driven by ``jax.lax.scan`` so the HLO stays
+O(group) rather than O(n_layers) -- essential for compiling 94-layer models
+on the 512-device dry-run mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import ModelConfig
+
+set_activation_sharder = L.set_activation_sharder
+_shard = L._shard
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_layer(cfg: ModelConfig, kind: str, key) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), jnp.float32),
+                         "ln2": jnp.zeros((d,), jnp.float32)}
+    if kind in ("attn", "local", "cross"):
+        if cfg.mla is not None and kind == "attn":
+            p["attn"] = L.init_mla(cfg, k1)
+        else:
+            p["attn"] = L.init_attention(cfg, k1, cross=(kind == "cross"))
+        p["ffn"] = L.init_ffn(k2, d, cfg.d_ff)
+    elif kind == "moe":
+        p["attn"] = (L.init_mla(cfg, k1) if cfg.mla is not None
+                     else L.init_attention(cfg, k1))
+        p["moe"] = L.init_moe(cfg, k2)
+    elif kind == "moe_dense":
+        p["attn"] = (L.init_mla(cfg, k1) if cfg.mla is not None
+                     else L.init_attention(cfg, k1))
+        p["ffn"] = L.init_ffn(k2, d, cfg.moe.d_ff_dense)
+    elif kind == "recurrent":
+        p["rnn"] = L.init_rglru(cfg, k1)
+        p["ffn"] = L.init_ffn(k2, d, cfg.d_ff)
+    elif kind == "rwkv":
+        p["tmix"] = L.init_rwkv(cfg, k1)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_model(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, d)) * 0.02
+                  ).astype(jnp.bfloat16),
+        "norm_f": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(keys[1], (d, cfg.vocab))
+    if cfg.frontend != "none":
+        params["frontend"] = L._dense_init(keys[2], (cfg.frontend_dim, d))
+    params["prefix"] = [
+        init_layer(cfg, kind, k)
+        for kind, k in zip(cfg.prefix,
+                           jax.random.split(keys[3], max(1, len(cfg.prefix))))
+    ]
+    gkeys = jax.random.split(keys[4], cfg.n_groups)
+    params["groups"] = jax.vmap(
+        lambda k: [init_layer(cfg, kind, kk)
+                   for kind, kk in zip(cfg.group,
+                                       jax.random.split(k, len(cfg.group)))]
+    )(gkeys)
+    return params
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+
+def apply_layer(cfg: ModelConfig, kind: str, p, x, *, pos, cache=None,
+                cross_kv=None):
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        h, tc = L.apply_rwkv_timemix(
+            cfg, p["tmix"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+            cache=None if cache is None else cache)
+        x = x + h
+        h, cc = L.apply_rwkv_channelmix(
+            cfg, p["tmix"], L.rms_norm(x, p["ln2"], cfg.norm_eps),
+            cache=None if cache is None else cache)
+        x = x + h
+        new_cache = None if cache is None else {**tc, **cc}
+        return x, new_cache, aux
+
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "recurrent":
+        h, new_cache = L.apply_rglru(cfg, p["rnn"], h, cache=cache)
+    elif cfg.mla is not None and kind in ("attn", "moe", "moe_dense"):
+        h, new_cache = L.apply_mla(cfg, p["attn"], h, pos=pos, cache=cache)
+    else:
+        akind = {"moe": "attn", "moe_dense": "attn"}.get(kind, kind)
+        h, new_cache = L.apply_attention(cfg, p["attn"], h, pos=pos,
+                                         kind=akind, cache=cache,
+                                         cross_kv=cross_kv)
+    x = x + h
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        h, aux = L.apply_moe(cfg, p["moe"], h)
+    else:
+        h = L.apply_ffn(p["ffn"], h)
+    x = x + h
+    return x, new_cache, aux
+
+
+def _cross_kv(cfg: ModelConfig, p_attn, xv):
+    b, sv, _ = xv.shape
+    k = (xv @ p_attn["wk"]).reshape(b, sv, cfg.n_kv_heads, cfg.hd)
+    v = (xv @ p_attn["wv"]).reshape(b, sv, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray], *,
+            remat: bool = True):
+    """Returns (logits, aux_loss_mean).  batch keys: tokens [B,S] (or
+    frames [B,S,Df] for audio), optional vision [B,Sv,Df]."""
+    if cfg.frontend == "audio":
+        x = batch["frames"].astype(jnp.bfloat16) @ params["frontend"]
+    else:
+        x = params["embed"][batch["tokens"]]
+    x = _shard("act", x)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    xv = None
+    if cfg.frontend == "vision":
+        xv = batch["vision"].astype(jnp.bfloat16) @ params["frontend"]
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for kind, p in zip(cfg.prefix, params["prefix"]):
+        x, _, aux = apply_layer(cfg, kind, p, x, pos=pos)
+        aux_total += aux
+
+    def group_body(x, gp):
+        ax = jnp.zeros((), jnp.float32)
+        for kind, p in zip(cfg.group, gp):
+            ckv = _cross_kv(cfg, p["attn"], xv) if kind == "cross" else None
+            x, _, aux = apply_layer(cfg, kind, p, x, pos=pos, cross_kv=ckv)
+            ax += aux
+        return _shard("act", x), ax
+
+    body = jax.checkpoint(group_body,
+                          policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else group_body
+    x, auxs = jax.lax.scan(body, x, params["groups"])
+    aux_total += auxs.sum()
+
+    x = L.rms_norm(x, params["norm_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = _shard("logits", x @ head)
+    return logits, aux_total / max(cfg.n_layers, 1)
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray]):
+    """Inference prefill: full-sequence forward that also emits the decode
+    caches (the realistic prefill workload: attention FLOPs + cache
+    writes), returning last-position logits + caches."""
+    if cfg.frontend == "audio":
+        x = batch["frames"].astype(jnp.bfloat16) @ params["frontend"]
+    else:
+        x = params["embed"][batch["tokens"]]
+    x = _shard("act", x)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    xv = None
+    if cfg.frontend == "vision":
+        xv = batch["vision"].astype(jnp.bfloat16) @ params["frontend"]
+
+    new_prefix = []
+    for kind, p in zip(cfg.prefix, params["prefix"]):
+        x, nc, _ = apply_layer(cfg, kind, p, x, pos=pos, cache="collect")
+        new_prefix.append(nc)
+
+    def group_body(x, gp):
+        ncs = []
+        for kind, p in zip(cfg.group, gp):
+            ckv = _cross_kv(cfg, p["attn"], xv) if kind == "cross" else None
+            x, nc, _ = apply_layer(cfg, kind, p, x, pos=pos, cache="collect",
+                                   cross_kv=ckv)
+            ncs.append(nc)
+        return _shard("act", x), ncs
+
+    x, group_caches = jax.lax.scan(group_body, x, params["groups"])
+    x = L.rms_norm(x[:, -1:], params["norm_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = _shard("logits", x @ head)[:, 0]
+    return logits, {"prefix": new_prefix, "groups": group_caches}
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat: bool = True):
+    logits, aux = forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = ((logz - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    hd, kv = cfg.hd, cfg.n_kv_heads
+    if kind in ("attn", "moe", "moe_dense"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"c": jnp.zeros((batch, max_seq, m.kv_lora), jnp.bfloat16),
+                    "r": jnp.zeros((batch, max_seq, m.rope_head_dim),
+                                   jnp.bfloat16)}
+        return {"k": jnp.zeros((batch, max_seq, kv, hd), jnp.bfloat16),
+                "v": jnp.zeros((batch, max_seq, kv, hd), jnp.bfloat16)}
+    if kind == "local":
+        w = cfg.window
+        return {"k": jnp.zeros((batch, w, kv, hd), jnp.bfloat16),
+                "v": jnp.zeros((batch, w, kv, hd), jnp.bfloat16),
+                "pos": jnp.full((batch, w), -10 ** 9, jnp.int32)}
+    if kind == "cross":
+        return {}
+    if kind == "recurrent":
+        dr = cfg.d_rnn or cfg.d_model
+        return {"h": jnp.zeros((batch, dr), jnp.float32),
+                "conv": jnp.zeros((batch, 3, dr), jnp.bfloat16)}
+    if kind == "rwkv":
+        h = cfg.n_heads
+        hd2 = cfg.d_model // h
+        return {"s": jnp.zeros((batch, h, hd2, hd2), jnp.float32),
+                "xa": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+                "xc": jnp.zeros((batch, cfg.d_model), jnp.bfloat16)}
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    prefix = [init_cache(cfg, kind, batch, max_seq) for kind in cfg.prefix]
+    one_group = [init_cache(cfg, kind, batch, max_seq) for kind in cfg.group]
+    groups = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_groups,) + x.shape).copy()
+        if cfg.n_groups else x, one_group)
+    return {"prefix": prefix, "groups": groups}
+
+
+def decode_step(cfg: ModelConfig, params, caches, token, pos_idx,
+                vision=None):
+    """One decode step.  token [B], pos_idx [] int32; returns
+    (logits [B,V], new caches)."""
+    b = token.shape[0]
+    x = params["embed"][token][:, None]
+    pos = jnp.broadcast_to(pos_idx[None, None], (b, 1)).astype(jnp.int32)
+    xv = None
+    if cfg.frontend == "vision":
+        xv = vision.astype(jnp.bfloat16) @ params["frontend"]
+
+    new_prefix = []
+    for kind, p, c in zip(cfg.prefix, params["prefix"], caches["prefix"]):
+        x, nc, _ = apply_layer(cfg, kind, p, x, pos=pos, cache=c)
+        new_prefix.append(nc)
+
+    def group_body(x, gp_c):
+        gp, gc = gp_c
+        ncs = []
+        for kind, p, c in zip(cfg.group, gp, gc):
+            ckv = _cross_kv(cfg, p["attn"], xv) if kind == "cross" else None
+            if kind == "cross":
+                x, nc, _ = apply_layer(cfg, kind, p, x, pos=pos,
+                                       cross_kv=ckv)
+                nc = c
+            else:
+                x, nc, _ = apply_layer(cfg, kind, p, x, pos=pos, cache=c)
+            ncs.append(nc)
+        return x, ncs
+
+    x, new_groups = jax.lax.scan(group_body, x,
+                                 (params["groups"], caches["groups"]))
+    x = L.rms_norm(x, params["norm_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = _shard("logits", (x @ head))[:, 0]
+    return logits, {"prefix": new_prefix, "groups": new_groups}

@@ -1,0 +1,101 @@
+"""Analysis substrate: HLO census, roofline model, offload planner, elastic
+mesh selection, fp64 extension of the FP suite."""
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core import bitserial_fp as fp
+from repro.core.floatfmt import FP64
+from repro.core.offload import decode_step_plan, report
+from repro.launch.hlo_census import HloCensus
+from repro.launch.roofline import kv_cache_bytes, model_flops, traffic_model
+from repro.launch.steps import SHAPES
+from repro.runtime.elastic import choose_mesh
+
+_HLO = """\
+HloModule jit_f, is_scheduled=true
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %ag = f32[8,8]{1,0} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={0}
+  %d = f32[8,8]{1,0} dot(%ag, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %d)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %c = s32[] constant(0)
+  %tup = (s32[], f32[8,8]) tuple(%c, %a)
+  %w = (s32[], f32[8,8]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"},"known_init_step":{"init":"0","step":"1"}}
+  %ar = f32[8,8]{1,0} all-reduce(%a), channel_id=2, replica_groups=[8]<=[8], to_apply=%cond
+  ROOT %o = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_census_loop_awareness():
+    t = HloCensus(_HLO).totals()
+    # dot: 2*8*8*8 = 1024 flops, x5 trips
+    assert t["dot_flops"] == 5 * 1024
+    # all-gather inside loop x5 x256B x1.0; all-reduce outside x1 x256B x2.0
+    assert t["collectives"]["all-gather"]["bytes"] == 5 * 256
+    assert t["collectives"]["all-gather"]["count"] == 5
+    assert t["collectives"]["all-reduce"]["bytes"] == 2 * 256
+    assert t["collectives"]["all-reduce"]["count"] == 1
+
+
+def test_roofline_models_sane():
+    cfg = ARCHS["qwen3-8b"]
+    plan = SHAPES["train_4k"]
+    mf = model_flops(cfg, plan)
+    assert abs(mf - 6 * cfg.n_params * 4096 * 256) / mf < 1e-9
+    tm = traffic_model(cfg, plan, 256)
+    assert tm["total"] == tm["weights"] + tm["optimizer"] + tm["activations"]
+    assert tm["weights"] > 0 and tm["optimizer"] > 0
+    # decode kv bytes: qwen3-8b @ 32k x 128 streams ~ 600 GB total
+    kv = kv_cache_bytes(cfg, 32768, 128)
+    assert 5e11 < kv < 8e11
+    # recurrent archs: O(1) state
+    kv_rwkv = kv_cache_bytes(ARCHS["rwkv6-1.6b"], 524288, 1)
+    assert kv_rwkv < 1e9
+
+
+def test_moe_flops_use_active_params():
+    cfg = ARCHS["qwen3-moe-235b-a22b"]
+    assert cfg.n_params_active < cfg.n_params / 8
+    mf = model_flops(cfg, SHAPES["train_4k"])
+    assert mf < 6 * cfg.n_params * 4096 * 256 / 8
+
+
+def test_offload_planner():
+    plans = decode_step_plan(ARCHS["rwkv6-1.6b"], batch=128, seq=32768)
+    assert any(p.offload for p in plans)       # Mi-scale elementwise wins
+    small = decode_step_plan(ARCHS["rwkv6-1.6b"].reduced(), batch=1, seq=8)
+    assert not all(p.offload for p in small)   # tiny vectors lose (latency)
+    assert "offload plan" in report(ARCHS["rwkv6-1.6b"])
+
+
+def test_elastic_mesh_respects_divisors():
+    for n in (256, 255, 128, 96, 17):
+        data, model = choose_mesh(n, model_divisors=[32, 8])
+        assert 32 % model == 0 and 8 % model == 0
+        assert data * model <= n
+
+
+def test_fp64_extension():
+    """The suite generalizes to double precision unchanged."""
+    rng = np.random.default_rng(1)
+    p = fp.build_fp_add(FP64)
+    xs = FP64.random_bits(rng, 6, emin=900, emax=1100)
+    ys = FP64.random_bits(rng, 6, emin=900, emax=1100)
+    for a, b in zip(xs, ys):
+        assert p.exec_row({"x": int(a), "y": int(b)})["z"] == \
+            FP64.op_exact("add", int(a), int(b))

@@ -1,0 +1,140 @@
+"""Bit-parallel suite: partition toolbox + Algorithms 5.1-5.3 + 6.1."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitparallel as bp
+from repro.core import bitparallel_fp as bpf
+from repro.core.floatfmt import FP16
+from repro.core.partitions import (PartitionedBuilder, broadcast, pshift,
+                                   reduce_tree)
+
+_cache = {}
+
+
+def _prog(key, builder):
+    if key not in _cache:
+        _cache[key] = builder()
+    return _cache[key]
+
+
+# ------------------------------------------------------------- toolbox
+def test_toolbox_shift_broadcast_reduce():
+    pb = PartitionedBuilder(8, 64)
+    x = pb.input("x", range(8))
+    s = pshift(pb, x, +2, fill=0)
+    pb.output("s", s)
+    bb = broadcast(pb, x[3])
+    pb.output("b", bb)
+    r = reduce_tree(pb, list(x), "or")
+    pb.output("r", [r])
+    p = pb.finish()
+    o = p.exec_row({"x": 0b10110001})
+    assert o["s"] == (0b10110001 << 2) & 0xFF
+    assert o["b"] == 0  # bit 3 of x is 0 -> broadcast zeros
+    assert o["r"] == 1
+    o = p.exec_row({"x": 0b1000})
+    assert o["b"] == 0xFF and o["r"] == 1
+
+
+def test_toolbox_cycle_counts():
+    """shift: |d|+1 cycles; broadcast/reduce: ~log2(k) (paper Fig. 6)."""
+    k = 16
+    pb = PartitionedBuilder(k, 64)
+    x = pb.input("x", range(k))
+    n0 = len(pb._steps)
+    pshift(pb, x, +1, fill=None)
+    assert len(pb._steps) - n0 == 2
+    n0 = len(pb._steps)
+    broadcast(pb, x[0])
+    assert len(pb._steps) - n0 <= int(np.ceil(np.log2(k))) + 1
+    n0 = len(pb._steps)
+    reduce_tree(pb, list(x), "and")
+    assert len(pb._steps) - n0 == int(np.log2(k))
+
+
+def test_section_validator_rejects_overlap():
+    pb = PartitionedBuilder(4, 64)
+    x = pb.input("x", range(4))
+    with pytest.raises(RuntimeError):
+        with pb.cycle():
+            pb.id_(x[0], p_out=2)     # spans 0..2
+            pb.id_(x[1], p_out=3)     # spans 1..3 -> overlap
+
+
+# ------------------------------------------------------------ arithmetic
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1))
+@settings(max_examples=30, deadline=None)
+def test_bp_add_property(x, y):
+    p = _prog("add16", lambda: bp.build_bp_add(16))
+    assert p.exec_row({"x": x, "y": y})["z"] == x + y
+
+
+def test_bp_add_log_latency():
+    """Alg 5.1 is O(log N): 32-bit adds in ~2x the cycles of 8-bit."""
+    c8 = bp.build_bp_add(8).parallel_cost().abstract_steps
+    c32 = bp.build_bp_add(32).parallel_cost().abstract_steps
+    assert c32 < 2.2 * c8
+    serial32 = 32  # FACC steps of the bit-serial adder
+    assert c32 < 3 * serial32
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1))
+@settings(max_examples=20, deadline=None)
+def test_bp_mul_property(x, y):
+    p = _prog("mul16", lambda: bp.build_bp_mul(16))
+    assert p.exec_row({"x": x, "y": y})["z"] == x * y
+
+
+@given(st.integers(1, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1), st.data())
+@settings(max_examples=20, deadline=None)
+def test_bp_div_property(d, q, data):
+    r = data.draw(st.integers(0, d - 1))
+    p = _prog("div16", lambda: bp.build_bp_div(16))
+    o = p.exec_row({"z": q * d + r, "d": d})
+    assert o["q"] == q and o["r"] == r
+
+
+def test_bp_div_latency_beats_serial():
+    """Alg 5.3 O(N log N) vs bit-serial O(N^2) (paper §5.5)."""
+    from repro.core import bitserial as bs
+    par = bp.build_bp_div(32, cpk=320).parallel_cost().nor_gates
+    ser = bs.build_div(32).cost().nor_gates
+    assert par < ser
+
+
+# ---------------------------------------------------------------- 6.1/FP
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 15))
+@settings(max_examples=30, deadline=None)
+def test_bp_var_shift_property(x, t):
+    p = _prog("vs", lambda: bpf.build_bp_var_shift(16, 4))
+    assert p.exec_row({"x": x, "t": t})["z"] == x >> t
+
+
+@given(st.integers(0, 2 ** 16 - 1))
+@settings(max_examples=30, deadline=None)
+def test_bp_var_normalize_property(x):
+    p = _prog("vn", lambda: bpf.build_bp_var_normalize(16))
+    o = p.exec_row({"x": x})
+    if x == 0:
+        assert o["z"] == 0
+    else:
+        lz = 16 - x.bit_length()
+        assert o["t"] == lz and o["z"] == (x << lz) & 0xFFFF
+
+
+def test_bp_fp16_ops():
+    rng = np.random.default_rng(9)
+    for op, bld in [("add", lambda: bpf.build_bp_fp_add(FP16)),
+                    ("mul", lambda: bpf.build_bp_fp_mul(FP16)),
+                    ("div", lambda: bpf.build_bp_fp_div(FP16))]:
+        p = _prog(("fp", op), bld)
+        xs = FP16.random_bits(rng, 30, emin=12, emax=18)
+        ys = FP16.random_bits(rng, 30, emin=12, emax=18)
+        for xb, yb in zip(xs, ys):
+            try:
+                want = FP16.op_exact(op, int(xb), int(yb))
+            except OverflowError:
+                continue
+            assert p.exec_row({"x": int(xb), "y": int(yb)})["z"] == want

@@ -1,0 +1,100 @@
+"""Bit-serial fixed-point suite vs integer oracles (paper §3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitserial as bs
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 33, 64])
+def test_add_random(n):
+    p = bs.build_add(n)
+    rng = np.random.default_rng(n)
+    for _ in range(25):
+        x = int(rng.integers(0, 2 ** n, dtype=np.uint64)) if n < 64 \
+            else int(rng.integers(0, 2 ** 63))
+        y = int(rng.integers(0, 2 ** n, dtype=np.uint64)) if n < 64 \
+            else int(rng.integers(0, 2 ** 63))
+        assert p.exec_row({"x": x, "y": y})["z"] == x + y
+
+
+def test_add_exhaustive_6bit():
+    p = bs.build_add(6)
+    for x in range(64):
+        for y in range(0, 64, 7):
+            assert p.exec_row({"x": x, "y": y})["z"] == x + y
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1))
+@settings(max_examples=40, deadline=None)
+def test_sub_property(x, y):
+    p = _sub16()
+    o = p.exec_row({"x": x, "y": y})
+    assert o["z"] == (x - y) % 2 ** 16
+    assert o["ge"] == int(x >= y)
+
+
+_cache = {}
+
+
+def _sub16():
+    if "sub16" not in _cache:
+        _cache["sub16"] = bs.build_sub(16)
+    return _cache["sub16"]
+
+
+@pytest.mark.parametrize("n,kar", [(8, False), (8, True), (16, True),
+                                   (32, True), (24, True)])
+def test_mul(n, kar):
+    p = bs.build_mul(n, karatsuba=kar, thresh=6 if kar else 20)
+    rng = np.random.default_rng(n)
+    for _ in range(15):
+        x = int(rng.integers(0, 2 ** n, dtype=np.uint64))
+        y = int(rng.integers(0, 2 ** n, dtype=np.uint64))
+        assert p.exec_row({"x": x, "y": y})["z"] == x * y
+
+
+def test_karatsuba_beats_shift_add_at_32():
+    """paper §3.2: Karatsuba wins for N around/above the ~20 crossover."""
+    naive = bs.build_mul(32, karatsuba=False).cost().nor_gates
+    kar = bs.build_mul(32, karatsuba=True, thresh=20).cost().nor_gates
+    assert kar < naive
+
+
+@given(st.integers(1, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1),
+       st.data())
+@settings(max_examples=40, deadline=None)
+def test_div_property(d, q, data):
+    r = data.draw(st.integers(0, d - 1))
+    p = _div16()
+    o = p.exec_row({"z": q * d + r, "d": d})
+    assert o["q"] == q and o["r"] == r
+
+
+def _div16():
+    if "div16" not in _cache:
+        _cache["div16"] = bs.build_div(16)
+    return _cache["div16"]
+
+
+def test_div_edge_cases():
+    p = bs.build_div(8)
+    # precondition (documented): z >> N < d, so the quotient fits N bits
+    for z, d in [(0, 1), (255, 1), (255, 255), (65279, 255), (254, 255),
+                 (1, 2), (255 * 255 + 254, 255)]:
+        assert (z >> 8) < d
+        o = p.exec_row({"z": z, "d": d})
+        assert o["q"] == z // d and o["r"] == z % d
+
+
+def test_latency_scaling():
+    """O(N) add, O(N^2)-ish shift-add mul, O(N^2) div (paper complexities)."""
+    a8, a16 = (bs.build_add(n).cost().abstract_steps for n in (8, 16))
+    assert a16 == 2 * a8
+    m8 = bs.build_mul(8, karatsuba=False).cost().abstract_steps
+    m16 = bs.build_mul(16, karatsuba=False).cost().abstract_steps
+    assert 3.4 < m16 / m8 < 4.6
+    d8 = bs.build_div(8).cost().abstract_steps
+    d16 = bs.build_div(16).cost().abstract_steps
+    assert 3.0 < d16 / d8 < 4.6

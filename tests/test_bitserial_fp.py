@@ -1,0 +1,129 @@
+"""Bit-serial floating point: exact IEEE-754 RNE vs the rational oracle
+(paper §4: variable shift, variable normalization, first FP add)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitserial_fp as fp
+from repro.core.floatfmt import BF16, FP16, FP32
+
+_cache = {}
+
+
+def _prog(key, builder):
+    if key not in _cache:
+        _cache[key] = builder()
+    return _cache[key]
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 31))
+@settings(max_examples=50, deadline=None)
+def test_var_shift_property(x, t):
+    p = _prog("vs", lambda: fp.build_var_shift(16, 5))
+    assert p.exec_row({"x": x, "t": t})["z"] == (x >> t) & 0xFFFF
+
+
+@given(st.integers(0, 2 ** 16 - 1))
+@settings(max_examples=50, deadline=None)
+def test_var_normalize_property(x):
+    p = _prog("vn", lambda: fp.build_var_normalize(16))
+    o = p.exec_row({"x": x})
+    if x == 0:
+        assert o["z"] == 0 and o["t"] == 15
+    else:
+        lz = 16 - x.bit_length()
+        assert o["t"] == lz and o["z"] == (x << lz) & 0xFFFF
+
+
+def test_var_norm_overhead_matches_paper():
+    """§4.4: normalization costs ~7% over variable shift at Nx=24."""
+    vs = fp.build_var_shift(24, 5).cost().nor_gates
+    vn = fp.build_var_normalize(24).cost().nor_gates
+    overhead = vn / vs - 1.0
+    assert overhead < 0.25, overhead
+
+
+def _check(fmt, prog, op, pairs):
+    for xb, yb in pairs:
+        try:
+            want = fmt.op_exact(op, int(xb), int(yb))
+        except (OverflowError, ZeroDivisionError):
+            continue
+        got = prog.exec_row({"x": int(xb), "y": int(yb)})["z"]
+        assert got == want, (fmt, op, fmt.decode(int(xb)),
+                             fmt.decode(int(yb)), fmt.decode(got),
+                             fmt.decode(want))
+
+
+def _pairs(fmt, n, rng, lo, hi):
+    return list(zip(fmt.random_bits(rng, n, emin=lo, emax=hi),
+                    fmt.random_bits(rng, n, emin=lo, emax=hi)))
+
+
+@pytest.mark.parametrize("fmtname,lo,hi", [("fp16", 10, 20),
+                                           ("bf16", 100, 150),
+                                           ("fp32", 100, 150)])
+def test_fp_add_signed(fmtname, lo, hi):
+    fmt = {"fp16": FP16, "bf16": BF16, "fp32": FP32}[fmtname]
+    p = _prog(("add", fmtname), lambda: fp.build_fp_add(fmt))
+    rng = np.random.default_rng(42)
+    pairs = _pairs(fmt, 60, rng, lo, hi)
+    mid = (lo + hi) // 2
+    # adversarial: cancellation + exact ties
+    for _ in range(40):
+        e = int(rng.integers(lo, hi))
+        m = int(rng.integers(0, 1 << fmt.nm))
+        m2 = max(0, min((1 << fmt.nm) - 1, m + int(rng.integers(-2, 3))))
+        pairs.append((fmt.encode(0, e, m), fmt.encode(1, e, m2)))
+        pairs.append((fmt.encode(0, mid, m),
+                      fmt.encode(0, mid - fmt.nm - 1, m2)))
+    pairs += [(0, fmt.encode(0, mid, 5)), (fmt.encode(1, mid, 5), 0), (0, 0),
+              (fmt.encode(0, mid, 9), fmt.encode(1, mid, 9))]
+    _check(fmt, p, "add", pairs)
+
+
+def test_fp_add_unsigned():
+    p = _prog("addu", lambda: fp.build_fp_add(FP16, signed=False))
+    rng = np.random.default_rng(3)
+    pairs = [(FP16.encode(0, int(rng.integers(10, 20)),
+                          int(rng.integers(0, 1024))),
+              FP16.encode(0, int(rng.integers(10, 20)),
+                          int(rng.integers(0, 1024)))) for _ in range(60)]
+    _check(FP16, p, "add", pairs)
+
+
+def test_fp_sub():
+    p = _prog("sub", lambda: fp.build_fp_sub(FP16))
+    rng = np.random.default_rng(4)
+    _check(FP16, p, "sub", _pairs(FP16, 60, rng, 10, 20))
+
+
+@pytest.mark.parametrize("fmtname,lo,hi", [("fp16", 12, 18),
+                                           ("bf16", 100, 150),
+                                           ("fp32", 100, 150)])
+def test_fp_mul(fmtname, lo, hi):
+    fmt = {"fp16": FP16, "bf16": BF16, "fp32": FP32}[fmtname]
+    p = _prog(("mul", fmtname), lambda: fp.build_fp_mul(fmt))
+    rng = np.random.default_rng(5)
+    pairs = _pairs(fmt, 50, rng, lo, hi) + [(0, fmt.encode(0, hi, 1))]
+    _check(fmt, p, "mul", pairs)
+
+
+@pytest.mark.parametrize("fmtname,lo,hi", [("fp16", 12, 18),
+                                           ("bf16", 100, 150),
+                                           ("fp32", 100, 150)])
+def test_fp_div(fmtname, lo, hi):
+    fmt = {"fp16": FP16, "bf16": BF16, "fp32": FP32}[fmtname]
+    p = _prog(("div", fmtname), lambda: fp.build_fp_div(fmt))
+    rng = np.random.default_rng(6)
+    pairs = _pairs(fmt, 50, rng, lo, hi) + [(0, fmt.encode(1, hi, 3))]
+    _check(fmt, p, "div", pairs)
+
+
+def test_fp_latency_complexities():
+    """add O(Nm log Nm + Ne) < mul O(Nm^1.58) < div O(Nm^2) (paper §4)."""
+    add = fp.build_fp_add(FP32).cost().nor_gates
+    mul = fp.build_fp_mul(FP32).cost().nor_gates
+    div = fp.build_fp_div(FP32).cost().nor_gates
+    assert add < mul < div

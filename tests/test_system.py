@@ -1,0 +1,99 @@
+"""End-to-end behaviour: tiny LM trains (loss drops), resume mid-run is
+bit-identical, serve generates, PIM numerics plug into a model layer."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import ARCHS
+from repro.data.pipeline import DataConfig, DataIterator
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import train_loop
+from repro.launch.steps import make_train_step
+
+
+def _mini_setup(tmp_path, steps, total):
+    cfg = ARCHS["qwen3-8b"].reduced(vocab=64)
+    params = M.init_model(cfg, jax.random.PRNGKey(1))
+    opt = adamw.init(params)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=total, warmup_steps=2)
+    jstep = jax.jit(make_train_step(cfg, 1, opt_cfg))
+    dcfg = DataConfig(vocab=64, seq_len=32, global_batch=4, seed=0)
+
+    def step_fn(state, batch):
+        mb = {k: jnp.asarray(v)[None] for k, v in batch.items()}
+        p, o, metrics = jstep(state["params"], state["opt"], mb)
+        return {"params": p, "opt": o}, metrics
+
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    return step_fn, {"params": params, "opt": opt}, dcfg, ckpt
+
+
+def test_tiny_lm_loss_decreases(tmp_path):
+    step_fn, state, dcfg, ckpt = _mini_setup(tmp_path, 30, 30)
+    losses = []
+    it = DataIterator(dcfg)
+    for _ in range(30):
+        state, m = step_fn(state, next(it))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses[::10]
+
+
+def test_resume_is_bit_identical(tmp_path):
+    # run 1: straight through 8 steps
+    step_fn, state, dcfg, ckpt1 = _mini_setup(tmp_path / "a", 8, 8)
+    out_a = train_loop(step_fn=step_fn, state=state,
+                       data_iter=DataIterator(dcfg), ckpt=ckpt1,
+                       total_steps=8, ckpt_every=0, log_every=0,
+                       log_fn=lambda *_: None)
+    # run 2: checkpoint at 4, new loop resumes and finishes
+    step_fn, state, dcfg, ckpt2 = _mini_setup(tmp_path / "b", 8, 8)
+    train_loop(step_fn=step_fn, state=state, data_iter=DataIterator(dcfg),
+               ckpt=ckpt2, total_steps=4, ckpt_every=0, log_every=0,
+               log_fn=lambda *_: None)
+    # persist at step 4 (train_loop checkpoints periodically; force one)
+    st4 = train_loop(step_fn=step_fn, state=state,
+                     data_iter=DataIterator(dcfg), ckpt=ckpt2,
+                     total_steps=4, ckpt_every=0, log_every=0,
+                     log_fn=lambda *_: None)["state"]
+    ckpt2.save(4, st4)
+    out_b = train_loop(step_fn=step_fn, state=st4,
+                       data_iter=DataIterator(dcfg), ckpt=ckpt2,
+                       total_steps=8, ckpt_every=0, log_every=0,
+                       log_fn=lambda *_: None)
+    wa = np.asarray(out_a["state"]["params"]["embed"], np.float32)
+    wb = np.asarray(out_b["state"]["params"]["embed"], np.float32)
+    np.testing.assert_array_equal(wa, wb)
+
+
+def test_serve_generates():
+    from repro.launch import serve
+    gen = serve.main(["--arch", "qwen3-8b", "--reduced", "--batch", "2",
+                      "--prompt-len", "8", "--gen", "4"])
+    assert gen.shape == (2, 12)
+    assert (gen >= 0).all()
+
+
+def test_pim_linear_layer_in_model():
+    """AritPIM as a numerics backend: an int8 linear layer computed by the
+    in-memory algorithms matches the float path to quantization error."""
+    from repro.core.pim_numerics import PIMVectorUnit, pim_linear_i8
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 16)).astype(np.float32)
+    w = rng.standard_normal((16, 8)).astype(np.float32)
+    sx = np.abs(x).max() / 127
+    sw = np.abs(w).max() / 127
+    xq = np.clip(np.round(x / sx), -127, 127).astype(np.int8)
+    wq = np.clip(np.round(w / sw), -127, 127).astype(np.int8)
+    unit = PIMVectorUnit(backend="pallas")
+    y_pim = pim_linear_i8(unit, xq, wq).astype(np.float64) * sx * sw
+    y_ref = x @ w
+    rel = np.abs(y_pim - y_ref).max() / np.abs(y_ref).max()
+    assert rel < 0.05, rel
+    # and the integer GEMM itself is exact
+    assert np.array_equal(pim_linear_i8(unit, xq, wq),
+                          xq.astype(np.int64) @ wq.astype(np.int64))
