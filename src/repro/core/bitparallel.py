@@ -18,7 +18,7 @@ from __future__ import annotations
 
 from typing import List, Optional, Tuple
 
-from .gates import Program
+from .gates import Program, memoize_build
 from .partitions import (PartitionedBuilder, broadcast, prefix_scan, pshift,
                          reduce_pairs, reduce_tree)
 
@@ -181,6 +181,7 @@ def bp_div(pb: PartitionedBuilder, z: List[int], d: List[int]
 # packaged programs
 # --------------------------------------------------------------------------
 
+@memoize_build
 def build_bp_add(n: int, cpk: int = 128) -> Program:
     pb = PartitionedBuilder(n, cpk)
     x = pb.input("x", range(n))
@@ -190,6 +191,7 @@ def build_bp_add(n: int, cpk: int = 128) -> Program:
     return pb.finish()
 
 
+@memoize_build
 def build_bp_sub(n: int, cpk: int = 128) -> Program:
     pb = PartitionedBuilder(n, cpk)
     x = pb.input("x", range(n))
@@ -200,6 +202,7 @@ def build_bp_sub(n: int, cpk: int = 128) -> Program:
     return pb.finish()
 
 
+@memoize_build
 def build_bp_mul(n: int, cpk: int = 160) -> Program:
     pb = PartitionedBuilder(n, cpk)
     x = pb.input("x", range(n))
@@ -209,6 +212,7 @@ def build_bp_mul(n: int, cpk: int = 160) -> Program:
     return pb.finish()
 
 
+@memoize_build
 def build_bp_div(n: int, cpk: int = 256) -> Program:
     pb = PartitionedBuilder(n + 2, cpk)
     z = pb.input("z", list(range(n)) + list(range(n)))

@@ -24,7 +24,7 @@ from typing import List, Tuple
 
 from .bitparallel import bp_add, bp_div, bp_mul, bp_sub
 from .floatfmt import FloatFormat
-from .gates import Program
+from .gates import Program, memoize_build
 from .partitions import PartitionedBuilder, broadcast, pshift, reduce_tree
 
 
@@ -357,6 +357,7 @@ def _k_for(fmt: FloatFormat, op: str) -> int:
     return max(fmt.nm + 4 + 2, fmt.nm + fmt.ne + 2)   # div: k >= N'+2
 
 
+@memoize_build
 def build_bp_var_shift(nx: int, nt: int, cpk: int = 128) -> Program:
     pb = PartitionedBuilder(nx, cpk)
     x = pb.input("x", range(nx))
@@ -366,6 +367,7 @@ def build_bp_var_shift(nx: int, nt: int, cpk: int = 128) -> Program:
     return pb.finish()
 
 
+@memoize_build
 def build_bp_var_normalize(nx: int, cpk: int = 128) -> Program:
     pb = PartitionedBuilder(nx, cpk)
     x = pb.input("x", range(nx))
@@ -384,13 +386,16 @@ def _build_bp_fp(fn, fmt: FloatFormat, op: str, cpk: int) -> Program:
     return pb.finish()
 
 
+@memoize_build
 def build_bp_fp_add(fmt: FloatFormat, cpk: int = 256) -> Program:
     return _build_bp_fp(bp_fp_add, fmt, "add", cpk)
 
 
+@memoize_build
 def build_bp_fp_mul(fmt: FloatFormat, cpk: int = 384) -> Program:
     return _build_bp_fp(bp_fp_mul, fmt, "mul", cpk)
 
 
+@memoize_build
 def build_bp_fp_div(fmt: FloatFormat, cpk: int = 512) -> Program:
     return _build_bp_fp(bp_fp_div, fmt, "div", cpk)

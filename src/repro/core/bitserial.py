@@ -18,7 +18,7 @@ from __future__ import annotations
 
 from typing import List, Optional, Tuple
 
-from .gates import Builder, G, Program
+from .gates import Builder, G, Program, memoize_build
 
 KARATSUBA_THRESHOLD = 20  # paper fn. 3
 
@@ -221,6 +221,7 @@ def divide(b: Builder, z: List[int], d: List[int]
 # packaged programs
 # --------------------------------------------------------------------------
 
+@memoize_build
 def build_add(n: int) -> Program:
     b = Builder()
     x = b.input("x", n)
@@ -230,6 +231,7 @@ def build_add(n: int) -> Program:
     return b.finish()
 
 
+@memoize_build
 def build_sub(n: int) -> Program:
     b = Builder()
     x = b.input("x", n)
@@ -240,6 +242,7 @@ def build_sub(n: int) -> Program:
     return b.finish()
 
 
+@memoize_build
 def build_mul(n: int, karatsuba: bool = True,
               thresh: int = KARATSUBA_THRESHOLD) -> Program:
     b = Builder()
@@ -250,6 +253,7 @@ def build_mul(n: int, karatsuba: bool = True,
     return b.finish()
 
 
+@memoize_build
 def build_div(n: int) -> Program:
     b = Builder()
     z = b.input("z", 2 * n)

@@ -25,7 +25,7 @@ from typing import List, Tuple
 from .bitserial import ripple_add, sub
 from .bitserial import mul_karatsuba, divide
 from .floatfmt import FloatFormat
-from .gates import Builder, Program
+from .gates import Builder, Program, memoize_build
 
 
 def _clog2(n: int) -> int:
@@ -377,6 +377,7 @@ def fp_div(b: Builder, fmt: FloatFormat, x: List[int], y: List[int]
 # packaged programs
 # --------------------------------------------------------------------------
 
+@memoize_build
 def build_var_shift(nx: int, nt: int, left: bool = False) -> Program:
     b = Builder()
     x = b.input("x", nx)
@@ -387,6 +388,7 @@ def build_var_shift(nx: int, nt: int, left: bool = False) -> Program:
     return b.finish()
 
 
+@memoize_build
 def build_var_normalize(nx: int) -> Program:
     b = Builder()
     x = b.input("x", nx)
@@ -405,18 +407,22 @@ def _build_fp2(fn, fmt: FloatFormat, **kw) -> Program:
     return b.finish()
 
 
+@memoize_build
 def build_fp_add(fmt: FloatFormat, signed: bool = True) -> Program:
     return _build_fp2(fp_add, fmt, signed=signed)
 
 
+@memoize_build
 def build_fp_mul(fmt: FloatFormat, karatsuba: bool = True) -> Program:
     return _build_fp2(fp_mul, fmt, karatsuba=karatsuba)
 
 
+@memoize_build
 def build_fp_div(fmt: FloatFormat) -> Program:
     return _build_fp2(fp_div, fmt)
 
 
+@memoize_build
 def build_fp_sub(fmt: FloatFormat) -> Program:
     """x - y == x + (-y): flip y's sign bit then signed add (paper §4.5)."""
     b = Builder()

@@ -23,6 +23,8 @@ read outputs without knowing the internal allocation, and a cost model
 from __future__ import annotations
 
 import dataclasses
+import functools
+import heapq
 from enum import IntEnum
 from typing import Dict, List, Optional, Sequence
 
@@ -83,13 +85,26 @@ class Program:
     """A straight-line gate program over cells of one row."""
 
     def __init__(self, n_cells: int, instrs: List[Instr],
-                 ports: Dict[str, List[int]], parallel_steps=None):
+                 ports: Dict[str, List[int]], parallel_steps=None,
+                 in_ports=None):
         self.n_cells = n_cells
         self.instrs = instrs
         self.ports = ports          # name -> list of cell ids (LSB first)
         # bit-parallel programs: list of (list of instr indices) per cycle,
         # None for purely serial programs.
         self.parallel_steps = parallel_steps
+        # names of ports declared as inputs (the rest are outputs); empty
+        # when direction is unknown (hand-built programs).
+        self.in_ports = frozenset(in_ports or ())
+        # abstract-instr -> [start, end) span in the lowered instr stream;
+        # populated by lower_to_nor() on the *lowered* program.
+        self.lowered_spans = None
+
+    @property
+    def out_ports(self) -> frozenset:
+        """Names of the result ports; all ports when direction is unknown."""
+        outs = frozenset(n for n in self.ports if n not in self.in_ports)
+        return outs if outs else frozenset(self.ports)
 
     # ------------------------------------------------------------------ cost
     def cost(self) -> Cost:
@@ -157,11 +172,29 @@ class Program:
 
     # ------------------------------------------------------------- lowering
     def lower_to_nor(self) -> "Program":
-        """Lower to the {INIT0, INIT1, NOT, NOR} gate set."""
+        """Lower to the {INIT0, INIT1, NOT, NOR} gate set.
+
+        The result records ``lowered_spans`` (abstract instr -> lowered
+        range) so schedulers can map the builder's native ``parallel_steps``
+        onto lowered gates.
+        """
         b = Builder(reserve=self.n_cells)
+        spans = []
         for ins in self.instrs:
+            start = len(b.instrs)
             _lower_instr(b, ins)
-        return Program(b.n_cells, b.instrs, dict(self.ports))
+            spans.append((start, len(b.instrs)))
+        low = Program(b.n_cells, b.instrs, dict(self.ports),
+                      in_ports=self.in_ports)
+        low.lowered_spans = spans
+        return low
+
+    def schedule(self, mode: str = "asap", reuse_cells: bool = True,
+                 max_width: Optional[int] = None) -> "LevelSchedule":
+        """Levelized execution schedule of the NOR-lowered program (see
+        :func:`levelize`)."""
+        return levelize(self, mode=mode, reuse_cells=reuse_cells,
+                        max_width=max_width)
 
     def to_arrays(self):
         """Dense (op, a, b, out) int32 arrays of the NOR-lowered program, the
@@ -266,6 +299,7 @@ class Builder:
         self._free: List[int] = []
         self._const = {}
         self.ports: Dict[str, List[int]] = {}
+        self.in_port_names: set = set()
         self._steps: Optional[List[List[int]]] = None  # parallel schedule
 
     # --------------------------------------------------------- cell mgmt
@@ -292,6 +326,7 @@ class Builder:
     def input(self, name: str, n: int) -> List[int]:
         v = [self.alloc() for _ in range(n)]
         self.ports[name] = v
+        self.in_port_names.add(name)
         return v
 
     def output(self, name: str, cells: Sequence[int]):
@@ -385,7 +420,8 @@ class Builder:
     # ------------------------------------------------------ finalization
     def finish(self) -> Program:
         return Program(self.n_cells, self.instrs, dict(self.ports),
-                       parallel_steps=self._steps)
+                       parallel_steps=self._steps,
+                       in_ports=self.in_port_names)
 
 
 # --------------------------------------------------------------------------
@@ -468,3 +504,325 @@ def _lower_instr(b: Builder, ins: Instr):
             b.free([nco, ncin])
     else:
         raise ValueError(op)
+
+
+# --------------------------------------------------------------------------
+# levelized scheduling (executor pipeline stage 2: IR -> levelize)
+# --------------------------------------------------------------------------
+#
+# The executor consumes programs as *levels*: maximal sets of NOR/NOT gates
+# with no read-after-write dependency between them, so each level runs as one
+# vectorized gather -> NOR -> scatter over all rows.  The pass is a classic
+# mini-backend:
+#
+#   1. value numbering (SSA renaming) of the NOR-lowered stream -- every
+#      write defines a fresh value, which dissolves the WAR/WAW hazards the
+#      lowering's temp-cell free list introduces;
+#   2. constant folding of INIT0/INIT1 into two shared values (the packed
+#      state starts zeroed; a single always-one cell is set at pack time), so
+#      scheduled gates are NOR/NOT only;
+#   3. dead-code elimination backward from the final value of every port;
+#   4. level assignment -- either ASAP over true dependencies ("asap") or
+#      the builder's native partition schedule ("native", wave-lockstep
+#      expansion of ``parallel_steps``);
+#   5. register allocation: values are mapped back onto physical cells with
+#      a free-list scan over live ranges, shrinking the state footprint
+#      (often drastically for partitioned programs, whose k*cpk layouts are
+#      sparse).
+#
+# The pass is purely an executor artifact: it never mutates the Program, and
+# the paper-facing cost model (``Program.cost`` / ``parallel_cost``) is
+# computed from the original instruction stream, never from the schedule.
+
+_VZERO = -1     # value id: constant 0 (the zeroed packed state)
+_VONE = -2      # value id: constant 1 (one shared cell set at pack time)
+_INF = 1 << 60
+
+
+@dataclasses.dataclass
+class LevelSchedule:
+    """Dense levelized form of a NOR-lowered program.
+
+    ``a``/``b``/``out`` are int32 ``(n_levels, width)`` physical-cell index
+    matrices, padded with sink lanes (a == b == sink, out == sink + lane) so
+    that every level has the same width *and* unique per-level output
+    indices; ``level_width[l]`` is the number of real gates in level ``l``.
+    NOT is encoded as NOR with b == a; INIT gates are folded away, so every
+    lane computes ``out <- ~(a | b)``.
+    """
+    n_cells: int                    # physical cells incl. the sink region
+    sink: int                       # first scratch cell absorbing pad lanes
+    one_cell: Optional[int]         # cell pack_rows must fill with ones
+    ports: Dict[str, List[int]]     # port name -> physical cells (final
+    #                                 values: where outputs are unpacked)
+    in_cells: Dict[str, List[int]]  # input port -> physical cells of the
+    #                                 *initial* values (where inputs are
+    #                                 packed; differs from ports when a
+    #                                 program overwrites an input cell)
+    in_ports: frozenset
+    out_ports: frozenset
+    a: np.ndarray
+    b: np.ndarray
+    out: np.ndarray
+    level_width: np.ndarray         # int32 (n_levels,)
+    n_gates: int                    # live gates after DCE
+    source_gates: int               # lowered NOR/NOT gates before DCE
+    source_cells: int               # lowered cell count before reuse
+
+    @property
+    def n_levels(self) -> int:
+        return self.a.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.a.shape[1]
+
+    def pack_cells(self, name: str) -> List[int]:
+        """Physical cells where ``name``'s per-row values must be packed
+        (inputs go to their initial-value cells, outputs read back from
+        their final-value cells)."""
+        return self.in_cells.get(name, self.ports[name])
+
+    def exec_packed(self, state: np.ndarray) -> np.ndarray:
+        """Vectorized numpy execution over bit-packed column state
+        (uint32[n_cells, n_words]); one gather/NOR/scatter per level."""
+        assert state.shape[0] == self.n_cells
+        for l in range(self.n_levels):
+            w = self.level_width[l]
+            ia, ib, io = self.a[l, :w], self.b[l, :w], self.out[l, :w]
+            state[io] = ~(state[ia] | state[ib])
+        return state
+
+
+def _rename(low: Program):
+    """Value-number the lowered stream.  Returns (va, vb, is_gate, out_val)
+    where gate i defines value ``n0 + i`` and reads values va[i]/vb[i]
+    (sentinels _VZERO/_VONE for folded constants), and ``out_val`` maps each
+    port cell position to its final value."""
+    n0 = low.n_cells
+    cur = list(range(n0))
+    ni = len(low.instrs)
+    va = np.full(ni, _VZERO, np.int64)
+    vb = np.full(ni, _VZERO, np.int64)
+    is_gate = np.zeros(ni, bool)
+    for i, ins in enumerate(low.instrs):
+        op = ins.op
+        if op == G.INIT0:
+            cur[ins.outs[0]] = _VZERO
+            continue
+        if op == G.INIT1:
+            cur[ins.outs[0]] = _VONE
+            continue
+        assert op in (G.NOT, G.NOR), op
+        is_gate[i] = True
+        va[i] = cur[ins.ins[0]]
+        vb[i] = cur[ins.ins[1]] if op == G.NOR else va[i]
+        cur[ins.outs[0]] = n0 + i
+    out_val = {name: [cur[c] for c in cells]
+               for name, cells in low.ports.items()}
+    return va, vb, is_gate, out_val
+
+
+def _dce(n0, ni, va, vb, out_val):
+    """Mark gates reachable (backward) from any port's final value."""
+    keep = np.zeros(ni, bool)
+    stack = [v for vals in out_val.values() for v in vals if v >= n0]
+    while stack:
+        g = stack.pop() - n0
+        if keep[g]:
+            continue
+        keep[g] = True
+        for o in (int(va[g]), int(vb[g])):
+            if o >= n0 and not keep[o - n0]:
+                stack.append(o)
+    return keep
+
+
+def _asap_levels(n0, kept, va, vb):
+    """Minimal-depth level per kept gate: 1 + max(level of operand defs)."""
+    lvl = {}
+
+    def vlevel(v):
+        return lvl.get(v, 0) if v >= n0 else 0
+
+    out = {}
+    for i in kept:      # program order: defs precede uses
+        L = 1 + max(vlevel(int(va[i])), vlevel(int(vb[i])))
+        lvl[n0 + i] = L
+        out[i] = L
+    return out
+
+
+def _native_levels(program: Program, low: Program, kept_set):
+    """Wave-lockstep levels from the builder's native ``parallel_steps``:
+    abstract step s starts at base[s]; the j-th lowered gate of each of its
+    abstract instrs lands in wave base[s] + j (paper §5.1 semantics: sections
+    advance concurrently, each serially evaluating its gate's NOR netlist)."""
+    steps = program.parallel_steps
+    if steps is None:
+        raise ValueError("program has no native parallel schedule")
+    spans = low.lowered_spans
+    covered = set()
+    for idxs in steps:
+        covered.update(idxs)
+    for j, ins in enumerate(program.instrs):
+        if j not in covered and ins.op not in (G.INIT0, G.INIT1):
+            raise ValueError(
+                f"abstract instr {j} ({G(ins.op).name}) is outside the "
+                "native parallel schedule")
+    levels = {}
+    base = 1
+    for idxs in steps:
+        longest = 0
+        for j in idxs:
+            s, e = spans[j]
+            for k in range(s, e):
+                if k in kept_set:
+                    levels[k] = base + (k - s)
+            longest = max(longest, e - s)
+        base += max(longest, 1)
+    return levels
+
+
+def levelize(program: Program, mode: str = "asap",
+             reuse_cells: bool = True,
+             max_width: Optional[int] = None) -> LevelSchedule:
+    """Levelize ``program``'s NOR lowering into a :class:`LevelSchedule`.
+
+    mode:  'asap'   -- minimal-depth hazard levelization (default);
+           'native' -- the builder's own ``parallel_steps``, expanded to
+                       NOR waves (bit-parallel programs only).
+    reuse_cells: run the register-allocation pass (cells reused once their
+    last reader has executed); disable for a direct cell-per-value layout.
+    max_width: split levels wider than this into consecutive rows, bounding
+    the padding of the dense form.  Safe because register allocation is
+    strict (a cell written at level L is never read at level L), so any
+    partition of a level into ordered chunks executes identically.
+    """
+    low = program.lower_to_nor()
+    n0 = low.n_cells
+    ni = len(low.instrs)
+    va, vb, is_gate, out_val = _rename(low)
+    keep = _dce(n0, ni, va, vb, out_val)
+    kept = [i for i in range(ni) if keep[i]]
+    if mode == "asap":
+        raw = _asap_levels(n0, kept, va, vb)
+    elif mode == "native":
+        raw = _native_levels(program, low, set(kept))
+    else:
+        raise ValueError(mode)
+    # compress level ids to consecutive 1..D
+    uniq = sorted(set(raw.values()))
+    remap = {L: k + 1 for k, L in enumerate(uniq)}
+    glevel = {i: remap[raw[i]] for i in kept}
+    depth = len(uniq)
+
+    # ---- liveness: last level each value is read at; port finals live out
+    last_use: Dict[int, int] = {}
+    for i in kept:
+        for v in (int(va[i]), int(vb[i])):
+            L = glevel[i]
+            if last_use.get(v, -1) < L:
+                last_use[v] = L
+    for vals in out_val.values():
+        for v in vals:
+            last_use[v] = _INF
+    # input ports pack at their *initial* values' cells (a program may
+    # overwrite an input cell; its final value then differs).  Keep those
+    # initial values allocatable even when never read.  Hand-built programs
+    # declare no directions; treat every port as packable there.
+    pack_names = low.in_ports if low.in_ports else low.ports.keys()
+    in_port_cells = {name: list(low.ports[name])
+                     for name in pack_names if name in low.ports}
+    for cells in in_port_cells.values():
+        for c in cells:
+            last_use.setdefault(c, 0)
+
+    # ---- register allocation over live ranges
+    phys: Dict[int, int] = {}
+    free: List[int] = []
+    n_phys = 0
+
+    def alloc():
+        nonlocal n_phys
+        if reuse_cells and free:
+            return heapq.heappop(free)
+        n_phys += 1
+        return n_phys - 1
+
+    expiry: Dict[int, List[int]] = {}
+
+    def place(v, cell):
+        phys[v] = cell
+        lu = last_use[v]
+        if lu < _INF:
+            expiry.setdefault(lu, []).append(cell)
+
+    one_cell = None
+    if _VONE in last_use:
+        one_cell = alloc()
+        place(_VONE, one_cell)
+    if _VZERO in last_use:
+        place(_VZERO, alloc())
+    for v in sorted(v for v in last_use if 0 <= v < n0):
+        place(v, alloc())
+
+    by_level: Dict[int, List[int]] = {}
+    for i in kept:
+        by_level.setdefault(glevel[i], []).append(i)
+    rows_a, rows_b, rows_o = [], [], []
+    for L in range(1, depth + 1):
+        if reuse_cells:
+            for cell in expiry.pop(L - 1, ()):
+                heapq.heappush(free, cell)
+        ra, rb, ro = [], [], []
+        for i in by_level.get(L, ()):
+            ra.append(phys[int(va[i])])
+            rb.append(phys[int(vb[i])])
+            place(n0 + i, alloc())
+            ro.append(phys[n0 + i])
+        if max_width is not None and len(ra) > max_width:
+            for s in range(0, len(ra), max_width):
+                rows_a.append(ra[s:s + max_width])
+                rows_b.append(rb[s:s + max_width])
+                rows_o.append(ro[s:s + max_width])
+        else:
+            rows_a.append(ra)
+            rows_b.append(rb)
+            rows_o.append(ro)
+    sink = n_phys
+    width = max((len(r) for r in rows_a), default=0)
+    # padding lanes write *distinct* sink cells so every level's scatter has
+    # unique output indices (lets the executors use unique-scatter codegen)
+    n_phys += max(width, 1)
+    D = len(rows_a)
+    a = np.full((D, width), sink, np.int32)
+    b = np.full((D, width), sink, np.int32)
+    o = np.tile(sink + np.arange(width, dtype=np.int32), (D, 1))
+    lw = np.zeros(D, np.int32)
+    for l in range(D):
+        w = len(rows_a[l])
+        lw[l] = w
+        a[l, :w] = rows_a[l]
+        b[l, :w] = rows_b[l]
+        o[l, :w] = rows_o[l]
+    ports = {name: [phys[v] for v in vals] for name, vals in out_val.items()}
+    in_cells = {name: [phys[c] for c in cells]
+                for name, cells in in_port_cells.items()}
+    return LevelSchedule(
+        n_cells=n_phys, sink=sink, one_cell=one_cell, ports=ports,
+        in_cells=in_cells,
+        in_ports=low.in_ports, out_ports=low.out_ports,
+        a=a, b=b, out=o, level_width=lw,
+        n_gates=len(kept), source_gates=int(is_gate.sum()),
+        source_cells=n0)
+
+
+def memoize_build(fn):
+    """Memoize a ``build_*`` program constructor by its arguments.
+
+    Program construction is pure but slow; sharing one Program instance per
+    parameterization also lets the executor's content-hash compiled-program
+    cache hit without rehashing (kernels.ops memoizes keys per instance).
+    """
+    return functools.lru_cache(maxsize=None)(fn)

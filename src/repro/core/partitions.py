@@ -74,6 +74,7 @@ class PartitionedBuilder:
     def input(self, name: str, partitions: Sequence[int]) -> List[int]:
         cells = [self.palloc(p) for p in partitions]
         self.b.ports[name] = cells
+        self.b.in_port_names.add(name)
         return cells
 
     def output(self, name: str, cells):
@@ -187,7 +188,8 @@ class PartitionedBuilder:
 
     def finish(self) -> Program:
         return Program(self.b.n_cells, self.b.instrs, dict(self.b.ports),
-                       parallel_steps=self._steps)
+                       parallel_steps=self._steps,
+                       in_ports=self.b.in_port_names)
 
 
 # --------------------------------------------------------------------------

@@ -1,108 +1,350 @@
-"""jit'd wrappers around the PIM executor kernel: padding, program-array
-caching, and row-major <-> packed-column bridging."""
+"""jit'd wrappers around the PIM executor kernels: compiled-program caching,
+padding, and row-major <-> packed-column bridging.
+
+Pipeline (DESIGN.md §5): Program -> (content-hash cache) levelized schedule /
+lowered arrays -> pack_rows -> kernel -> unpack_rows.  All host-side
+bridging is fully vectorized: packing and unpacking move whole ports per
+numpy call (one 32-bit limb loop for arbitrarily wide ports), never per cell
+or per row.
+"""
 
 from __future__ import annotations
 
-from typing import Dict
+import dataclasses
+import hashlib
+import weakref
+from typing import Dict, Iterable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from .pim_exec import TILE_W, pim_exec_padded
-from .ref import pim_exec_ref
+from ..core.gates import LevelSchedule, levelize
+from .pim_exec import (TILE_W, pim_exec_level_fused,
+                       pim_exec_level_padded_io, pim_exec_padded)
+from .ref import (pim_exec_ref, pim_exec_ref_level_fused,
+                  pim_exec_ref_level_io)
 
-_prog_cache: Dict[int, tuple] = {}
+_FULL = np.uint32(0xFFFFFFFF)
+
+
+# --------------------------------------------------------------------------
+# content-hash-keyed compiled-program cache
+# --------------------------------------------------------------------------
+#
+# Programs are compiled (NOR-lowered to dense arrays, levelized, shipped to
+# the device) once per *structure*, not per instance: the cache key is a
+# content hash of the instruction stream + ports, so structurally identical
+# programs share compiled artifacts and -- unlike the previous id()-keyed
+# cache -- a dead program's recycled id can never poison the entry of a new
+# one.  Keys are memoized per live instance via a WeakKeyDictionary.
+
+_key_memo: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_compiled: Dict[bytes, "_Compiled"] = {}
+
+
+def content_key(program) -> bytes:
+    """Structural hash of a Program (instrs, ports, cells, schedule hints)."""
+    try:
+        return _key_memo[program]
+    except (KeyError, TypeError):
+        pass
+    h = hashlib.blake2b(digest_size=16)
+    h.update(int(program.n_cells).to_bytes(8, "little"))
+    flat = []
+    for ins in program.instrs:
+        flat.extend((int(ins.op), len(ins.ins)))
+        flat.extend(int(c) for c in ins.ins)
+        flat.extend(int(c) for c in ins.outs)
+        flat.append(-1)
+    h.update(np.asarray(flat, np.int64).tobytes())
+    for name in sorted(program.ports):
+        h.update(name.encode())
+        h.update(b"\x00i" if name in program.in_ports else b"\x00o")
+        h.update(np.asarray(program.ports[name], np.int64).tobytes())
+    if program.parallel_steps is not None:
+        for idxs in program.parallel_steps:
+            h.update(np.asarray(list(idxs) + [-1], np.int64).tobytes())
+    key = h.digest()
+    try:
+        _key_memo[program] = key
+    except TypeError:
+        pass
+    return key
+
+
+def _stacked_cells(cell_lists) -> np.ndarray:
+    """Concatenate per-port cell lists into one int32 index vector."""
+    if not cell_lists:
+        return np.zeros(0, np.int32)
+    return np.concatenate(
+        [np.asarray(c, np.int64) for c in cell_lists]).astype(np.int32)
+
+
+# Dense-schedule width cap: levels wider than this are split into several
+# rows, trading a few extra fori_loop trips for much less sink padding (the
+# sweet spot on CPU interpret mode; see ISSUE 1 / BENCH_1.json).
+LEVEL_MAX_WIDTH = 8
+
+
+@dataclasses.dataclass
+class _Compiled:
+    """Lazily-populated per-structure compilation artifacts."""
+    arrays: Optional[tuple] = None              # (ops, a, b, o, n_cells)
+    schedule: Optional[LevelSchedule] = None
+    sched_dev: Optional[tuple] = None           # (la, lb, lo, out_idx, names)
+    in_idx: Optional[dict] = None               # input-name tuple -> indices
+
+    def get_arrays(self, program):
+        if self.arrays is None:
+            self.arrays = program.to_arrays()
+        return self.arrays
+
+    def get_schedule(self, program) -> LevelSchedule:
+        if self.schedule is None:
+            self.schedule = levelize(program, max_width=LEVEL_MAX_WIDTH)
+        return self.schedule
+
+    def get_sched_dev(self, program):
+        if self.sched_dev is None:
+            s = self.get_schedule(program)
+            names = sorted(s.out_ports or s.ports)
+            cells = _stacked_cells([s.ports[n] for n in names])
+            self.sched_dev = (jnp.asarray(s.a), jnp.asarray(s.b),
+                              jnp.asarray(s.out), jnp.asarray(cells), names)
+        return self.sched_dev
+
+    def get_in_idx(self, program, in_names):
+        if self.in_idx is None:
+            self.in_idx = {}
+        key = tuple(in_names)
+        if key not in self.in_idx:
+            s = self.get_schedule(program)
+            cells = _stacked_cells([s.pack_cells(n) for n in in_names])
+            self.in_idx[key] = jnp.asarray(cells)
+        return self.in_idx[key]
+
+
+def compiled(program) -> _Compiled:
+    key = content_key(program)
+    entry = _compiled.get(key)
+    if entry is None:
+        entry = _compiled[key] = _Compiled()
+    return entry
 
 
 def program_arrays(program):
-    """(ops, a, b, out, n_cells) of the NOR-lowered program, cached."""
-    key = id(program)
-    if key not in _prog_cache:
-        _prog_cache[key] = program.to_arrays()
-    return _prog_cache[key]
+    """(ops, a, b, out, n_cells) of the NOR-lowered program, cached by
+    structural content hash."""
+    return compiled(program).get_arrays(program)
 
 
-def _pad_words(n: int) -> int:
-    return max(TILE_W, ((n + TILE_W - 1) // TILE_W) * TILE_W)
+def program_schedule(program) -> LevelSchedule:
+    """The levelized execution schedule of ``program``, cached by structural
+    content hash."""
+    return compiled(program).get_schedule(program)
 
 
-def _port_bits(cells, vals, pad_rows):
-    """bit matrix [pad_rows, len(cells)] for one port."""
-    wide = len(cells) > 63
-    out = np.zeros((pad_rows, len(cells)), np.uint32)
-    if wide:
-        for r, v in enumerate(vals):
-            v = int(v)
-            for k in range(len(cells)):
-                out[r, k] = (v >> k) & 1
+# --------------------------------------------------------------------------
+# row-major <-> packed-column bridges (fully vectorized)
+# --------------------------------------------------------------------------
+
+def _ports_of(ports_or_program) -> Dict[str, list]:
+    return getattr(ports_or_program, "ports", ports_or_program)
+
+
+def _value_limbs(vals, n_limbs: int, pad_rows: int) -> np.ndarray:
+    """uint32[pad_rows, n_limbs] little-endian 32-bit limbs of per-row
+    integers.  Wide ports (> 64 bits) go through an object-dtype array so
+    arbitrary-precision values split without any per-row Python loop."""
+    vals = np.asarray(vals)
+    n = len(vals)
+    limbs = np.zeros((pad_rows, n_limbs), np.uint32)
+    if n_limbs <= 2 and vals.dtype != object:
+        v = np.zeros(pad_rows, np.uint64)
+        v[:n] = vals.astype(np.uint64)
+        for j in range(n_limbs):
+            limbs[:, j] = ((v >> np.uint64(32 * j))
+                           & np.uint64(0xFFFFFFFF)).astype(np.uint32)
     else:
-        vv = np.zeros(pad_rows, np.uint64)
-        vv[: len(vals)] = np.asarray(vals, np.uint64)
-        ks = np.arange(len(cells), dtype=np.uint64)
-        out[:] = ((vv[:, None] >> ks[None, :]) & np.uint64(1)).astype(np.uint32)
-    return out
+        v = np.zeros(pad_rows, object)
+        v[:n] = vals.astype(object)
+        for j in range(n_limbs):
+            limbs[:, j] = ((v >> (32 * j)) & 0xFFFFFFFF).astype(np.uint32)
+    return limbs
 
 
-def pack_rows(values: Dict[str, np.ndarray], program, n_rows: int,
-              n_cells: int) -> np.ndarray:
+def _le_bytes(arr: np.ndarray) -> np.ndarray:
+    """Little-endian uint8 view of an integer array (copy only on BE hosts),
+    so bit k of element e is bit k%8 of byte e*itemsize + k//8."""
+    return np.ascontiguousarray(arr).astype(
+        arr.dtype.newbyteorder("<"), copy=False).view(np.uint8)
+
+
+def _n_words(n_rows: int, pad_to: int) -> int:
+    return max(((n_rows + 31) // 32 + pad_to - 1) // pad_to * pad_to, pad_to)
+
+
+def _pack_port_words(vals, nc: int, n_words: int) -> np.ndarray:
+    """Column-major words (uint32[nc, n_words]) of one port's per-row
+    integers; bit w of word i is row 32*i + w."""
+    n_limbs = (nc + 31) // 32
+    limbs = _value_limbs(vals, n_limbs, n_words * 32)
+    # [pad_rows, 32 * n_limbs] -> cell-major [nc, pad_rows] bit matrix
+    bits = np.unpackbits(_le_bytes(limbs), axis=1, bitorder="little")
+    cols = np.ascontiguousarray(bits.T[:nc])
+    words = np.packbits(cols.reshape(nc, n_words, 32), axis=2,
+                        bitorder="little")                   # [nc, n_words, 4]
+    return words.reshape(nc, -1).view("<u4")
+
+
+def pack_rows(values: Dict[str, np.ndarray], ports, n_rows: int,
+              n_cells: int, one_cell: Optional[int] = None,
+              pad_to: int = TILE_W) -> np.ndarray:
     """Pack per-row port integers into column-major word state
-    (uint32[n_cells, n_words_padded]); bit w of state[c, i] = cell c of
-    row 32*i + w."""
-    n_words = _pad_words((n_rows + 31) // 32)
+    (uint32[n_cells, n_words]); bit w of state[c, i] = cell c of row
+    32*i + w.  ``ports`` is a name -> cell-list mapping (or any object with
+    a ``.ports`` attribute).  ``one_cell``, when given, is filled with ones
+    (the LevelSchedule's folded INIT1 constant).
+
+    Bit transposition runs entirely in C (unpackbits/packbits on
+    little-endian byte views); the only Python loop is over 32-bit limbs of
+    arbitrarily wide ports.
+    """
+    ports = _ports_of(ports)
+    n_words = _n_words(n_rows, pad_to)
     state = np.zeros((n_cells, n_words), np.uint32)
-    shifts = np.arange(32, dtype=np.uint32)
+    if one_cell is not None:
+        state[one_cell] = _FULL
     for name, vals in values.items():
-        cells = program.ports[name]
-        bits = _port_bits(cells, vals, n_words * 32)
-        for k, cell in enumerate(cells):
-            w = (bits[:, k].reshape(-1, 32) << shifts).sum(axis=1,
-                                                           dtype=np.uint32)
-            state[cell] = w
+        cells = np.asarray(ports[name], np.int64)
+        state[cells] = _pack_port_words(vals, len(cells), n_words)
     return state
 
 
-def unpack_rows(state: np.ndarray, program, n_rows: int
+def unpack_rows(state: np.ndarray, ports, n_rows: int,
+                names: Optional[Iterable[str]] = None
                 ) -> Dict[str, np.ndarray]:
-    """Inverse of :func:`pack_rows` for every port (row-major ints)."""
+    """Inverse of :func:`pack_rows` (row-major ints); ``names`` restricts
+    which ports are unpacked (default: all).  Ports wider than 63 cells come
+    back as object arrays of Python ints.
+
+    ``state`` may be a device (jnp) array: the port rows are gathered with
+    one indexed read and transferred once.
+    """
+    ports = _ports_of(ports)
+    names = list(ports if names is None else names)
+    all_cells = np.concatenate(
+        [np.asarray(ports[n], np.int64) for n in names]) if names else \
+        np.zeros(0, np.int64)
+    sub = np.asarray(state[all_cells])        # one gather + host transfer
+    return _unpack_sub(sub, [(n, len(ports[n])) for n in names], n_rows)
+
+
+def _unpack_sub(sub: np.ndarray, name_widths, n_rows: int
+                ) -> Dict[str, np.ndarray]:
+    """Unpack pre-gathered port rows (stacked in ``name_widths`` order)."""
     out = {}
-    for name, cells in program.ports.items():
-        wide = len(cells) > 63
-        acc = [0] * n_rows if wide else np.zeros(n_rows, np.uint64)
-        for k, cell in enumerate(cells):
-            w = np.asarray(state[cell])
-            bits = ((w[:, None] >> np.arange(32, dtype=np.uint32)) & 1
-                    ).reshape(-1)[:n_rows]
-            if wide:
-                for r in np.nonzero(bits)[0]:
-                    acc[r] |= 1 << k
-            else:
-                acc |= bits.astype(np.uint64) << np.uint64(k)
-        out[name] = np.array(acc, object) if wide else acc
+    off = 0
+    for name, nc in name_widths:
+        w = sub[off:off + nc]                                  # [nc, n_words]
+        off += nc
+        n_limbs = (nc + 31) // 32
+        # word bits -> row-major bit matrix [n_rows, nc] -> limb matrix
+        bits = np.unpackbits(_le_bytes(w), axis=1,
+                             bitorder="little")[:, :n_rows]
+        by = np.packbits(np.ascontiguousarray(bits.T), axis=1,
+                         bitorder="little")                # [n_rows, ceil/8]
+        if by.shape[1] != 4 * n_limbs:
+            pad = np.zeros((n_rows, 4 * n_limbs), np.uint8)
+            pad[:, :by.shape[1]] = by
+            by = pad
+        limbs = by.view("<u4")                             # [n_rows, n_limbs]
+        if nc > 63:
+            acc = np.zeros(n_rows, object)
+            for j in range(n_limbs):
+                acc |= limbs[:, j].astype(object) << (32 * j)
+            out[name] = acc
+        else:
+            acc = limbs[:, 0].astype(np.uint64)
+            if n_limbs > 1:
+                acc |= limbs[:, 1].astype(np.uint64) << np.uint64(32)
+            out[name] = acc
     return out
 
 
+# --------------------------------------------------------------------------
+# execution
+# --------------------------------------------------------------------------
+
 def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
-                backend: str = "pallas") -> Dict[str, np.ndarray]:
+                backend: str = "pallas", levelized: bool = True
+                ) -> Dict[str, np.ndarray]:
     """Element-parallel execution of a gate program over ``n_rows`` rows.
 
     backend: 'pallas' (interpret-mode kernel), 'ref' (jnp oracle) or
     'numpy' (the cycle-accurate simulator's packed executor, abstract IR).
+    'pallas' and 'ref' consume the levelized schedule by default;
+    ``levelized=False`` selects the original gate-serial executors.
+
+    Returns the program's output ports (all ports when the program does not
+    declare port directions).
     """
     if backend == "numpy":
-        state = pack_rows(inputs, program, n_rows, program.n_cells)
+        state = pack_rows(inputs, program.ports, n_rows, program.n_cells,
+                          pad_to=1)
         st = np.ascontiguousarray(state.T)
         program.exec_packed(st)
-        return unpack_rows(st.T, program, n_rows)
-    ops, a, b, o, n_cells = program_arrays(program)
-    state = pack_rows(inputs, program, n_rows, n_cells)
+        return unpack_rows(st.T, program.ports, n_rows,
+                           names=program.out_ports)
+    if backend not in ("pallas", "ref"):
+        raise ValueError(backend)
+    comp = compiled(program)
+    if levelized:
+        sched = comp.get_schedule(program)
+        pad_to = TILE_W if backend == "pallas" else 1
+        n_words = _n_words(n_rows, pad_to)
+        la, lb, lo, out_idx, names = comp.get_sched_dev(program)
+        in_names = sorted(inputs)
+        in_idx = comp.get_in_idx(program, in_names)
+        one_cell = None if sched.one_cell is None else int(sched.one_cell)
+        in_widths = tuple(len(sched.ports[n]) for n in in_names)
+        out_widths = tuple(len(sched.ports[n]) for n in names)
+        vals = [np.asarray(inputs[n]) for n in in_names]
+        if (vals and max(in_widths + out_widths, default=0) <= 32
+                and all(v.dtype != object for v in vals)):
+            # fused fast path: the bit transposes run inside the executor's
+            # XLA program; only (n_ports, n_rows) uint32 cross the boundary
+            in_vals = np.zeros((len(vals), n_words * 32), np.uint32)
+            for p, v in enumerate(vals):
+                in_vals[p, :len(v)] = v.astype(np.uint32)
+            fn = (pim_exec_ref_level_fused if backend == "ref"
+                  else pim_exec_level_fused)
+            outs = np.asarray(fn(
+                jnp.asarray(in_vals), in_idx, la, lb, lo, out_idx,
+                n_cells=sched.n_cells, one_cell=one_cell,
+                in_widths=in_widths, out_widths=out_widths))
+            return {n: outs[p, :n_rows].astype(np.uint64)
+                    for p, n in enumerate(names)}
+        in_rows = (np.vstack(
+            [_pack_port_words(inputs[n], len(sched.ports[n]), n_words)
+             for n in in_names])
+            if in_names else np.zeros((0, n_words), np.uint32))
+        exec_fn = (pim_exec_ref_level_io if backend == "ref"
+                   else pim_exec_level_padded_io)
+        sub = exec_fn(jnp.asarray(in_rows), in_idx, la, lb, lo, out_idx,
+                      n_cells=sched.n_cells, one_cell=one_cell)
+        return _unpack_sub(np.asarray(sub),
+                           [(n, len(sched.ports[n])) for n in names], n_rows)
+    ops, a, b, o, n_cells = comp.get_arrays(program)
+    pad_to = TILE_W if backend == "pallas" else 1
+    state = pack_rows(inputs, program.ports, n_rows, n_cells, pad_to=pad_to)
     if backend == "ref":
         final = np.asarray(pim_exec_ref(
             jnp.asarray(state), jnp.asarray(ops), jnp.asarray(a),
             jnp.asarray(b), jnp.asarray(o)))
-    elif backend == "pallas":
+    else:
         final = np.asarray(pim_exec_padded(
             jnp.asarray(state), jnp.asarray(ops), jnp.asarray(a),
             jnp.asarray(b), jnp.asarray(o), n_cells=n_cells))
-    else:
-        raise ValueError(backend)
-    return unpack_rows(final, program, n_rows)
+    return unpack_rows(final, program.ports, n_rows,
+                       names=program.out_ports)

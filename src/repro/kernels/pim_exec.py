@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: PIM gate-program executor.
+"""Pallas TPU kernels: PIM gate-program executors.
 
 TPU adaptation of the paper's core insight (DESIGN.md §2): a PIM column of r
 row-bits is a dense bitvector, and an arithmetic algorithm is a straight-line
@@ -9,10 +9,23 @@ bit-ops/byte -- the memory-wall argument of the paper, restated for the
 TPU memory hierarchy (HBM -> VMEM -> VREG).
 
 Layout: ``state[cell, word]`` (uint32), 32 rows packed per word along the
-lane dimension; one grid step owns a ``(n_cells, TILE_W)`` VMEM block.  The
-lowered program (ops/a/b/out int32 arrays, ops in {INIT0=0, INIT1=1, NOT=2,
-NOR=3}) arrives via scalar prefetch and drives a ``fori_loop``; NOT is NOR
-with b==a, so the compute is a single branchless select per gate.
+lane dimension; one grid step owns a ``(n_cells, TILE_W)`` VMEM block.
+
+Two executors (DESIGN.md §5):
+
+  * :func:`pim_exec_padded` -- gate-serial.  The lowered program (ops/a/b/out
+    int32 arrays, ops in {INIT0=0, INIT1=1, NOT=2, NOR=3}) arrives via scalar
+    prefetch and drives a ``fori_loop``; NOT is NOR with b==a, so the compute
+    is a single branchless select per gate.  One dynamic row slice per gate:
+    this lowers on real TPU hardware today.
+  * :func:`pim_exec_level_padded` -- levelized.  The LevelSchedule's dense
+    (n_levels, width) index matrices drive a ``fori_loop`` over *levels*;
+    each iteration gathers the level's operand rows, NORs them as one
+    (width, TILE_W) block and scatters the results.  The gather/scatter use
+    vector indices, which Mosaic does not lower for uint32 row gathers yet,
+    so this path requires ``interpret=True`` (the mode every CPU test and
+    benchmark here runs) -- on hardware, fall back to the gate-serial kernel
+    or precompile per-level static slices.
 """
 
 from __future__ import annotations
@@ -65,3 +78,78 @@ def pim_exec_padded(state, ops, a, b, o, *, n_cells, interpret=True):
         out_shape=jax.ShapeDtypeStruct(state.shape, jnp.uint32),
         interpret=interpret,
     )(ops, a, b, o, state)
+
+
+def _pim_level_kernel(la_ref, lb_ref, lo_ref, state_ref, out_ref):
+    n_levels = la_ref.shape[0]
+    st0 = state_ref[...]
+    if n_levels == 0:           # gate-free (passthrough) program
+        out_ref[...] = st0
+        return
+
+    def body(l, st):
+        av = jnp.take(st, la_ref[l], axis=0)      # (width, TILE_W)
+        bv = jnp.take(st, lb_ref[l], axis=0)
+        return st.at[lo_ref[l]].set(~(av | bv), mode="promise_in_bounds",
+                                    unique_indices=True)
+
+    out_ref[...] = jax.lax.fori_loop(0, n_levels, body, st0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_cells", "interpret"))
+def pim_exec_level_padded(state, la, lb, lo, out_idx=None, *, n_cells,
+                          interpret=True):
+    """Run a levelized NOR schedule over ``state`` (uint32[n_cells,
+    n_words]), n_words a multiple of TILE_W.  ``la``/``lb``/``lo`` are the
+    LevelSchedule's dense int32[n_levels, width] index matrices (padding
+    lanes write distinct sink cells, keeping scatter indices unique).
+    Returns the final state, or only the rows in ``out_idx`` (the port
+    cells) when given."""
+    n_words = state.shape[1]
+    assert state.shape[0] == n_cells and n_words % TILE_W == 0
+    grid = (n_words // TILE_W,)
+    final = pl.pallas_call(
+        _pim_level_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[pl.BlockSpec((n_cells, TILE_W), lambda i, *_: (0, i))],
+            out_specs=pl.BlockSpec((n_cells, TILE_W), lambda i, *_: (0, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(state.shape, jnp.uint32),
+        interpret=interpret,
+    )(la, lb, lo, state)
+    return final if out_idx is None else final[out_idx]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_cells", "one_cell", "in_widths", "out_widths", "interpret"))
+def pim_exec_level_fused(in_vals, in_idx, la, lb, lo, out_idx, *,
+                         n_cells, one_cell, in_widths, out_widths,
+                         interpret=True):
+    """Fully fused levelized Pallas executor (ports of <= 32 cells): the
+    row-major <-> column-major bit transposes run on device around the
+    kernel, so only (n_ports, n_rows) uint32 values cross the boundary."""
+    from .ref import assemble_state, pack_columns, unpack_columns
+    st = assemble_state(pack_columns(in_vals, in_widths), in_idx,
+                        in_vals.shape[1] // 32,
+                        n_cells=n_cells, one_cell=one_cell)
+    final = pim_exec_level_padded(st, la, lb, lo, n_cells=n_cells,
+                                  interpret=interpret)
+    return unpack_columns(final[out_idx], out_widths)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_cells", "one_cell", "interpret"))
+def pim_exec_level_padded_io(in_rows, in_idx, la, lb, lo, out_idx, *,
+                             n_cells, one_cell=None, interpret=True):
+    """Levelized Pallas executor with on-device state assembly: ships in
+    only the input port rows (uint32[k_in, n_words]), materializes the zero
+    state and the folded INIT1 constant device-side, and returns only the
+    output port rows."""
+    from .ref import assemble_state
+    st = assemble_state(in_rows, in_idx, in_rows.shape[1],
+                        n_cells=n_cells, one_cell=one_cell)
+    final = pim_exec_level_padded(st, la, lb, lo, n_cells=n_cells,
+                                  interpret=interpret)
+    return final[out_idx]

@@ -1,4 +1,14 @@
-"""Pure-jnp oracle for the PIM gate-program executor kernel."""
+"""Pure-jnp oracles for the PIM gate-program executor kernels.
+
+Two execution strategies, matching kernels.pim_exec:
+
+  * :func:`pim_exec_ref` -- gate-serial ``fori_loop`` over the lowered NOR
+    stream (one row slice per gate), the original executor.
+  * :func:`pim_exec_ref_level` -- levelized: one ``fori_loop`` iteration per
+    *level* of independent gates, executed as a vectorized
+    gather -> NOR -> scatter over (gates_in_level, n_words) blocks.  Depth
+    is the critical path of the netlist instead of its gate count.
+"""
 
 from __future__ import annotations
 
@@ -26,3 +36,108 @@ def pim_exec_ref(state, ops, a, b, o):
         return jax.lax.dynamic_update_slice_in_dim(st, res, o[i], axis=0)
 
     return jax.lax.fori_loop(0, ops.shape[0], body, state)
+
+
+def _level_loop(st, la, lb, lo):
+    """fori_loop over levels: one vectorized gather -> NOR -> scatter per
+    iteration.  Every lane computes ``out <- ~(a | b)`` (NOT has b == a;
+    INIT gates were folded into the initial state).  Padding lanes read the
+    schedule's first sink cell and write *distinct* sink cells (out == sink
+    + lane) -- that per-level output uniqueness is what licenses
+    ``unique_indices=True`` below; real cells are untouched."""
+    if la.shape[0] == 0:        # gate-free (passthrough) program
+        return st
+
+    def body(l, s):
+        av = s[la[l]]
+        bv = s[lb[l]]
+        return s.at[lo[l]].set(~(av | bv), mode="promise_in_bounds",
+                               unique_indices=True)
+
+    return jax.lax.fori_loop(0, la.shape[0], body, st)
+
+
+@jax.jit
+def pim_exec_ref_level(state, la, lb, lo, out_idx=None):
+    """Levelized executor.
+
+    ``state``: uint32[n_cells, n_words]; ``la``/``lb``/``lo``: int32
+    [n_levels, width] physical-cell index matrices (LevelSchedule dense
+    form).  ``out_idx`` (optional int32[k]): return only these state rows
+    -- the port cells -- so a fraction of the state crosses the device
+    boundary.
+    """
+    final = _level_loop(state, la, lb, lo)
+    return final if out_idx is None else final[out_idx]
+
+
+def assemble_state(in_rows, in_idx, n_words, *, n_cells, one_cell):
+    """Materialize the packed state device-side: zeros, the input port rows
+    scattered at ``in_idx``, and the folded INIT1 constant cell.  Shared by
+    every on-device-assembly executor (ref and Pallas, io and fused)."""
+    st = jnp.zeros((n_cells, n_words), jnp.uint32)
+    if in_rows.shape[0]:
+        st = st.at[in_idx].set(in_rows, mode="promise_in_bounds")
+    if one_cell is not None:
+        st = st.at[one_cell].set(jnp.uint32(_FULL))
+    return st
+
+
+@functools.partial(jax.jit, static_argnames=("n_cells", "one_cell"))
+def pim_exec_ref_level_io(in_rows, in_idx, la, lb, lo, out_idx, *,
+                          n_cells, one_cell=None):
+    """Levelized executor with on-device state assembly: only the input
+    port rows (uint32[k_in, n_words]) are shipped in, the zero state and the
+    folded INIT1 constant cell are materialized device-side, and only the
+    output port rows come back."""
+    st = assemble_state(in_rows, in_idx, in_rows.shape[1],
+                        n_cells=n_cells, one_cell=one_cell)
+    return _level_loop(st, la, lb, lo)[out_idx]
+
+
+def pack_columns(in_vals, in_widths):
+    """In-jit bit transpose, row-major -> column-major: per-row port values
+    (uint32[n_ports, n_words*32]) to stacked port cell rows
+    (uint32[sum(widths), n_words]).  XLA fuses the expand/shift/reduce, so
+    no bit matrix is ever materialized (ports of <= 32 cells)."""
+    n_words = in_vals.shape[1] // 32
+    v = in_vals.reshape(in_vals.shape[0], n_words, 32)
+    wshift = jnp.arange(32, dtype=jnp.uint32)
+    rows = []
+    for p, w in enumerate(in_widths):
+        cells = jnp.arange(w, dtype=jnp.uint32)
+        bits = (v[p][None] >> cells[:, None, None]) & jnp.uint32(1)
+        rows.append((bits << wshift).sum(axis=2, dtype=jnp.uint32))
+    return jnp.concatenate(rows, axis=0)
+
+
+def unpack_columns(sub, out_widths):
+    """In-jit inverse of :func:`pack_columns`: stacked port cell rows
+    (uint32[sum(widths), n_words]) to per-row port values
+    (uint32[n_ports, n_words*32])."""
+    wshift = jnp.arange(32, dtype=jnp.uint32)
+    outs = []
+    off = 0
+    for w in out_widths:
+        block = sub[off:off + w]                           # (w, n_words)
+        off += w
+        bits = (block[:, :, None] >> wshift) & jnp.uint32(1)
+        cells = jnp.arange(w, dtype=jnp.uint32)
+        vals = (bits << cells[:, None, None]).sum(axis=0, dtype=jnp.uint32)
+        outs.append(vals.reshape(-1))
+    return jnp.stack(outs)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_cells", "one_cell", "in_widths", "out_widths"))
+def pim_exec_ref_level_fused(in_vals, in_idx, la, lb, lo, out_idx, *,
+                             n_cells, one_cell, in_widths, out_widths):
+    """Fully fused levelized executor for programs whose ports all fit in
+    32 cells: bit-transposes the row-major port values on device, assembles
+    the state, runs the level loop and transposes the outputs back -- one
+    XLA executable, two (n_ports, n_rows)-sized transfers."""
+    st = assemble_state(pack_columns(in_vals, in_widths), in_idx,
+                        in_vals.shape[1] // 32,
+                        n_cells=n_cells, one_cell=one_cell)
+    final = _level_loop(st, la, lb, lo)
+    return unpack_columns(final[out_idx], out_widths)

@@ -1,0 +1,104 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` API surface this
+suite uses (``given``, ``settings``, ``strategies.integers/lists/
+sampled_from/data``).
+
+Installed by ``conftest.py`` as the ``hypothesis`` module only when the real
+package is missing, so `pytest -x -q` collects and runs on a bare
+environment.  Example generation is seeded per test name (zlib.crc32), so
+runs are reproducible; the first two examples pin every strategy to its
+min/max boundary, the rest are pseudo-random.
+"""
+
+from __future__ import annotations
+
+
+import random
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+
+def integers(min_value, max_value):
+    def sample(rng, idx):
+        if idx == 0:
+            return min_value
+        if idx == 1:
+            return max_value
+        return rng.randint(min_value, max_value)
+    return _Strategy(sample)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+
+    def sample(rng, idx):
+        return elements[idx % len(elements)] if idx < 2 \
+            else rng.choice(elements)
+    return _Strategy(sample)
+
+
+def lists(elements, min_size=0, max_size=10):
+    def sample(rng, idx):
+        size = min_size if idx == 0 else (
+            max_size if idx == 1 else rng.randint(min_size, max_size))
+        return [elements._sample(rng, 2 + rng.randint(0, 1 << 30))
+                for _ in range(size)]
+    return _Strategy(sample)
+
+
+class _DataStrategy:
+    pass
+
+
+def data():
+    return _DataStrategy()
+
+
+class _DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy._sample(self._rng, 2 + self._rng.randint(0, 1 << 30))
+
+
+def settings(max_examples=20, **_kwargs):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # the runner must expose a ZERO-argument signature (pytest would
+        # otherwise read the wrapped function's parameters as fixtures)
+        def runner():
+            # @settings may sit outside @given (attribute lands on runner)
+            # or inside (attribute lands on fn); honor both orders
+            n = getattr(runner, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", 20))
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for idx in range(n):
+                vals = []
+                for s in strategies:
+                    if isinstance(s, _DataStrategy):
+                        vals.append(_DataObject(rng))
+                    else:
+                        vals.append(s._sample(rng, idx))
+                fn(*vals)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.lists = lists
+strategies.sampled_from = sampled_from
+strategies.data = data

@@ -1,0 +1,32 @@
+"""Smoke test for the benchmark harness: the --json machine-readable mode
+(the per-PR perf trajectory format) and the --only section filter."""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_bench_json_smoke(tmp_path):
+    out = tmp_path / "bench.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "kernel",
+         "--json", str(out)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert proc.stdout.startswith("name,us_per_call,derived")
+
+    doc = json.loads(out.read_text())
+    assert doc["meta"]["suite"] == "aritpim-repro"
+    names = {r["name"] for r in doc["rows"]}
+    assert "kernel/fp16_add_8k_rows" in names
+    for r in doc["rows"]:
+        assert isinstance(r["us_per_call"], (int, float))
+    row = next(r for r in doc["rows"]
+               if r["name"] == "kernel/fp16_add_8k_rows")
+    assert row["levelized"] == 1 and row["levels"] > 0

@@ -1,0 +1,214 @@
+"""Levelized scheduling pass: hazard freedom, DCE/register-allocation
+shrinkage, native-schedule expansion, cost-model invariance, bit-exactness
+vs the abstract oracle."""
+
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import bitparallel as bp
+from repro.core import bitparallel_fp as bpf
+from repro.core import bitserial as bs
+from repro.core import bitserial_fp as bsf
+from repro.core.floatfmt import FP16
+from repro.core.gates import Builder, levelize
+
+PROGRAMS = [
+    ("add16", lambda: bs.build_add(16)),
+    ("mul8", lambda: bs.build_mul(8)),
+    ("div8", lambda: bs.build_div(8)),
+    ("fp16_add", lambda: bsf.build_fp_add(FP16)),
+    ("bp_add16", lambda: bp.build_bp_add(16)),
+    ("bp_mul8", lambda: bp.build_bp_mul(8)),
+    ("bp_fp16_add", lambda: bpf.build_bp_fp_add(FP16)),
+]
+
+
+def _exec_schedule(prog, sched, inputs):
+    """Run a LevelSchedule with the numpy per-level executor and compare
+    every output port against the single-row oracle."""
+    rows = len(next(iter(inputs.values())))
+    state = np.zeros((sched.n_cells, (rows + 31) // 32), np.uint32)
+    if sched.one_cell is not None:
+        state[sched.one_cell] = 0xFFFFFFFF
+    for name, vals in inputs.items():
+        for r, v in enumerate(vals):
+            for k, c in enumerate(sched.pack_cells(name)):
+                if (int(v) >> k) & 1:
+                    state[c, r // 32] |= np.uint32(1 << (r % 32))
+    sched.exec_packed(state)
+    for r in range(rows):
+        want = prog.exec_row({n: int(v[r]) for n, v in inputs.items()})
+        for name in prog.out_ports:
+            got = sum((int(state[c, r // 32]) >> (r % 32) & 1) << k
+                      for k, c in enumerate(sched.ports[name]))
+            assert got == want[name], (name, r)
+
+
+def _rand_inputs(prog, rows, seed):
+    rng = np.random.default_rng(seed)
+    return {n: [int(x) for x in
+                rng.integers(0, 1 << min(len(prog.ports[n]), 62), rows)]
+            for n in prog.in_ports}
+
+
+@pytest.mark.parametrize("name,build", PROGRAMS)
+def test_schedule_bit_exact(name, build):
+    prog = build()
+    sched = levelize(prog)
+    _exec_schedule(prog, sched, _rand_inputs(prog, 7, zlib.crc32(name.encode())))
+
+
+@pytest.mark.parametrize("name,build", PROGRAMS)
+def test_schedule_hazard_free_and_unique_writes(name, build):
+    """Within a level no real gate reads a cell written by that level, and
+    output indices are unique (incl. the distinct-sink padding lanes)."""
+    sched = levelize(build())
+    for l in range(sched.n_levels):
+        outs = sched.out[l]
+        assert len(set(outs.tolist())) == len(outs)
+        w = sched.level_width[l]
+        written = set(outs[:w].tolist())
+        reads = set(sched.a[l, :w].tolist()) | set(sched.b[l, :w].tolist())
+        assert not (written & reads)
+
+
+@pytest.mark.parametrize("name,build", PROGRAMS)
+def test_schedule_preserves_cost_model(name, build):
+    """Levelization is an executor artifact: the paper-facing cost model of
+    the Program must be byte-identical before and after scheduling."""
+    prog = build()
+    before = prog.cost().as_dict()
+    pbefore = prog.parallel_cost()
+    levelize(prog)
+    levelize(prog, reuse_cells=False)
+    assert prog.cost().as_dict() == before
+    after = prog.parallel_cost()
+    if pbefore is None:
+        assert after is None
+    else:
+        assert after.as_dict() == pbefore.as_dict()
+
+
+def test_schedule_shrinks_footprint_and_gates():
+    """Register allocation shrinks the sparse k*cpk partition layouts by an
+    order of magnitude; DCE drops unread gates."""
+    prog = bp.build_bp_add(16)
+    sched = levelize(prog)
+    assert sched.n_cells < sched.source_cells // 4
+    assert sched.n_gates <= sched.source_gates
+    # serial builders already reuse temps aggressively; levelized execution
+    # widens live ranges, so allow a bounded growth there
+    serial = bs.build_add(32)
+    s2 = levelize(serial)
+    assert s2.n_cells <= 2 * s2.source_cells
+
+
+def test_schedule_depth_beats_serial():
+    """The whole point: level count is the critical path, far below the
+    gate count for both serial and parallel builders."""
+    for _, build in PROGRAMS:
+        s = levelize(build())
+        assert s.n_levels < s.n_gates or s.n_gates <= 2
+
+
+def test_native_schedule_matches_parallel_steps():
+    """Native mode consumes the builders' parallel_steps; it stays
+    bit-exact and is never shallower than the hazard (ASAP) schedule."""
+    for build in (lambda: bp.build_bp_add(16), lambda: bp.build_bp_mul(8),
+                  lambda: bpf.build_bp_fp_add(FP16)):
+        prog = build()
+        asap = levelize(prog)
+        native = levelize(prog, mode="native")
+        assert asap.n_levels <= native.n_levels
+        _exec_schedule(prog, native, _rand_inputs(prog, 5, 99))
+
+
+def test_native_schedule_requires_parallel_steps():
+    with pytest.raises(ValueError):
+        levelize(bs.build_add(8), mode="native")
+
+
+def test_max_width_split_is_exact():
+    prog = bsf.build_fp_add(FP16)
+    sched = levelize(prog, max_width=4)
+    assert sched.width <= 4
+    _exec_schedule(prog, sched, _rand_inputs(prog, 5, 3))
+
+
+def test_schedule_without_reuse_is_exact():
+    prog = bs.build_mul(8)
+    sched = levelize(prog, reuse_cells=False)
+    _exec_schedule(prog, sched, _rand_inputs(prog, 5, 4))
+
+
+def test_passthrough_program_schedules():
+    """A program with no gates (output aliases input) levelizes to zero
+    levels and still round-trips through the executor bridge."""
+    b = Builder()
+    x = b.input("x", 8)
+    b.output("z", x)
+    prog = b.finish()
+    sched = levelize(prog)
+    assert sched.n_levels == 0
+    from repro.kernels import ops as kops
+    vals = np.arange(17, dtype=np.uint64) * 3 % 256
+    out = kops.run_program(prog, {"x": vals}, 17, backend="ref")["z"]
+    assert np.array_equal(np.asarray(out, np.uint64), vals)
+
+
+def test_levelized_exec_with_overwritten_input_port():
+    """A program that overwrites an input-port cell must still read the
+    packed *initial* value (inputs pack at in_cells, not the final cells)."""
+    b = Builder()
+    x = b.input("x", 2)
+    y = b.input("y", 2)
+    for i in range(2):
+        b.emit(2, (x[i],), (x[i],))      # G.NOT in place: x[i] <- ~x[i]
+    b.output("z", x)
+    prog = b.finish()
+    sched = levelize(prog)
+    assert sched.in_cells["x"] != sched.ports["x"]
+    _exec_schedule(prog, sched, {"x": [1, 2, 3], "y": [0, 0, 0]})
+    from repro.kernels import ops as kops
+    import numpy as np
+    xs = np.array([1, 2, 3], np.uint64)
+    ys = np.zeros(3, np.uint64)
+    want = kops.run_program(prog, {"x": xs, "y": ys}, 3, backend="numpy")["z"]
+    for backend in ("ref", "pallas"):
+        got = kops.run_program(prog, {"x": xs, "y": ys}, 3,
+                               backend=backend)["z"]
+        assert np.array_equal(np.asarray(got), np.asarray(want)), backend
+
+
+def test_run_program_no_input_ports():
+    """Constant-generator programs (no input ports) execute on the default
+    levelized path instead of crashing in the fused bridge."""
+    b = Builder()
+    ones = [b.const(1) for _ in range(3)]
+    zero = b.const(0)
+    b.output("z", ones + [zero])
+    prog = b.finish()
+    from repro.kernels import ops as kops
+    for backend in ("ref", "pallas", "numpy"):
+        out = kops.run_program(prog, {}, 5, backend=backend)["z"]
+        assert np.array_equal(np.asarray(out, np.uint64),
+                              np.full(5, 0b0111, np.uint64)), backend
+
+
+def test_handbuilt_program_packs_at_initial_cells():
+    """Programs constructed without port directions (Program(...) directly)
+    still pack inputs at initial-value cells on the levelized path, even
+    when an instruction overwrites a port cell."""
+    from repro.core.gates import G, Instr, Program
+    from repro.kernels import ops as kops
+    # z[c] <- ~x[c] written IN PLACE over the x/z shared cells
+    instrs = [Instr(G.NOT, (c,), (c,)) for c in range(4)]
+    prog = Program(4, instrs, {"x": [0, 1, 2, 3], "z": [0, 1, 2, 3]})
+    xs = np.array([0b0101, 0b0011], np.uint64)
+    want = kops.run_program(prog, {"x": xs}, 2, backend="ref",
+                            levelized=False)["z"]
+    got = kops.run_program(prog, {"x": xs}, 2, backend="ref")["z"]
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.array_equal(np.asarray(got, np.uint64), (~xs) & 0xF)
