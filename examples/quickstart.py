@@ -1,46 +1,59 @@
-"""Quickstart: the AritPIM suite end to end.
+"""Quickstart: the AritPIM suite end to end, through the ufunc frontend.
 
-Runs every arithmetic family on the element-parallel PIM machine (one
-shared gate program, thousands of rows), via the Pallas executor, and
-prints latency/energy from the memristive device model.
+Every arithmetic family runs on the element-parallel PIM machine (one
+shared gate program, thousands of rows) via ``repro.pim_ufunc`` -- arrays
+in, arrays out, streamed through the chunked executor -- then latency and
+energy are reported from the memristive device model.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
+from repro import pim_ufunc as pim
 from repro.core import bitserial, bitserial_fp, bitparallel
 from repro.core.device_model import GPU_DEFAULT, PIM_DEFAULT
-from repro.core.floatfmt import FP32
-from repro.core.pim_numerics import PIMVectorUnit
+from repro.core.floatfmt import BF16, FP32
 
 rng = np.random.default_rng(0)
-unit = PIMVectorUnit(backend="pallas")
 
 # --- integer vectors, one program, element-parallel
 x = rng.integers(0, 2**16, 1000).astype(np.uint16)
 y = rng.integers(0, 2**16, 1000).astype(np.uint16)
-assert np.array_equal(unit.add(x, y), x.astype(np.uint64) + y)
-print("int16 add: 1000 rows, bit-exact")
+assert np.array_equal(pim.add(x, y), x.astype(np.uint64) + y)
+assert np.array_equal(pim.mul(x, y), x.astype(np.uint64) * y)
+d = rng.integers(1, 2**16, 1000).astype(np.uint16)
+q, r = pim.div(x, d)
+assert np.array_equal(q, x.astype(np.uint64) // d)
+assert np.array_equal(r, x.astype(np.uint64) % d)
+print("int16 add/mul/div: 1000 rows, bit-exact")
 
 # --- fp32, exact IEEE RNE
 a = rng.standard_normal(512).astype(np.float32)
 b = rng.standard_normal(512).astype(np.float32)
-for op in ("add", "mul", "div"):
-    got = getattr(unit, op)(a, b)
-    want = {"add": a + b, "mul": a * b, "div": a / b}[op]
+for op, want in [("fp_add", a + b), ("fp_sub", a - b),
+                 ("fp_mul", a * b), ("fp_div", a / b)]:
+    got = getattr(pim, op)(a, b)
     assert np.array_equal(got, want.astype(np.float32))
-    print(f"fp32 {op}: 512 rows, bit-exact vs numpy (IEEE RNE)")
+    print(f"fp32 {op[3:]}: 512 rows, bit-exact vs numpy (IEEE RNE)")
+
+# --- bf16 has no native numpy dtype: bit-pattern arrays + fmt=
+xb = BF16.random_bits(rng, 256, emin=120, emax=132).astype(np.uint64)
+yb = BF16.random_bits(rng, 256, emin=120, emax=132).astype(np.uint64)
+zb = pim.fp_add(xb, yb, fmt="bf16")
+assert all(int(z) == BF16.op_exact("add", int(p), int(q)) for z, p, q
+           in zip(zb, xb, yb))
+print("bf16 add: 256 rows, bit-exact vs the exact rational oracle")
 
 # --- latency & throughput on the memristive case study (paper Fig. 9)
-pim = PIM_DEFAULT
+pim_dev = PIM_DEFAULT
 for name, prog in [("int32 add", bitserial.build_add(32)),
                    ("fp32 add", bitserial_fp.build_fp_add(FP32)),
                    ("int32 add (bit-parallel)",
                     bitparallel.build_bp_add(32))]:
     cost = prog.parallel_cost() or prog.cost()
-    thr = pim.throughput_ops(cost)
-    print(f"{name:26s}: {pim.cycles(cost):6d} cycles "
-          f"= {pim.latency_s(cost)*1e6:7.2f} us, "
-          f"{thr/1e9:9.1f} GOPS over {pim.parallel_rows/2**20:.0f} Mi rows "
+    thr = pim_dev.throughput_ops(cost)
+    print(f"{name:26s}: {pim_dev.cycles(cost):6d} cycles "
+          f"= {pim_dev.latency_s(cost)*1e6:7.2f} us, "
+          f"{thr/1e9:9.1f} GOPS over {pim_dev.parallel_rows/2**20:.0f} Mi rows "
           f"({thr / GPU_DEFAULT.throughput_ops(4):6.1f}x the GPU roofline)")

@@ -102,9 +102,11 @@ class Program:
 
     @property
     def out_ports(self) -> frozenset:
-        """Names of the result ports; all ports when direction is unknown."""
-        outs = frozenset(n for n in self.ports if n not in self.in_ports)
-        return outs if outs else frozenset(self.ports)
+        """Names of the declared result ports; empty when the program is
+        direction-less (no ``in_ports``).  Executors resolve the
+        all-ports fallback for direction-less programs in exactly one
+        place -- ``kernels.ops.output_names`` -- so every backend agrees."""
+        return frozenset(n for n in self.ports if n not in self.in_ports)
 
     # ------------------------------------------------------------------ cost
     def cost(self) -> Cost:

@@ -21,7 +21,14 @@ from ..kernels import ops as kops
 
 
 @functools.lru_cache(maxsize=None)
-def _program(kind: str, op: str, width_or_fmt):
+def program_for(kind: str, op: str, width_or_fmt):
+    """The memoized ``build_*`` Program for (kind, op, parameterization).
+
+    kind: 'int-serial' | 'int-parallel' | 'fp-serial' | 'fp-parallel';
+    width_or_fmt: bit width for int kinds, FORMATS name for fp kinds.
+    Shared dispatch table of the ufunc frontend (``repro.pim_ufunc``) and
+    :class:`PIMVectorUnit`.
+    """
     if kind == "int-serial":
         return {
             "add": lambda n: bitserial.build_add(n),
@@ -67,7 +74,7 @@ class PIMVectorUnit:
     def _int_op(self, op: str, x: np.ndarray, y: np.ndarray) -> np.ndarray:
         assert x.dtype in (np.uint8, np.uint16, np.uint32, np.uint64)
         width = x.dtype.itemsize * 8
-        prog = _program(f"int-{self.mode}", op, width)
+        prog = program_for(f"int-{self.mode}", op, width)
         n = x.size
         if op == "div":
             out = kops.run_program(
@@ -102,7 +109,7 @@ class PIMVectorUnit:
             # bp sub = bp add with flipped sign bit
             y = (-y).astype(x.dtype)
             op = "add"
-        prog = _program(kind, op, fmt_name)
+        prog = program_for(kind, op, fmt_name)
         xb = _bits(x)
         yb = _bits(y)
         out = kops.run_program(prog, {"x": xb, "y": yb}, x.size,

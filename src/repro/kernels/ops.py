@@ -1,22 +1,35 @@
 """jit'd wrappers around the PIM executor kernels: compiled-program caching,
-padding, and row-major <-> packed-column bridging.
+padding, row-major <-> packed-column bridging, and the scale layer --
+chunked streaming execution and multi-device row sharding.
 
 Pipeline (DESIGN.md §5): Program -> (content-hash cache) levelized schedule /
 lowered arrays -> pack_rows -> kernel -> unpack_rows.  All host-side
 bridging is fully vectorized: packing and unpacking move whole ports per
 numpy call (one 32-bit limb loop for arbitrarily wide ports), never per cell
 or per row.
+
+Scale layer (DESIGN.md §8): :func:`run_program_streaming` tiles arbitrary
+row counts into fixed-shape word-aligned chunks and overlaps host packing of
+chunk ``k+1`` with device execution of chunk ``k`` (JAX async dispatch);
+:func:`row_mesh` + the ``mesh=`` arguments shard the packed word axis over
+multiple devices with ``jax.shard_map`` (the level loop is elementwise along
+words, so sharding needs no communication).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 import hashlib
 import weakref
-from typing import Dict, Iterable, Optional
+from typing import Callable, Dict, Iterable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.gates import LevelSchedule, levelize
 from .pim_exec import (TILE_W, pim_exec_level_fused,
@@ -26,9 +39,15 @@ from .ref import (pim_exec_ref, pim_exec_ref_level_fused,
 
 _FULL = np.uint32(0xFFFFFFFF)
 
+# Streaming chunk size (rows).  262144 rows = 8192 packed words: big enough
+# to amortize per-chunk dispatch (and to give each shard of a several-way
+# mesh multiple Pallas tiles), small enough that two in-flight chunks stay
+# cache-friendly and the pack/exec pipeline keeps overlapping.
+DEFAULT_CHUNK_ROWS = 1 << 18
+
 
 # --------------------------------------------------------------------------
-# content-hash-keyed compiled-program cache
+# content-hash-keyed compiled-program cache (bounded LRU)
 # --------------------------------------------------------------------------
 #
 # Programs are compiled (NOR-lowered to dense arrays, levelized, shipped to
@@ -37,9 +56,30 @@ _FULL = np.uint32(0xFFFFFFFF)
 # programs share compiled artifacts and -- unlike the previous id()-keyed
 # cache -- a dead program's recycled id can never poison the entry of a new
 # one.  Keys are memoized per live instance via a WeakKeyDictionary.
+#
+# The cache is a bounded LRU: each entry pins device buffers (schedule index
+# matrices, port gather vectors), so an unbounded dict would leak device
+# memory under long-running serving that keeps minting new program
+# structures.  Eviction is safe -- an evicted structure is simply recompiled
+# on next use, bit-identically (compilation is a pure function of the key).
+
+_COMPILED_CAP = 64
 
 _key_memo: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
-_compiled: Dict[bytes, "_Compiled"] = {}
+_compiled: "collections.OrderedDict[bytes, _Compiled]" = \
+    collections.OrderedDict()
+
+
+def set_compiled_cache_cap(cap: int) -> int:
+    """Set the compiled-program LRU capacity (entries); returns the old cap.
+    Shrinking evicts least-recently-used entries immediately."""
+    global _COMPILED_CAP
+    if cap < 1:
+        raise ValueError(f"cache cap must be >= 1, got {cap}")
+    old, _COMPILED_CAP = _COMPILED_CAP, cap
+    while len(_compiled) > _COMPILED_CAP:
+        _compiled.popitem(last=False)
+    return old
 
 
 def content_key(program) -> bytes:
@@ -80,6 +120,18 @@ def _stacked_cells(cell_lists) -> np.ndarray:
         [np.asarray(c, np.int64) for c in cell_lists]).astype(np.int32)
 
 
+def output_names(ports_owner) -> list:
+    """The port names ``run_program`` returns, sorted: the declared output
+    ports, falling back to *every* port for direction-less programs.
+
+    Works on anything with ``ports`` and (optionally) ``out_ports`` --
+    ``Program``, ``LevelSchedule`` -- and is the single source of truth for
+    that fallback, so all executor backends agree.
+    """
+    return sorted(getattr(ports_owner, "out_ports", None)
+                  or ports_owner.ports)
+
+
 # Dense-schedule width cap: levels wider than this are split into several
 # rows, trading a few extra fori_loop trips for much less sink padding (the
 # sweet spot on CPU interpret mode; see ISSUE 1 / BENCH_1.json).
@@ -107,7 +159,7 @@ class _Compiled:
     def get_sched_dev(self, program):
         if self.sched_dev is None:
             s = self.get_schedule(program)
-            names = sorted(s.out_ports or s.ports)
+            names = output_names(s)
             cells = _stacked_cells([s.ports[n] for n in names])
             self.sched_dev = (jnp.asarray(s.a), jnp.asarray(s.b),
                               jnp.asarray(s.out), jnp.asarray(cells), names)
@@ -129,6 +181,10 @@ def compiled(program) -> _Compiled:
     entry = _compiled.get(key)
     if entry is None:
         entry = _compiled[key] = _Compiled()
+    else:
+        _compiled.move_to_end(key)
+    while len(_compiled) > _COMPILED_CAP:
+        _compiled.popitem(last=False)
     return entry
 
 
@@ -273,68 +329,163 @@ def _unpack_sub(sub: np.ndarray, name_widths, n_rows: int
 
 
 # --------------------------------------------------------------------------
+# multi-device row sharding (word axis)
+# --------------------------------------------------------------------------
+#
+# The packed word axis is embarrassingly parallel: every level executes
+# ``out[cells] <- ~(a[cells] | b[cells])`` elementwise along words, and the
+# schedule's index operands are word-invariant.  Sharding is therefore pure
+# data parallelism -- input port rows split along words, index matrices
+# replicate, output port rows split along words; no collective ever runs.
+
+@functools.lru_cache(maxsize=None)
+def row_mesh(n_devices: Optional[int] = None) -> Optional[Mesh]:
+    """1-D device mesh over the packed word (row-block) axis, or ``None``
+    when only one device is available / requested (the unsharded path).
+    Run CPU hosts with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    to exercise N-way sharding without accelerators."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else min(n_devices, len(devs))
+    if n <= 1:
+        return None
+    return Mesh(np.array(devs[:n]), ("rows",))
+
+
+# Every levelized executor entry point shares one signature --
+# (in_block, in_idx, la, lb, lo, out_idx) -- with the data block sharded
+# along its trailing word/row axis and the schedule operands replicated.
+_SHARD_IN_SPECS = (P(None, "rows"), P(None),
+                   P(None, None), P(None, None), P(None, None), P(None))
+
+# Bounded like _compiled, and for the same reason: each wrapper pins
+# compiled XLA executables keyed by per-program statics, so long-running
+# serving that keeps minting program structures must evict here too.
+_SHARD_CACHE_CAP = 64
+_shard_cache: "collections.OrderedDict[tuple, Callable]" = \
+    collections.OrderedDict()
+
+
+def _sharded_exec(fn, mesh: Mesh, check_rep: bool, **static) -> Callable:
+    """``jax.jit(shard_map(fn))`` over :data:`_SHARD_IN_SPECS`, cached per
+    (executor, mesh, statics) so each chunk shape compiles once.  Pallas
+    calls have no replication rule, hence ``check_rep=False`` there."""
+    key = (fn, mesh, check_rep, tuple(sorted(static.items())))
+    wrapped = _shard_cache.get(key)
+    if wrapped is None:
+        inner = functools.partial(fn, **static)
+        wrapped = jax.jit(shard_map(
+            inner, mesh=mesh, in_specs=_SHARD_IN_SPECS,
+            out_specs=P(None, "rows"), check_rep=check_rep))
+        _shard_cache[key] = wrapped
+        while len(_shard_cache) > _SHARD_CACHE_CAP:
+            _shard_cache.popitem(last=False)
+    else:
+        _shard_cache.move_to_end(key)
+    return wrapped
+
+
+# --------------------------------------------------------------------------
 # execution
 # --------------------------------------------------------------------------
 
+def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
+                        backend: str, mesh: Optional[Mesh] = None,
+                        pad_rows: Optional[int] = None) -> Callable:
+    """Pack ``inputs`` and dispatch one levelized execution; returns a
+    zero-arg ``finalize`` that blocks on the device result and unpacks it.
+
+    Dispatch is asynchronous (JAX futures), so callers can overlap host
+    packing of the next chunk with device execution of this one -- the
+    streaming executor's pipeline.  ``pad_rows`` fixes the padded row count
+    (>= n_rows) so every streaming chunk shares one compiled shape.
+    """
+    comp = compiled(program)
+    sched = comp.get_schedule(program)
+    shards = 1 if mesh is None else mesh.devices.size
+    pad_to = (TILE_W if backend == "pallas" else 1) * shards
+    n_words = _n_words(n_rows if pad_rows is None else pad_rows, pad_to)
+    la, lb, lo, out_idx, names = comp.get_sched_dev(program)
+    in_names = sorted(inputs)
+    in_idx = comp.get_in_idx(program, in_names)
+    one_cell = None if sched.one_cell is None else int(sched.one_cell)
+    in_widths = tuple(len(sched.ports[n]) for n in in_names)
+    out_widths = tuple(len(sched.ports[n]) for n in names)
+    vals = [np.asarray(inputs[n]) for n in in_names]
+    if (vals and max(in_widths + out_widths, default=0) <= 32
+            and all(v.dtype != object for v in vals)):
+        # fused fast path: the bit transposes run inside the executor's
+        # XLA program; only (n_ports, n_rows) uint32 cross the boundary
+        in_vals = np.zeros((len(vals), n_words * 32), np.uint32)
+        for p, v in enumerate(vals):
+            in_vals[p, :len(v)] = v.astype(np.uint32)
+        fn = (pim_exec_ref_level_fused if backend == "ref"
+              else pim_exec_level_fused)
+        static = dict(n_cells=sched.n_cells, one_cell=one_cell,
+                      in_widths=in_widths, out_widths=out_widths)
+        if mesh is None:
+            outs = fn(jnp.asarray(in_vals), in_idx, la, lb, lo, out_idx,
+                      **static)
+        else:
+            outs = _sharded_exec(fn, mesh, backend != "pallas", **static)(
+                jnp.asarray(in_vals), in_idx, la, lb, lo, out_idx)
+
+        def finalize() -> Dict[str, np.ndarray]:
+            o = np.asarray(outs)                     # blocks until ready
+            return {n: o[p, :n_rows].astype(np.uint64)
+                    for p, n in enumerate(names)}
+        return finalize
+    in_rows = (np.vstack(
+        [_pack_port_words(inputs[n], len(sched.ports[n]), n_words)
+         for n in in_names])
+        if in_names else np.zeros((0, n_words), np.uint32))
+    exec_fn = (pim_exec_ref_level_io if backend == "ref"
+               else pim_exec_level_padded_io)
+    static = dict(n_cells=sched.n_cells, one_cell=one_cell)
+    if mesh is None:
+        sub = exec_fn(jnp.asarray(in_rows), in_idx, la, lb, lo, out_idx,
+                      **static)
+    else:
+        sub = _sharded_exec(exec_fn, mesh, backend != "pallas", **static)(
+            jnp.asarray(in_rows), in_idx, la, lb, lo, out_idx)
+
+    def finalize() -> Dict[str, np.ndarray]:
+        return _unpack_sub(np.asarray(sub),
+                           [(n, len(sched.ports[n])) for n in names], n_rows)
+    return finalize
+
+
 def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
-                backend: str = "pallas", levelized: bool = True
-                ) -> Dict[str, np.ndarray]:
+                backend: str = "pallas", levelized: bool = True,
+                mesh: Optional[Mesh] = None) -> Dict[str, np.ndarray]:
     """Element-parallel execution of a gate program over ``n_rows`` rows.
 
     backend: 'pallas' (interpret-mode kernel), 'ref' (jnp oracle) or
     'numpy' (the cycle-accurate simulator's packed executor, abstract IR).
     'pallas' and 'ref' consume the levelized schedule by default;
     ``levelized=False`` selects the original gate-serial executors.
+    ``mesh`` (see :func:`row_mesh`) shards the packed word axis over
+    devices; it requires a levelized jax backend.
 
-    Returns the program's output ports (all ports when the program does not
-    declare port directions).
+    Returns the program's output ports -- all ports when the program does
+    not declare port directions (the :func:`output_names` contract, which
+    every backend path shares).
     """
+    if mesh is not None and (backend == "numpy" or not levelized):
+        raise ValueError(
+            "mesh sharding requires a levelized jax backend "
+            f"(got backend={backend!r}, levelized={levelized})")
     if backend == "numpy":
         state = pack_rows(inputs, program.ports, n_rows, program.n_cells,
                           pad_to=1)
         st = np.ascontiguousarray(state.T)
         program.exec_packed(st)
         return unpack_rows(st.T, program.ports, n_rows,
-                           names=program.out_ports)
+                           names=output_names(program))
     if backend not in ("pallas", "ref"):
         raise ValueError(backend)
-    comp = compiled(program)
     if levelized:
-        sched = comp.get_schedule(program)
-        pad_to = TILE_W if backend == "pallas" else 1
-        n_words = _n_words(n_rows, pad_to)
-        la, lb, lo, out_idx, names = comp.get_sched_dev(program)
-        in_names = sorted(inputs)
-        in_idx = comp.get_in_idx(program, in_names)
-        one_cell = None if sched.one_cell is None else int(sched.one_cell)
-        in_widths = tuple(len(sched.ports[n]) for n in in_names)
-        out_widths = tuple(len(sched.ports[n]) for n in names)
-        vals = [np.asarray(inputs[n]) for n in in_names]
-        if (vals and max(in_widths + out_widths, default=0) <= 32
-                and all(v.dtype != object for v in vals)):
-            # fused fast path: the bit transposes run inside the executor's
-            # XLA program; only (n_ports, n_rows) uint32 cross the boundary
-            in_vals = np.zeros((len(vals), n_words * 32), np.uint32)
-            for p, v in enumerate(vals):
-                in_vals[p, :len(v)] = v.astype(np.uint32)
-            fn = (pim_exec_ref_level_fused if backend == "ref"
-                  else pim_exec_level_fused)
-            outs = np.asarray(fn(
-                jnp.asarray(in_vals), in_idx, la, lb, lo, out_idx,
-                n_cells=sched.n_cells, one_cell=one_cell,
-                in_widths=in_widths, out_widths=out_widths))
-            return {n: outs[p, :n_rows].astype(np.uint64)
-                    for p, n in enumerate(names)}
-        in_rows = (np.vstack(
-            [_pack_port_words(inputs[n], len(sched.ports[n]), n_words)
-             for n in in_names])
-            if in_names else np.zeros((0, n_words), np.uint32))
-        exec_fn = (pim_exec_ref_level_io if backend == "ref"
-                   else pim_exec_level_padded_io)
-        sub = exec_fn(jnp.asarray(in_rows), in_idx, la, lb, lo, out_idx,
-                      n_cells=sched.n_cells, one_cell=one_cell)
-        return _unpack_sub(np.asarray(sub),
-                           [(n, len(sched.ports[n])) for n in names], n_rows)
+        return _dispatch_levelized(program, inputs, n_rows, backend, mesh)()
+    comp = compiled(program)
     ops, a, b, o, n_cells = comp.get_arrays(program)
     pad_to = TILE_W if backend == "pallas" else 1
     state = pack_rows(inputs, program.ports, n_rows, n_cells, pad_to=pad_to)
@@ -347,4 +498,47 @@ def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
             jnp.asarray(state), jnp.asarray(ops), jnp.asarray(a),
             jnp.asarray(b), jnp.asarray(o), n_cells=n_cells))
     return unpack_rows(final, program.ports, n_rows,
-                       names=program.out_ports)
+                       names=output_names(program))
+
+
+def run_program_streaming(program, inputs: Dict[str, np.ndarray],
+                          n_rows: int, backend: str = "ref",
+                          chunk_rows: int = DEFAULT_CHUNK_ROWS,
+                          mesh: Optional[Mesh] = None
+                          ) -> Dict[str, np.ndarray]:
+    """Chunked, pipelined, optionally sharded execution over ``n_rows``.
+
+    Rows are tiled into word-aligned chunks of ``chunk_rows``; the loop
+    dispatches chunk ``k`` to the device, packs chunk ``k+1`` on the host
+    while ``k`` executes (JAX async dispatch), then blocks on ``k``'s
+    result -- so host bridging and device execution overlap instead of one
+    monolithic pack -> exec -> unpack.  Every chunk (including the ragged
+    last one) is padded to the same shape, so the executor compiles once.
+
+    Levelized jax backends only ('ref'/'pallas'); ``mesh`` additionally
+    shards each chunk's word axis over devices (:func:`row_mesh`).
+    """
+    if backend not in ("pallas", "ref"):
+        raise ValueError(
+            f"streaming requires a levelized jax backend, got {backend!r}")
+    chunk_rows = max(32, (int(chunk_rows) + 31) // 32 * 32)  # word-aligned
+    if n_rows <= chunk_rows:
+        return run_program(program, inputs, n_rows, backend, mesh=mesh)
+    inputs = {n: np.asarray(v) for n, v in inputs.items()}
+    for n, v in inputs.items():
+        if len(v) != n_rows:
+            raise ValueError(
+                f"input {n!r} has {len(v)} rows, expected {n_rows}")
+    parts = []
+    pending = None
+    for start in range(0, n_rows, chunk_rows):
+        rows_k = min(chunk_rows, n_rows - start)
+        chunk = {n: v[start:start + rows_k] for n, v in inputs.items()}
+        fin = _dispatch_levelized(program, chunk, rows_k, backend, mesh,
+                                  pad_rows=chunk_rows)
+        if pending is not None:
+            parts.append(pending())     # blocks on k-1 while k executes
+        pending = fin
+    parts.append(pending())
+    return {name: np.concatenate([p[name] for p in parts])
+            for name in parts[0]}

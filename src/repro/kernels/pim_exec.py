@@ -41,6 +41,20 @@ TILE_W = 256          # lane-dim words per block (multiple of 128)
 _FULL = 0xFFFFFFFF
 
 
+def _check_state_shape(where: str, state, n_cells: int) -> None:
+    """Trace-time shape validation.  Explicit raises, not ``assert``: these
+    guard grid construction and block specs, and must survive ``python -O``
+    (asserts are stripped there, turning shape bugs into silent garbage)."""
+    if state.ndim != 2 or state.shape[0] != n_cells:
+        raise ValueError(
+            f"{where}: state must be (n_cells={n_cells}, n_words), "
+            f"got shape {tuple(state.shape)}")
+    if state.shape[1] % TILE_W != 0:
+        raise ValueError(
+            f"{where}: n_words={state.shape[1]} must be a multiple of "
+            f"TILE_W={TILE_W}")
+
+
 def _pim_kernel(ops_ref, a_ref, b_ref, o_ref, state_ref, out_ref):
     # bring the tile into the output buffer once; all gates run in-place
     out_ref[...] = state_ref[...]
@@ -65,7 +79,7 @@ def pim_exec_padded(state, ops, a, b, o, *, n_cells, interpret=True):
     """Run a lowered NOR program over ``state`` (uint32[n_cells, n_words]),
     n_words a multiple of TILE_W.  Returns the final state."""
     n_words = state.shape[1]
-    assert state.shape[0] == n_cells and n_words % TILE_W == 0
+    _check_state_shape("pim_exec_padded", state, n_cells)
     grid = (n_words // TILE_W,)
     return pl.pallas_call(
         _pim_kernel,
@@ -106,7 +120,7 @@ def pim_exec_level_padded(state, la, lb, lo, out_idx=None, *, n_cells,
     Returns the final state, or only the rows in ``out_idx`` (the port
     cells) when given."""
     n_words = state.shape[1]
-    assert state.shape[0] == n_cells and n_words % TILE_W == 0
+    _check_state_shape("pim_exec_level_padded", state, n_cells)
     grid = (n_words // TILE_W,)
     final = pl.pallas_call(
         _pim_level_kernel,

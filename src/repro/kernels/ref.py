@@ -8,6 +8,14 @@ Two execution strategies, matching kernels.pim_exec:
     *level* of independent gates, executed as a vectorized
     gather -> NOR -> scatter over (gates_in_level, n_words) blocks.  Depth
     is the critical path of the netlist instead of its gate count.
+
+Shard invariance (DESIGN.md §8): every executor here is elementwise along
+the trailing word axis -- gathers/scatters index only the *cell* axis, and
+the schedule operands are word-invariant.  Splitting the word axis into
+arbitrary contiguous blocks and running each block independently is
+therefore bit-identical to one monolithic run, which is what licenses both
+the chunked streaming executor and ``jax.shard_map`` row sharding in
+``kernels.ops`` (replicated index operands, no collectives).
 """
 
 from __future__ import annotations

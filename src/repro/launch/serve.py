@@ -1,12 +1,32 @@
-"""Batched serving driver: prefill + decode with KV caches.
+"""Serving drivers.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
-        --batch 4 --prompt-len 32 --gen 16
+Two services share this entry point:
+
+* **LLM decode** (default): batched prefill + decode with KV caches.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+          --batch 4 --prompt-len 32 --gen 16
+
+* **PIM ufunc API** (``--pim``): elementwise arithmetic requests served by
+  the AritPIM machine through ``repro.pim_ufunc`` -- the chunked streaming
+  executor with multi-device row sharding (DESIGN.md §8).  One-shot
+  synthetic load:
+
+      PYTHONPATH=src python -m repro.launch.serve --pim add \
+          --pim-dtype uint32 --pim-rows 500000 --pim-requests 4
+
+  or a JSON-lines request loop on stdin/stdout (one request object per
+  line, one response per line):
+
+      echo '{"op":"add","dtype":"uint16","x":[3,5],"y":[4,6]}' | \
+          PYTHONPATH=src python -m repro.launch.serve --pim-stdin
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import jax
@@ -18,17 +38,130 @@ from ..models import model as M
 from . import sharding as SH
 from .steps import make_decode_step
 
+# ---------------------------------------------------------------- PIM ufunc
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+_PIM_INT_OPS = ("add", "sub", "mul", "div")
+_PIM_FP_OPS = ("fp_add", "fp_sub", "fp_mul", "fp_div")
+_PIM_DTYPES = {"uint8": np.uint8, "uint16": np.uint16,
+               "uint32": np.uint32, "uint64": np.uint64,
+               "float16": np.float16, "float32": np.float32}
 
+
+def _pim_encode(arr) -> list:
+    """JSON-safe row list (Python ints/floats; object arrays of big ints)."""
+    if arr.dtype.kind == "f":
+        return [float(v) for v in arr]
+    return [int(v) for v in arr]
+
+
+def pim_request(req: dict) -> dict:
+    """Serve one ufunc request.
+
+    Request: ``{"op": add|sub|mul|div|fp_add|fp_sub|fp_mul|fp_div,
+    "x": [...], "y": [...]}`` plus either ``"dtype"`` (uint8..64 /
+    float16/float32) or ``"fmt"`` (bf16 etc., bit-pattern payloads), and
+    optional ``"width"`` for explicit fixed-point widths.
+
+    Response: ``{"op", "rows", "us"}`` with ``"result"`` (or ``"q"``/``"r"``
+    for division).  Validation failures come back as ``{"error": ...}``.
+    """
+    from .. import pim_ufunc as pim
+    try:
+        op = req["op"]
+        if op not in _PIM_INT_OPS + _PIM_FP_OPS:
+            raise ValueError(f"unknown op {op!r}")
+        fn = getattr(pim, op)
+        kw = {}
+        if req.get("fmt") is not None:
+            kw["fmt"] = req["fmt"]
+            dtype = None
+        else:
+            dtype = _PIM_DTYPES[req.get("dtype", "uint32")]
+        if req.get("width") is not None:
+            kw["width"] = int(req["width"])
+        x = np.asarray(req["x"], dtype)
+        y = np.asarray(req["y"], dtype)
+        t0 = time.perf_counter()
+        out = fn(x, y, **kw)
+        dt = time.perf_counter() - t0
+        resp = {"op": op, "rows": int(x.size),
+                "us": round(dt * 1e6, 1)}
+        if op == "div":
+            resp["q"], resp["r"] = _pim_encode(out[0]), _pim_encode(out[1])
+        else:
+            resp["result"] = _pim_encode(out)
+        return resp
+    except (KeyError, TypeError, ValueError, OverflowError) as e:
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
+def serve_pim_stdin(inp=None, outp=None) -> int:
+    """JSON-lines loop: one request per input line, one response per output
+    line.  Blank lines are skipped; malformed JSON yields an error line."""
+    inp = sys.stdin if inp is None else inp
+    outp = sys.stdout if outp is None else outp
+    served = 0
+    for line in inp:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            req = json.loads(line)
+        except json.JSONDecodeError as e:
+            resp = {"error": f"JSONDecodeError: {e}"}
+        else:
+            resp = pim_request(req)
+        print(json.dumps(resp, sort_keys=True), file=outp, flush=True)
+        served += 1
+    return served
+
+
+def serve_pim_synthetic(args) -> dict:
+    """One-shot synthetic load: ``--pim-requests`` rounds of ``--pim-rows``
+    random rows through the streaming/sharded executor; prints rows/s."""
+    from .. import pim_ufunc as pim
+    op = args.pim
+    rng = np.random.default_rng(args.seed)
+    n = args.pim_rows
+    dtype = _PIM_DTYPES[args.pim_dtype]
+    is_float = np.dtype(dtype).kind == "f"
+    if (op in _PIM_FP_OPS) != is_float:
+        sys.exit(f"error: --pim {op} requires --pim-dtype "
+                 f"{'float16/float32' if op in _PIM_FP_OPS else 'uint8..64'}"
+                 f" (got {args.pim_dtype})")
+    if op in _PIM_FP_OPS:
+        from ..core.floatfmt import FORMATS
+        fmt = {np.float16: FORMATS["fp16"],
+               np.float32: FORMATS["fp32"]}[dtype]
+        mid = fmt.bias
+        x = fmt.random_bits(rng, n, emin=mid - 2, emax=mid + 2)
+        y = fmt.random_bits(rng, n, emin=mid - 2, emax=mid + 2)
+        vw = {np.float16: np.uint16, np.float32: np.uint32}[dtype]
+        x = x.astype(vw).view(dtype)
+        y = y.astype(vw).view(dtype)
+    else:
+        width = np.dtype(dtype).itemsize * 8
+        hi = 1 << min(width, 63)
+        x = rng.integers(0, hi, n).astype(dtype)
+        lo = 1 if op == "div" else 0
+        y = rng.integers(lo, hi, n).astype(dtype)
+    fn = getattr(pim, op)
+    fn(x[:256], y[:256])                     # compile outside the timing
+    t0 = time.perf_counter()
+    for _ in range(args.pim_requests):
+        fn(x, y)
+    dt = time.perf_counter() - t0
+    total = n * args.pim_requests
+    rate = total / dt if dt > 0 else float("nan")
+    n_dev = len(jax.devices())
+    print(f"pim.{op} [{args.pim_dtype}]: {args.pim_requests} requests x "
+          f"{n} rows on {n_dev} device(s) in {dt:.3f}s = {rate:,.0f} rows/s")
+    return {"op": op, "rows": total, "seconds": dt, "rows_per_s": rate}
+
+
+# ---------------------------------------------------------------- LLM decode
+
+def serve_llm(args):
     cfg = registry.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -53,7 +186,7 @@ def main(argv=None):
     # prefill: teacher-forced pass builds the caches at size prompt_len;
     # decode caches are pre-sized to max_seq, so we re-init + write
     caches = M.init_caches(cfg, b, max_seq)
-    t0 = time.time()
+    t0 = time.perf_counter()
     jdecode = jax.jit(make_decode_step(cfg))
     cur = toks[:, 0]
     out_toks = [cur]
@@ -65,12 +198,38 @@ def main(argv=None):
         nxt, logits, caches = jdecode(params, caches, step_batch)
         cur = toks[:, t + 1] if t + 1 < args.prompt_len else nxt
         out_toks.append(cur)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     gen = np.stack([np.asarray(t) for t in out_toks], axis=1)
     print(f"generated {b}x{max_seq} tokens in {dt:.2f}s "
           f"({b * max_seq / dt:.1f} tok/s incl. compile)")
     print("sample row:", gen[0].tolist())
     return gen
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pim", metavar="OP", choices=_PIM_INT_OPS + _PIM_FP_OPS,
+                    help="serve the PIM ufunc API with synthetic load "
+                         "instead of LLM decode")
+    ap.add_argument("--pim-stdin", action="store_true",
+                    help="serve PIM ufunc requests as JSON lines on stdin")
+    ap.add_argument("--pim-rows", type=int, default=1 << 20)
+    ap.add_argument("--pim-requests", type=int, default=4)
+    ap.add_argument("--pim-dtype", default="uint32",
+                    choices=sorted(_PIM_DTYPES))
+    args = ap.parse_args(argv)
+
+    if args.pim_stdin:
+        return serve_pim_stdin()
+    if args.pim:
+        return serve_pim_synthetic(args)
+    return serve_llm(args)
 
 
 if __name__ == "__main__":

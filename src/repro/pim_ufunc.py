@@ -1,0 +1,295 @@
+"""NumPy-style ufunc frontend for the AritPIM machine (DESIGN.md §8).
+
+The paper's suite as array-in / array-out elementwise operations: every
+element occupies one PIM row, the whole array executes one shared, memoized
+gate program, and execution flows through the chunked streaming executor
+(``kernels.ops.run_program_streaming``) with optional multi-device row
+sharding -- the scale path the throughput case study (Fig. 9) models.
+
+    from repro import pim_ufunc as pim
+
+    pim.add(x, y)              # uint8/16/32/64 -> full (w+1)-bit sums
+    pim.mul(x, y, width=24)    # explicit width; double-width products
+    pim.fp_add(a, b)           # float16/float32, exact IEEE RNE
+    pim.fp_mul(xb, yb, fmt="bf16")   # bf16 as uint16 bit patterns
+
+Dispatch: unsigned dtypes infer the bit width; ``width=`` overrides (and is
+required for object/signed arrays).  Floats dispatch on dtype; formats with
+no native numpy dtype (bf16) take ``fmt=`` plus bit-pattern arrays and
+return bit patterns.  Inputs broadcast like numpy ufuncs.
+
+Per the paper, FP operands must be normal-range or zero: NaN/Inf and
+subnormals are rejected up front (``check=False`` skips the scan).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .core.floatfmt import FORMATS
+from .core.pim_numerics import program_for
+from .kernels import ops as kops
+
+__all__ = ["add", "sub", "mul", "div",
+           "fp_add", "fp_sub", "fp_mul", "fp_div",
+           "config", "configure"]
+
+
+@dataclasses.dataclass
+class Config:
+    """Module-wide execution defaults; every ufunc takes keyword overrides.
+
+    backend: 'ref' (jnp levelized; fastest under CPU interpret), 'pallas'
+    (the TPU-shaped kernel), or 'numpy' (cycle-accurate oracle).
+    chunk_rows: streaming chunk size; arrays larger than this stream through
+    the pipelined executor.  shards: device count for row sharding (None =
+    all available; 1 disables).  parallel: use the bit-parallel
+    (partition-parallel) builders instead of bit-serial.
+    """
+    backend: str = "ref"
+    chunk_rows: int = kops.DEFAULT_CHUNK_ROWS
+    shards: Optional[int] = None
+    parallel: bool = False
+
+
+config = Config()
+
+
+def configure(**kw) -> Config:
+    """Update module defaults (``configure(backend='pallas', shards=1)``);
+    returns the live :data:`config`."""
+    for k, v in kw.items():
+        if not hasattr(config, k):
+            raise TypeError(f"unknown config field {k!r}")
+        setattr(config, k, v)
+    return config
+
+
+def _resolve(kw):
+    def opt(name, default):
+        v = kw.pop(name, None)
+        return default if v is None else v
+
+    backend = opt("backend", config.backend)
+    if backend not in ("ref", "pallas", "numpy"):
+        raise ValueError(f"unknown backend {backend!r}")
+    chunk_rows = opt("chunk_rows", config.chunk_rows)
+    parallel = opt("parallel", config.parallel)
+    if "mesh" in kw:
+        mesh = kw.pop("mesh")
+        kw.pop("shards", None)
+    elif backend == "numpy":
+        kw.pop("shards", None)
+        mesh = None
+    else:
+        mesh = kops.row_mesh(opt("shards", config.shards))
+    if kw:
+        raise TypeError(f"unknown keyword arguments {sorted(kw)}")
+    return backend, chunk_rows, parallel, mesh
+
+
+def _run(prog, inputs, n_rows, backend, chunk_rows, mesh):
+    if backend == "numpy":
+        return kops.run_program(prog, inputs, n_rows, backend)
+    # streaming falls back to one-shot run_program below chunk_rows itself
+    return kops.run_program_streaming(prog, inputs, n_rows, backend,
+                                      chunk_rows=chunk_rows, mesh=mesh)
+
+
+# --------------------------------------------------------------------------
+# fixed point
+# --------------------------------------------------------------------------
+
+_DTYPE_WIDTHS = {np.dtype(np.uint8): 8, np.dtype(np.uint16): 16,
+                 np.dtype(np.uint32): 32, np.dtype(np.uint64): 64}
+
+
+def _int_operands(op, x, y, width):
+    """Broadcast, infer/validate the bit width, and flatten to rows."""
+    x, y = np.broadcast_arrays(np.asarray(x), np.asarray(y))
+    if width is None:
+        wx = _DTYPE_WIDTHS.get(x.dtype)
+        wy = _DTYPE_WIDTHS.get(y.dtype)
+        if wx is None or wy is None:
+            raise TypeError(
+                f"pim.{op}: cannot infer width from dtypes "
+                f"({x.dtype}, {y.dtype}); pass unsigned integer arrays or "
+                "an explicit width=")
+        if wx != wy:
+            raise TypeError(
+                f"pim.{op}: mixed operand widths {wx} and {wy}; cast to a "
+                "common dtype or pass width=")
+        width = wx
+    else:
+        width = int(width)
+        if width < 1:
+            raise ValueError(f"pim.{op}: width must be >= 1, got {width}")
+        for name, v in (("x", x), ("y", y)):
+            if v.dtype.kind not in "uiO":
+                raise TypeError(
+                    f"pim.{op}: operand {name} must be an integer array, "
+                    f"got dtype {v.dtype}")
+            if v.size and (_vmin(v) < 0 or _vmax(v) >> width):
+                raise ValueError(
+                    f"pim.{op}: operand {name} has values outside "
+                    f"[0, 2**{width})")
+    return x.ravel(), y.ravel(), x.shape, width
+
+
+def _vmin(v):
+    return min(v.flat) if v.dtype == object else int(v.min())
+
+
+def _vmax(v):
+    return max(v.flat) if v.dtype == object else int(v.max())
+
+
+def add(x, y, *, width=None, **kw):
+    """Elementwise ``x + y`` with the full carry: (width+1)-bit sums as
+    uint64 (object array beyond 63 bits)."""
+    backend, chunk, parallel, mesh = _resolve(kw)
+    xr, yr, shape, w = _int_operands("add", x, y, width)
+    prog = program_for("int-parallel" if parallel else "int-serial",
+                       "add", w)
+    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh)
+    return out["z"].reshape(shape)
+
+
+def sub(x, y, *, width=None, **kw):
+    """Elementwise ``x - y`` modulo 2**width (two's-complement wraparound),
+    as uint64 (object array beyond 63 bits)."""
+    backend, chunk, parallel, mesh = _resolve(kw)
+    xr, yr, shape, w = _int_operands("sub", x, y, width)
+    prog = program_for("int-parallel" if parallel else "int-serial",
+                       "sub", w)
+    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh)
+    return out["z"].reshape(shape)
+
+
+def mul(x, y, *, width=None, **kw):
+    """Elementwise ``x * y``: exact double-width (2*width-bit) products as
+    uint64, or an object array when 2*width exceeds 63 bits."""
+    backend, chunk, parallel, mesh = _resolve(kw)
+    xr, yr, shape, w = _int_operands("mul", x, y, width)
+    prog = program_for("int-parallel" if parallel else "int-serial",
+                       "mul", w)
+    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh)
+    return out["z"].reshape(shape)
+
+
+def div(x, y, *, width=None, **kw):
+    """Elementwise unsigned division: ``(x // y, x % y)`` as uint64 arrays
+    (object beyond 63 bits).  Zero divisors are rejected."""
+    backend, chunk, parallel, mesh = _resolve(kw)
+    xr, yr, shape, w = _int_operands("div", x, y, width)
+    if xr.size and _vmin(yr) == 0:
+        raise ValueError("pim.div: zero divisor")
+    # the divider takes a double-width dividend port z and divisor d
+    prog = program_for("int-parallel" if parallel else "int-serial",
+                       "div", w)
+    out = _run(prog, {"z": xr.astype(np.uint64) if xr.dtype != object
+                      else xr, "d": yr}, xr.size, backend, chunk, mesh)
+    return out["q"].reshape(shape), out["r"].reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# floating point
+# --------------------------------------------------------------------------
+
+_NP_FMT = {np.dtype(np.float16): "fp16", np.dtype(np.float32): "fp32"}
+_FMT_VIEW = {"fp16": np.uint16, "fp32": np.uint32}
+
+
+def _check_fp_bits(op, name, bits, fmt, reject_zero=False):
+    """Reject the paper's excluded encodings: NaN/Inf (exponent all-ones)
+    and subnormals (exponent 0, mantissa != 0).  Zero is a valid encoding
+    except as a divisor."""
+    b = bits if bits.dtype == object else bits.astype(np.uint64)
+    e = np.array([(int(v) >> fmt.nm) & ((1 << fmt.ne) - 1) for v in b.flat],
+                 np.int64) if b.dtype == object else \
+        ((b >> np.uint64(fmt.nm)) & np.uint64((1 << fmt.ne) - 1)
+         ).astype(np.int64)
+    m = np.array([int(v) & ((1 << fmt.nm) - 1) for v in b.flat], np.int64) \
+        if b.dtype == object else \
+        (b & np.uint64((1 << fmt.nm) - 1)).astype(np.int64)
+    emax = (1 << fmt.ne) - 1
+    if (e == emax).any():
+        raise ValueError(f"pim.{op}: operand {name} contains NaN/Inf "
+                         "(excluded by the PIM suite)")
+    if ((e == 0) & (m != 0)).any():
+        raise ValueError(f"pim.{op}: operand {name} contains subnormals "
+                         "(excluded by the PIM suite)")
+    if reject_zero and ((e == 0) & (m == 0)).any():
+        raise ValueError(f"pim.{op}: zero divisor")
+
+
+def _fp(op, x, y, fmt, kw):
+    check = kw.pop("check", True)
+    backend, chunk, parallel, mesh = _resolve(kw)
+    x, y = np.broadcast_arrays(np.asarray(x), np.asarray(y))
+    if fmt is None:
+        if x.dtype != y.dtype or x.dtype not in _NP_FMT:
+            raise TypeError(
+                f"pim.fp_{op}: operands must share a float16/float32 dtype "
+                f"(got {x.dtype}, {y.dtype}); other formats take fmt= with "
+                "bit-pattern arrays")
+        fmt_name = _NP_FMT[x.dtype]
+        view = _FMT_VIEW[fmt_name]
+        xb = x.ravel().view(view).astype(np.uint64)
+        yb = y.ravel().view(view).astype(np.uint64)
+        decode = lambda bits: bits.astype(view).view(x.dtype).reshape(x.shape)
+    else:
+        if fmt not in FORMATS:
+            raise ValueError(f"pim.fp_{op}: unknown format {fmt!r} "
+                             f"(known: {sorted(FORMATS)})")
+        fmt_name = fmt
+        nbits = FORMATS[fmt].nbits
+        for name, v in (("x", x), ("y", y)):
+            if v.dtype.kind not in "uiO":
+                raise TypeError(
+                    f"pim.fp_{op}: fmt={fmt!r} takes bit-pattern integer "
+                    f"arrays, got dtype {v.dtype}")
+            if v.size and (_vmin(v) < 0 or _vmax(v) >> nbits):
+                raise ValueError(
+                    f"pim.fp_{op}: operand {name} has bit patterns outside "
+                    f"[0, 2**{nbits})")
+        xb = x.ravel().astype(np.uint64)
+        yb = y.ravel().astype(np.uint64)
+        decode = lambda bits: bits.reshape(x.shape)
+    f = FORMATS[fmt_name]
+    if check and xb.size:
+        _check_fp_bits(f"fp_{op}", "x", xb, f)
+        _check_fp_bits(f"fp_{op}", "y", yb, f, reject_zero=(op == "div"))
+    if parallel and op == "sub":
+        # the bit-parallel suite has no subtractor: flip y's sign, add
+        yb = yb ^ np.uint64(1 << (f.nbits - 1))
+        op = "add"
+    prog = program_for("fp-parallel" if parallel else "fp-serial",
+                       op, fmt_name)
+    out = _run(prog, {"x": xb, "y": yb}, xb.size, backend, chunk, mesh)["z"]
+    return decode(np.asarray(out, np.uint64))
+
+
+def fp_add(x, y, *, fmt=None, **kw):
+    """Elementwise FP addition, exactly rounded (IEEE RNE).  float16 /
+    float32 arrays, or ``fmt='bf16'`` etc. with bit-pattern arrays."""
+    return _fp("add", x, y, fmt, kw)
+
+
+def fp_sub(x, y, *, fmt=None, **kw):
+    """Elementwise FP subtraction, exactly rounded (IEEE RNE)."""
+    return _fp("sub", x, y, fmt, kw)
+
+
+def fp_mul(x, y, *, fmt=None, **kw):
+    """Elementwise FP multiplication, exactly rounded (IEEE RNE)."""
+    return _fp("mul", x, y, fmt, kw)
+
+
+def fp_div(x, y, *, fmt=None, **kw):
+    """Elementwise FP division, exactly rounded (IEEE RNE).  Zero divisors
+    are rejected."""
+    return _fp("div", x, y, fmt, kw)

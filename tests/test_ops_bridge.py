@@ -144,3 +144,132 @@ def test_run_program_returns_output_ports_only():
                            backend="ref")
     assert set(out) == {"z"}
     assert int(out["z"][0]) == 7
+
+
+# ----------------------------------------------------- bridge edge cases
+
+def _width_program(width, seed=0):
+    """x, y -> (x NOR-mix y) with ports of exactly ``width`` cells."""
+    b = Builder()
+    x = b.input("x", width)
+    y = b.input("y", width)
+    b.output("z", b.vec_xor(x, y))
+    return b.finish()
+
+
+@pytest.mark.parametrize("rows", [0, 1, 31, 32, 33])
+@pytest.mark.parametrize("width", [31, 32, 33, 63, 64, 65])
+def test_bridge_edge_rows_and_widths(rows, width):
+    """Word-boundary row counts x limb/object-boundary port widths, through
+    pack/unpack and all levelized executor paths vs the numpy oracle."""
+    p = _width_program(width)
+    rng = np.random.default_rng(rows * 97 + width)
+    if width > 62:
+        x = np.array([int.from_bytes(rng.bytes(9), "little") % (1 << width)
+                      for _ in range(rows)], object)
+        y = np.array([int.from_bytes(rng.bytes(9), "little") % (1 << width)
+                      for _ in range(rows)], object)
+    else:
+        x = rng.integers(0, 1 << width, rows).astype(np.uint64)
+        y = rng.integers(0, 1 << width, rows).astype(np.uint64)
+    ins = {"x": x, "y": y}
+    want = kops.run_program(p, ins, rows, backend="numpy")["z"]
+    for backend in ("ref", "pallas"):
+        got = kops.run_program(p, ins, rows, backend=backend)["z"]
+        assert len(got) == rows
+        assert all(int(a) == int(b) for a, b in zip(got, want)), backend
+        assert all(int(a) == (int(xx) ^ int(yy))
+                   for a, xx, yy in zip(got, x, y)), backend
+
+
+def test_fused_vs_padded_io_vs_numpy_same_seeds():
+    """The fused (<= 32-cell ports, native dtype) and padded-io (forced via
+    object-dtype inputs) executor paths must agree with each other and the
+    numpy oracle on identical inputs."""
+    p = _width_program(16)
+    rng = np.random.default_rng(42)
+    rows = 77
+    x = rng.integers(0, 1 << 16, rows).astype(np.uint64)
+    y = rng.integers(0, 1 << 16, rows).astype(np.uint64)
+    want = kops.run_program(p, {"x": x, "y": y}, rows, backend="numpy")["z"]
+    for backend in ("ref", "pallas"):
+        fused = kops.run_program(p, {"x": x, "y": y}, rows,
+                                 backend=backend)["z"]
+        padded = kops.run_program(
+            p, {"x": x.astype(object), "y": y.astype(object)}, rows,
+            backend=backend)["z"]
+        assert np.array_equal(np.asarray(fused, np.uint64), want)
+        assert all(int(a) == int(b) for a, b in zip(padded, want))
+
+
+def test_zero_input_program_all_backends():
+    """Programs with no input ports (constant generators) run on every
+    path and agree."""
+    b = Builder()
+    c1 = b.const(1)
+    c0 = b.const(0)
+    n1 = b.not_(c0)
+    b.output("ones", [c1, n1, c1])
+    b.output("mix", [c0, c1, c0, c1])
+    p = b.finish()
+    for rows in (0, 1, 33):
+        for backend, lev in [("numpy", True), ("ref", True), ("ref", False),
+                             ("pallas", True), ("pallas", False)]:
+            out = kops.run_program(p, {}, rows, backend=backend,
+                                   levelized=lev)
+            assert set(out) == {"ones", "mix"}, (backend, lev)
+            assert np.array_equal(out["ones"], np.full(rows, 7, np.uint64))
+            assert np.array_equal(out["mix"], np.full(rows, 10, np.uint64))
+
+
+def test_directionless_ports_identical_across_all_four_paths():
+    """Acceptance: direction-less programs (no declared in_ports) must
+    return identical port dictionaries from the numpy, gate-serial,
+    levelized padded-io, and levelized fused paths."""
+    b = Builder()
+    x = [b.alloc() for _ in range(6)]
+    y = [b.alloc() for _ in range(6)]
+    b.output("x", x)
+    b.output("y", y)
+    b.output("z", b.vec_xor(x, y))
+    p = b.finish()
+    assert not p.in_ports
+    rng = np.random.default_rng(5)
+    rows = 40
+    ins = {"x": rng.integers(0, 64, rows).astype(np.uint64),
+           "y": rng.integers(0, 64, rows).astype(np.uint64)}
+    results = {
+        "numpy": kops.run_program(p, ins, rows, backend="numpy"),
+        "gate-serial": kops.run_program(p, ins, rows, backend="ref",
+                                        levelized=False),
+        "levelized-fused": kops.run_program(p, ins, rows, backend="ref"),
+        "levelized-padded-io": kops.run_program(
+            p, {k: v.astype(object) for k, v in ins.items()}, rows,
+            backend="ref"),
+    }
+    want = results["numpy"]
+    assert set(want) == {"x", "y", "z"}       # all ports, not {}
+    for path, got in results.items():
+        assert set(got) == set(want), path
+        for k in want:
+            assert all(int(a) == int(b) for a, b in zip(got[k], want[k])), \
+                (path, k)
+
+
+def test_all_ports_declared_input_returns_all_ports():
+    """The degenerate direction case (every port an input) must fall back
+    to returning all ports, not {} -- on every backend."""
+    b = Builder()
+    x = b.input("x", 4)
+    y = b.input("y", 4)
+    b.vec_xor(x, y)               # compute something, expose no output port
+    p = b.finish()
+    assert set(p.ports) == p.in_ports == {"x", "y"}
+    assert not p.out_ports        # raw declaration is empty ...
+    ins = {"x": np.array([3, 9], np.uint64), "y": np.array([5, 12], np.uint64)}
+    for backend, lev in [("numpy", True), ("ref", True), ("ref", False),
+                         ("pallas", True), ("pallas", False)]:
+        out = kops.run_program(p, ins, 2, backend=backend, levelized=lev)
+        assert set(out) == {"x", "y"}, (backend, lev)   # ... but never {}
+        assert np.array_equal(out["x"], ins["x"]), (backend, lev)
+        assert np.array_equal(out["y"], ins["y"]), (backend, lev)
