@@ -12,7 +12,10 @@
 ``--json PATH`` additionally writes the rows as machine-readable JSON
 (see BENCH_<n>.json checked in per PR for the perf trajectory);
 ``--only PREFIX`` restricts to row-name prefixes (e.g. ``--only kernel``
-for the smoke invocation wired into the test suite).
+for the smoke invocation wired into the test suite); ``--compare
+BENCH_<n>.json`` prints a per-row delta table against a previous run and
+exits nonzero when any tracked ``kernel/`` row regresses by more than
+``--threshold`` (default 20%) -- the perf-regression gate future PRs run.
 """
 
 from __future__ import annotations
@@ -90,9 +93,6 @@ def _kernel_rows(only: str = ""):
     from repro.core.floatfmt import FP16
     from repro.kernels import ops as kops
 
-    def want(name):
-        return not only or name.startswith(only) or only.startswith(name)
-
     prog = bitserial_fp.build_fp_add(FP16)
     rng = np.random.default_rng(0)
     n = 8192
@@ -108,21 +108,70 @@ def _kernel_rows(only: str = ""):
             reps=20)
 
     rows = []
-    if want("kernel/fp16_add_8k_rows"):
-        dt = bench(backend="ref")
+
+    def want_row(name):
+        """Row-granular gating (name extends the --only prefix), so
+        single-row invocations don't pay for their siblings."""
+        return not only or name.startswith(only)
+
+    _base = []
+
+    def base_dt():
+        """The tracked ref-slots wall time; benched lazily exactly once
+        (several rows report their ratio against it)."""
+        if not _base:
+            _base.append(bench(backend="ref"))
+        return _base[0]
+
+    if want_row("kernel/fp16_add_8k_rows"):
+        # tracked row: the default executor path (contiguous-slot schedule,
+        # scan executors, butterfly bridges -- DESIGN.md §9)
+        dt = base_dt()
         sched = kops.program_schedule(prog)
         rows.append(("kernel/fp16_add_8k_rows", dt * 1e6, {
             "rows_per_s": _rate(n, dt), "backend": "ref", "levelized": 1,
-            "levels": int(sched.n_levels), "level_width": int(sched.width),
-            "cells": int(sched.n_cells)}))
+            "schedule": "slots", "levels": int(sched.n_levels),
+            "level_width": int(sched.width), "cells": int(sched.n_cells),
+            "copy_gates": int(sched.copy_gates)}))
+    if want_row("kernel/fp16_add_8k_rows_dense"):
+        dtd = bench(backend="ref", schedule="dense")
+        rows.append(("kernel/fp16_add_8k_rows_dense", dtd * 1e6, {
+            "rows_per_s": _rate(n, dtd), "backend": "ref", "levelized": 1,
+            "schedule": "dense",
+            "speedup_slots": round(dtd / base_dt(), 2)}))
+    if want_row("kernel/fp16_add_8k_rows_serial"):
         dts = bench(backend="ref", levelized=False)
         rows.append(("kernel/fp16_add_8k_rows_serial", dts * 1e6, {
             "rows_per_s": _rate(n, dts), "backend": "ref", "levelized": 0,
-            "speedup_levelized": round(dts / dt, 2)}))
-        dtp = bench(backend="pallas")
+            "speedup_levelized": round(dts / base_dt(), 2)}))
+    if want_row("kernel/fp16_add_8k_rows_pallas"):
+        dtp = bench(backend="pallas", schedule="dense")
         rows.append(("kernel/fp16_add_8k_rows_pallas", dtp * 1e6, {
             "rows_per_s": _rate(n, dtp), "backend": "pallas",
-            "levelized": 1}))
+            "levelized": 1, "schedule": "dense"}))
+    if want_row("kernel/fp16_add_8k_rows_pallas_fused"):
+        # the slot-schedule pallas kernel: scatter-free scan body, one
+        # fused pallas_call -- the row that must be <= the tracked ref row
+        dtf = bench(backend="pallas", schedule="slots")
+        rows.append(("kernel/fp16_add_8k_rows_pallas_fused", dtf * 1e6, {
+            "rows_per_s": _rate(n, dtf), "backend": "pallas",
+            "levelized": 1, "schedule": "slots",
+            "vs_ref": round(dtf / base_dt(), 3)}))
+
+    # straight-line static-slice emission (the Mosaic-lowerable shape):
+    # segmented jaxpr chain on ref, fully unrolled kernel on pallas.  On
+    # CPU the unrolled forms pay per-op dispatch/interpret overhead; these
+    # rows track that gap honestly (hardware is the target).
+    if want_row("kernel/fp16_add_8k_rows_static"):
+        dss = bench(backend="ref", schedule="slots-static")
+        rows.append(("kernel/fp16_add_8k_rows_static", dss * 1e6, {
+            "rows_per_s": _rate(n, dss), "backend": "ref", "levelized": 1,
+            "schedule": "slots-static"}))
+    if want_row("kernel/fp16_add_8k_rows_pallas_static"):
+        dsp = bench(backend="pallas", schedule="slots-static")
+        rows.append(("kernel/fp16_add_8k_rows_pallas_static", dsp * 1e6, {
+            "rows_per_s": _rate(n, dsp), "backend": "pallas",
+            "levelized": 1, "schedule": "slots-static"}))
 
     # ---- scale path: 1 Mi rows, chunked streaming +/- row sharding
     nm = 1 << 20
@@ -137,13 +186,13 @@ def _kernel_rows(only: str = ""):
         run()                               # warm up (compiles chunk shape)
         return _best_of(run, reps=3)
 
-    if want("kernel/fp16_add_1M_rows_stream"):
+    if want_row("kernel/fp16_add_1M_rows_stream"):
         dt1 = bench_stream(mesh=None)
         rows.append(("kernel/fp16_add_1M_rows_stream", dt1 * 1e6, {
             "rows_per_s": _rate(nm, dt1), "backend": "ref", "levelized": 1,
             "chunk_rows": chunk, "n_devices": 1}))
 
-    if want("kernel/fp16_add_1M_rows_sharded"):
+    if want_row("kernel/fp16_add_1M_rows_sharded"):
         is_child = os.environ.get("_ARITPIM_SHARDED_BENCH_CHILD") == "1"
         if len(jax.devices()) > 1:          # already multi-device: in-process
             mesh = kops.row_mesh()
@@ -228,12 +277,64 @@ def collect_rows(only: str = "") -> list:
     return rows
 
 
+def compare_rows(rows, baseline_path: str, threshold: float = 0.20,
+                 complete: bool = True):
+    """Per-row delta table against a previous BENCH_<n>.json.
+
+    Rows are matched by name; only rows present in both runs with nonzero
+    wall times are ratioed.  *Tracked* rows (``kernel/`` wall-time rows --
+    the executor perf trajectory) whose time regresses by more than
+    ``threshold`` are returned as failures; derived-model rows (cycles/
+    karatsuba/fig9/...) are shown for drift but never gate.  When
+    ``complete`` (a full run, no ``--only`` filter), a tracked baseline
+    row that the current run no longer produces is itself a failure --
+    dropping or renaming a tracked row must not pass the gate vacuously.
+    """
+    with open(baseline_path) as f:
+        base = {r["name"]: r for r in json.load(f)["rows"]}
+    failures = []
+    print(f"\ncomparison vs {baseline_path} "
+          f"(gate: kernel/* rows, +{threshold:.0%}):")
+    print(f"{'row':44s} {'base_us':>12s} {'now_us':>12s} {'delta':>8s}")
+    current = set()
+    for name, us, _ in rows:
+        current.add(name)
+        old = base.get(name)
+        if old is None:
+            print(f"{name:44s} {'-':>12s} {us:12.1f} {'new':>8s}")
+            continue
+        old_us = old.get("us_per_call", 0.0)
+        if not old_us or not us:
+            continue
+        delta = us / old_us - 1.0
+        flag = ""
+        if name.startswith("kernel/") and delta > threshold:
+            flag = "  REGRESSED"
+            failures.append((name, old_us, us, delta))
+        print(f"{name:44s} {old_us:12.1f} {us:12.1f} {delta:+8.1%}{flag}")
+    if complete:
+        for name in sorted(base):
+            if name.startswith("kernel/") and name not in current:
+                print(f"{name:44s} {'?':>12s} {'-':>12s} "
+                      f"{'MISSING':>8s}  REGRESSED")
+                failures.append((name, base[name].get("us_per_call", 0.0),
+                                 float("nan"), float("inf")))
+    return failures
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH",
                     help="also write rows as machine-readable JSON")
     ap.add_argument("--only", default="",
                     help="restrict to row-name prefix (e.g. 'kernel')")
+    ap.add_argument("--compare", metavar="BASELINE",
+                    help="compare against a previous BENCH_<n>.json and "
+                         "exit nonzero when a tracked kernel/ row regresses "
+                         "past --threshold (the perf-regression gate)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="allowed fractional slowdown for tracked rows "
+                         "under --compare (default 0.20)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force an N-device CPU backend in this process "
                          "(0 = leave the backend alone; the sharded kernel "
@@ -269,6 +370,18 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
             f.write("\n")
+
+    if args.compare:
+        failures = compare_rows(rows, args.compare, args.threshold,
+                                complete=not args.only)
+        if failures:
+            print(f"\n{len(failures)} tracked row(s) regressed more than "
+                  f"{args.threshold:.0%} (or went missing):")
+            for name, old_us, us, delta in failures:
+                print(f"  {name}: {old_us:.1f}us -> {us:.1f}us "
+                      f"({delta:+.1%})")
+            sys.exit(1)
+        print("\nperf gate: OK")
 
 
 if __name__ == "__main__":

@@ -546,14 +546,28 @@ class LevelSchedule:
     """Dense levelized form of a NOR-lowered program.
 
     ``a``/``b``/``out`` are int32 ``(n_levels, width)`` physical-cell index
-    matrices, padded with sink lanes (a == b == sink, out == sink + lane) so
-    that every level has the same width *and* unique per-level output
-    indices; ``level_width[l]`` is the number of real gates in level ``l``.
-    NOT is encoded as NOR with b == a; INIT gates are folded away, so every
-    lane computes ``out <- ~(a | b)``.
+    matrices, padded so that every level has the same width *and* unique
+    per-level output indices; ``level_width[l]`` is the number of real gates
+    in level ``l``.  NOT is encoded as NOR with b == a; INIT gates are
+    folded away, so every lane computes ``out <- ~(a | b)``.
+
+    Two register-allocation layouts (``alloc``):
+
+    * ``"scan"`` -- per-cell free-list reuse; pad lanes read a dedicated
+      sink cell and write distinct sink cells (``out == sink + lane``).
+    * ``"slots"`` -- contiguous-slot allocation (DESIGN.md §9): each level's
+      outputs occupy one contiguous band of a ``slot_width``-wide slot, so
+      ``out[l] == out[l, 0] + lane`` for every lane and the level's write is
+      a single slice at offset ``level_off[l]``.  Input ports pack into one
+      contiguous run starting at cell 0; when the stacked output-port finals
+      are not naturally contiguous, explicit double-NOT copy levels
+      (``copy_gates``, reported separately from ``n_gates``) move them into
+      one contiguous band.  Pad lanes read cell 0 and write the slot's own
+      tail, keeping per-level output indices unique.
     """
     n_cells: int                    # physical cells incl. the sink region
     sink: int                       # first scratch cell absorbing pad lanes
+    #                                 (scan alloc only; -1 for slots)
     one_cell: Optional[int]         # cell pack_rows must fill with ones
     ports: Dict[str, List[int]]     # port name -> physical cells (final
     #                                 values: where outputs are unpacked)
@@ -570,6 +584,11 @@ class LevelSchedule:
     n_gates: int                    # live gates after DCE
     source_gates: int               # lowered NOR/NOT gates before DCE
     source_cells: int               # lowered cell count before reuse
+    alloc: str = "scan"             # register-allocation layout (see above)
+    slot_width: Optional[int] = None    # slot granularity ("slots" only)
+    copy_gates: int = 0             # inserted output-copy gates ("slots"
+    #                                 only; executor artifact, never part of
+    #                                 the Program cost model)
 
     @property
     def n_levels(self) -> int:
@@ -578,6 +597,16 @@ class LevelSchedule:
     @property
     def width(self) -> int:
         return self.a.shape[1]
+
+    @property
+    def level_off(self) -> np.ndarray:
+        """Per-level output-band base offsets (``alloc == "slots"`` only):
+        level ``l`` writes exactly cells ``[level_off[l], level_off[l] +
+        width)``, its band plus the slot's own pad tail."""
+        if self.alloc != "slots":
+            raise ValueError("level_off is defined for slot schedules only")
+        return (self.out[:, 0] if self.n_levels
+                else np.zeros(0, np.int32))
 
     def pack_cells(self, name: str) -> List[int]:
         """Physical cells where ``name``'s per-row values must be packed
@@ -688,7 +717,8 @@ def _native_levels(program: Program, low: Program, kept_set):
 
 def levelize(program: Program, mode: str = "asap",
              reuse_cells: bool = True,
-             max_width: Optional[int] = None) -> LevelSchedule:
+             max_width: Optional[int] = None,
+             alloc: str = "scan") -> LevelSchedule:
     """Levelize ``program``'s NOR lowering into a :class:`LevelSchedule`.
 
     mode:  'asap'   -- minimal-depth hazard levelization (default);
@@ -700,7 +730,23 @@ def levelize(program: Program, mode: str = "asap",
     the padding of the dense form.  Safe because register allocation is
     strict (a cell written at level L is never read at level L), so any
     partition of a level into ordered chunks executes identically.
+    alloc:  'scan'  -- per-cell free-list register allocation (default);
+            'slots' -- contiguous-slot allocation: inputs pack into one
+                       run at cell 0, every level's outputs land in one
+                       contiguous band of a ``max_width``-wide slot (slots
+                       reused at band granularity), and output-port finals
+                       are moved into one contiguous band by explicit
+                       double-NOT copy levels when needed.  This is the
+                       static-offset form the slot executors
+                       (``kernels.slots``) consume.
+
+    Levelization never mutates ``program``; the paper-facing cost model
+    (``cost()``/``parallel_cost()``) is computed from the original
+    instruction stream only, and slot-mode copy gates are an executor
+    artifact reported separately (``copy_gates``).
     """
+    if alloc not in ("scan", "slots"):
+        raise ValueError(f"unknown alloc mode {alloc!r}")
     low = program.lower_to_nor()
     n0 = low.n_cells
     ni = len(low.instrs)
@@ -740,12 +786,21 @@ def levelize(program: Program, mode: str = "asap",
         for c in cells:
             last_use.setdefault(c, 0)
 
+    by_level: Dict[int, List[int]] = {}
+    for i in kept:
+        by_level.setdefault(glevel[i], []).append(i)
+
+    if alloc == "slots":
+        return _alloc_slots(low, n0, va, vb, out_val, kept, glevel, depth,
+                            last_use, in_port_cells, by_level, max_width,
+                            is_gate)
+
     # ---- register allocation over live ranges
     phys: Dict[int, int] = {}
     free: List[int] = []
     n_phys = 0
 
-    def alloc():
+    def alloc_cell():
         nonlocal n_phys
         if reuse_cells and free:
             return heapq.heappop(free)
@@ -762,16 +817,13 @@ def levelize(program: Program, mode: str = "asap",
 
     one_cell = None
     if _VONE in last_use:
-        one_cell = alloc()
+        one_cell = alloc_cell()
         place(_VONE, one_cell)
     if _VZERO in last_use:
-        place(_VZERO, alloc())
+        place(_VZERO, alloc_cell())
     for v in sorted(v for v in last_use if 0 <= v < n0):
-        place(v, alloc())
+        place(v, alloc_cell())
 
-    by_level: Dict[int, List[int]] = {}
-    for i in kept:
-        by_level.setdefault(glevel[i], []).append(i)
     rows_a, rows_b, rows_o = [], [], []
     for L in range(1, depth + 1):
         if reuse_cells:
@@ -781,7 +833,7 @@ def levelize(program: Program, mode: str = "asap",
         for i in by_level.get(L, ()):
             ra.append(phys[int(va[i])])
             rb.append(phys[int(vb[i])])
-            place(n0 + i, alloc())
+            place(n0 + i, alloc_cell())
             ro.append(phys[n0 + i])
         if max_width is not None and len(ra) > max_width:
             for s in range(0, len(ra), max_width):
@@ -818,6 +870,160 @@ def levelize(program: Program, mode: str = "asap",
         a=a, b=b, out=o, level_width=lw,
         n_gates=len(kept), source_gates=int(is_gate.sum()),
         source_cells=n0)
+
+
+def _alloc_slots(low, n0, va, vb, out_val, kept, glevel, depth, last_use,
+                 in_port_cells, by_level, max_width, is_gate):
+    """Contiguous-slot register allocation (DESIGN.md §9).
+
+    Layout contract consumed by the slot executors (``kernels.slots``):
+
+    * input-port initial values occupy one contiguous run starting at cell
+      0, stacked in sorted-port-name order -- state assembly is a single
+      slice update instead of a scatter;
+    * every dense level writes one contiguous band: the level's outputs are
+      ``off + lane`` for ``off = out[l, 0]``, and the pad lanes fill the
+      slot's own tail, so the whole level is one ``max_width``-wide slice
+      write with unique output indices;
+    * slots (bands of ``max_width`` cells) are reused once every value of
+      their current occupancy is dead, keeping the state footprint close to
+      the scan allocator's instead of one-cell-per-gate;
+    * the stacked output-port finals end in one contiguous ascending run --
+      naturally when possible, otherwise via appended double-NOT copy
+      levels (2 gates per copied cell, reported in ``copy_gates``, never in
+      the Program's cost model).
+
+    Pad lanes read cell 0 (an always-present initial cell, never written by
+    any level), so the dense form stays executable by every generic
+    backend, and the hazard invariant (no level reads a cell it writes)
+    holds for real and pad lanes alike.
+    """
+    W = max_width
+    if W is None:
+        W = max((len(g) for g in by_level.values()), default=1)
+    W = max(int(W), 1)
+
+    # ---- placement: initial values first, inputs contiguous at cell 0
+    phys: Dict[int, int] = {}
+    n_phys = 0
+
+    def place_init(v):
+        nonlocal n_phys
+        if v not in phys:
+            phys[v] = n_phys
+            n_phys += 1
+
+    for name in sorted(in_port_cells):
+        for c in in_port_cells[name]:
+            place_init(c)
+    one_cell = None
+    if _VONE in last_use:
+        place_init(_VONE)
+        one_cell = phys[_VONE]
+    if _VZERO in last_use:
+        place_init(_VZERO)
+    for v in sorted(v for v in last_use if 0 <= v < n0):
+        place_init(v)
+    n_init = max(n_phys, 1)     # pad lanes read cell 0; reserve it
+    n_phys = n_init
+
+    # ---- slot allocation: one W-wide slot per dense row, band reuse
+    free_slots: List[int] = []
+    expiry: Dict[int, List[int]] = {}
+
+    def alloc_slot():
+        nonlocal n_phys
+        if free_slots:
+            return heapq.heappop(free_slots)
+        base = n_phys
+        n_phys += W
+        return base
+
+    rows_a, rows_b, rows_off, rows_w = [], [], [], []
+
+    def emit_row(ra, rb, outs_last_use):
+        """Allocate one W-slot band for a row of <= W gates; returns the
+        band base.  ``outs_last_use[k]`` is the last-read level of the k-th
+        output (``_INF`` pins the slot forever)."""
+        base = alloc_slot()
+        lu = max(outs_last_use, default=0)
+        if lu < _INF:
+            expiry.setdefault(lu, []).append(base)
+        rows_a.append(ra)
+        rows_b.append(rb)
+        rows_off.append(base)
+        rows_w.append(len(ra))
+        return base
+
+    for L in range(1, depth + 1):
+        for base in expiry.pop(L - 1, ()):
+            heapq.heappush(free_slots, base)
+        gates = by_level.get(L, ())
+        for s in range(0, len(gates), W):
+            chunk = gates[s:s + W]
+            ra = [phys[int(va[i])] for i in chunk]
+            rb = [phys[int(vb[i])] for i in chunk]
+            base = emit_row(ra, rb,
+                            [last_use.get(n0 + i, L) for i in chunk])
+            for k, i in enumerate(chunk):
+                phys[n0 + i] = base + k
+
+    # ---- output copy stage: force the stacked output finals contiguous
+    out_names = sorted(low.out_ports or low.ports)
+    finals = [phys[v] for name in out_names for v in out_val[name]]
+    copy_gates = 0
+    if finals and finals != list(range(finals[0], finals[0] + len(finals))):
+        k = len(finals)
+        n_chunks = (k + W - 1) // W
+        # stage 1: t <- NOT(final), into per-chunk staging slots
+        stage = []
+        copy_level = depth + 1
+        for s in range(0, k, W):
+            chunk = finals[s:s + W]
+            base = emit_row(list(chunk), list(chunk),
+                            [copy_level + 1] * len(chunk))
+            stage.extend(base + j for j in range(len(chunk)))
+        # stage 2: out <- NOT(t), into one fresh contiguous band (chunk
+        # slots allocated back to back at the top of the state)
+        out_base = n_phys
+        n_phys += n_chunks * W
+        for ci, s in enumerate(range(0, k, W)):
+            chunk = stage[s:s + W]
+            rows_a.append(list(chunk))
+            rows_b.append(list(chunk))
+            rows_off.append(out_base + ci * W)
+            rows_w.append(len(chunk))
+        # remap the output ports onto the copy band, in stacked order
+        new_cells = iter(range(out_base, out_base + k))
+        remapped = {name: [next(new_cells) for _ in out_val[name]]
+                    for name in out_names}
+        copy_gates = 2 * k
+    else:
+        remapped = {}
+
+    # ---- dense matrices
+    D = len(rows_a)
+    a = np.zeros((D, W), np.int32)
+    b = np.zeros((D, W), np.int32)
+    o = np.zeros((D, W), np.int32)
+    lw = np.asarray(rows_w, np.int32) if D else np.zeros(0, np.int32)
+    for l in range(D):
+        w = rows_w[l]
+        a[l, :w] = rows_a[l]
+        b[l, :w] = rows_b[l]
+        o[l] = rows_off[l] + np.arange(W, dtype=np.int32)
+    ports = {name: remapped.get(name) or [phys[v] for v in vals]
+             for name, vals in out_val.items()}
+    in_cells = {name: [phys[c] for c in cells]
+                for name, cells in in_port_cells.items()}
+    return LevelSchedule(
+        n_cells=n_phys, sink=-1, one_cell=one_cell, ports=ports,
+        in_cells=in_cells,
+        in_ports=low.in_ports, out_ports=low.out_ports,
+        a=a, b=b, out=o, level_width=lw,
+        n_gates=len(kept), source_gates=int(is_gate.sum()),
+        source_cells=n0, alloc="slots", slot_width=W,
+        copy_gates=copy_gates)
 
 
 def memoize_build(fn):

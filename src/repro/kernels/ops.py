@@ -32,12 +32,30 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.gates import LevelSchedule, levelize
-from .pim_exec import (TILE_W, pim_exec_level_fused,
-                       pim_exec_level_padded_io, pim_exec_padded)
+from . import slots as kslots
+from .pim_exec import (TILE_W, make_slots_static, pim_exec_level_fused,
+                       pim_exec_level_padded_io, pim_exec_padded,
+                       pim_exec_slots_fused, pim_exec_slots_io)
 from .ref import (pim_exec_ref, pim_exec_ref_level_fused,
                   pim_exec_ref_level_io)
+from .slots import (as_run, pim_exec_ref_slots_fused, pim_exec_ref_slots_io)
 
 _FULL = np.uint32(0xFFFFFFFF)
+
+# Default schedule compilation mode for the levelized jax backends:
+#   'slots'        -- contiguous-slot schedule + scan executors (DESIGN.md
+#                     §9): band slice writes instead of scatters, slice
+#                     state assembly/extraction, butterfly bridges.  The
+#                     fast path on CPU and the default.
+#   'slots-static' -- slot schedule + the straight-line static-slice
+#                     executors (segmented schedule-to-jaxpr chain on
+#                     'ref', the Mosaic-lowerable unrolled kernel on
+#                     'pallas').  The hardware-shaped emission; on CPU it
+#                     pays per-op overhead for the unrolled form.
+#   'dense'        -- the PR-1/2 dense index-matrix executors
+#                     (gather -> NOR -> scatter per level).
+DEFAULT_SCHEDULE = "slots"
+SCHEDULES = ("slots", "slots-static", "dense")
 
 # Streaming chunk size (rows).  262144 rows = 8192 packed words: big enough
 # to amortize per-chunk dispatch (and to give each shard of a several-way
@@ -137,43 +155,103 @@ def output_names(ports_owner) -> list:
 # sweet spot on CPU interpret mode; see ISSUE 1 / BENCH_1.json).
 LEVEL_MAX_WIDTH = 8
 
+# Slot-schedule width: the W-wide band granularity of the contiguous-slot
+# allocator.  Narrower slots mean more scan iterations but a smaller state
+# (slots turn over faster), and on XLA:CPU the level loop's cost tracks the
+# carried state size much more than the iteration count -- W=6 won the
+# sweep on the tracked row (BENCH_3) with W in 4..6 within noise of each
+# other and W>=8 measurably slower.
+SLOT_WIDTH = 6
+
 
 @dataclasses.dataclass
 class _Compiled:
-    """Lazily-populated per-structure compilation artifacts."""
+    """Lazily-populated per-structure compilation artifacts (dense and slot
+    schedules, device index buffers, and the static straight-line chains,
+    all shared under one content-hash entry)."""
     arrays: Optional[tuple] = None              # (ops, a, b, o, n_cells)
     schedule: Optional[LevelSchedule] = None
     sched_dev: Optional[tuple] = None           # (la, lb, lo, out_idx, names)
     in_idx: Optional[dict] = None               # input-name tuple -> indices
+    slot_schedule: Optional[LevelSchedule] = None
+    slot_dev: Optional[tuple] = None
+    slot_in: Optional[dict] = None              # name tuple -> (idx, base)
+    static_chain: Optional[dict] = None         # statics key -> callable
 
     def get_arrays(self, program):
         if self.arrays is None:
             self.arrays = program.to_arrays()
         return self.arrays
 
-    def get_schedule(self, program) -> LevelSchedule:
+    def get_schedule(self, program, schedule: str = "dense"
+                     ) -> LevelSchedule:
+        if schedule != "dense":
+            if self.slot_schedule is None:
+                self.slot_schedule = levelize(program, alloc="slots",
+                                              max_width=SLOT_WIDTH)
+            return self.slot_schedule
         if self.schedule is None:
             self.schedule = levelize(program, max_width=LEVEL_MAX_WIDTH)
         return self.schedule
 
-    def get_sched_dev(self, program):
+    def get_sched_dev(self, program, schedule: str = "dense"):
+        if schedule != "dense":
+            if self.slot_dev is None:
+                s = self.get_schedule(program, schedule)
+                names = output_names(s)
+                cells = _stacked_cells([s.ports[n] for n in names])
+                self.slot_dev = (jnp.asarray(s.a), jnp.asarray(s.b),
+                                 jnp.asarray(s.out), jnp.asarray(cells),
+                                 names, as_run(cells))
+            return self.slot_dev
         if self.sched_dev is None:
             s = self.get_schedule(program)
             names = output_names(s)
             cells = _stacked_cells([s.ports[n] for n in names])
             self.sched_dev = (jnp.asarray(s.a), jnp.asarray(s.b),
-                              jnp.asarray(s.out), jnp.asarray(cells), names)
+                              jnp.asarray(s.out), jnp.asarray(cells), names,
+                              None)
         return self.sched_dev
 
-    def get_in_idx(self, program, in_names):
-        if self.in_idx is None:
-            self.in_idx = {}
+    def get_in_idx(self, program, in_names, schedule: str = "dense"):
+        memo = {}
+        if schedule != "dense":
+            if self.slot_in is None:
+                self.slot_in = {}
+            memo = self.slot_in
+        else:
+            if self.in_idx is None:
+                self.in_idx = {}
+            memo = self.in_idx
         key = tuple(in_names)
-        if key not in self.in_idx:
-            s = self.get_schedule(program)
+        if key not in memo:
+            s = self.get_schedule(program, schedule)
             cells = _stacked_cells([s.pack_cells(n) for n in in_names])
-            self.in_idx[key] = jnp.asarray(cells)
-        return self.in_idx[key]
+            memo[key] = (jnp.asarray(cells), as_run(cells))
+        return memo[key]
+
+    def get_static_chain(self, program, in_names, fused, in_widths,
+                         out_widths):
+        if self.static_chain is None:
+            self.static_chain = {}
+        key = (tuple(in_names), fused, in_widths, out_widths)
+        if key not in self.static_chain:
+            s = self.get_schedule(program, "slots")
+            cells = _stacked_cells([s.pack_cells(n) for n in in_names])
+            self.static_chain[key] = kslots.build_static_chain(
+                s, in_widths, out_widths, output_names(s), cells,
+                fused=fused)
+        return self.static_chain[key]
+
+    def get_static_pallas(self, program, in_names, in_widths, out_widths):
+        if self.static_chain is None:
+            self.static_chain = {}
+        key = ("pallas", tuple(in_names), in_widths, out_widths)
+        if key not in self.static_chain:
+            s = self.get_schedule(program, "slots")
+            self.static_chain[key] = make_slots_static(
+                s, in_widths, out_widths, output_names(s))
+        return self.static_chain[key]
 
 
 def compiled(program) -> _Compiled:
@@ -194,10 +272,11 @@ def program_arrays(program):
     return compiled(program).get_arrays(program)
 
 
-def program_schedule(program) -> LevelSchedule:
-    """The levelized execution schedule of ``program``, cached by structural
-    content hash."""
-    return compiled(program).get_schedule(program)
+def program_schedule(program, schedule: str = DEFAULT_SCHEDULE
+                     ) -> LevelSchedule:
+    """The levelized execution schedule of ``program`` (slot or dense
+    layout per ``schedule``), cached by structural content hash."""
+    return compiled(program).get_schedule(program, schedule)
 
 
 # --------------------------------------------------------------------------
@@ -390,7 +469,8 @@ def _sharded_exec(fn, mesh: Mesh, check_rep: bool, **static) -> Callable:
 
 def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                         backend: str, mesh: Optional[Mesh] = None,
-                        pad_rows: Optional[int] = None) -> Callable:
+                        pad_rows: Optional[int] = None,
+                        schedule: str = DEFAULT_SCHEDULE) -> Callable:
     """Pack ``inputs`` and dispatch one levelized execution; returns a
     zero-arg ``finalize`` that blocks on the device result and unpacks it.
 
@@ -398,36 +478,75 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
     packing of the next chunk with device execution of this one -- the
     streaming executor's pipeline.  ``pad_rows`` fixes the padded row count
     (>= n_rows) so every streaming chunk shares one compiled shape.
+    ``schedule`` selects the compilation mode (see :data:`DEFAULT_SCHEDULE`).
     """
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r} "
+                         f"(expected one of {SCHEDULES})")
     comp = compiled(program)
-    sched = comp.get_schedule(program)
+    sched = comp.get_schedule(program, schedule)
     shards = 1 if mesh is None else mesh.devices.size
     pad_to = (TILE_W if backend == "pallas" else 1) * shards
     n_words = _n_words(n_rows if pad_rows is None else pad_rows, pad_to)
-    la, lb, lo, out_idx, names = comp.get_sched_dev(program)
+    la, lb, lo, out_idx, names, out_base = \
+        comp.get_sched_dev(program, schedule)
     in_names = sorted(inputs)
-    in_idx = comp.get_in_idx(program, in_names)
+    in_idx, in_base = comp.get_in_idx(program, in_names, schedule)
     one_cell = None if sched.one_cell is None else int(sched.one_cell)
-    in_widths = tuple(len(sched.ports[n]) for n in in_names)
+    in_widths = tuple(len(sched.pack_cells(n)) for n in in_names)
     out_widths = tuple(len(sched.ports[n]) for n in names)
+    k_out = sum(out_widths)
+    slots_ok = (schedule != "dense" and out_base is not None and k_out > 0)
+    use_static = schedule == "slots-static" and slots_ok and mesh is None
     vals = [np.asarray(inputs[n]) for n in in_names]
+    if backend == "pallas" and slots_ok and in_base is None:
+        slots_ok = False        # aliased input ports: slice assembly
+        #                         impossible, use the dense kernels
+    if not slots_ok and schedule != "dense":
+        # degenerate program for the slot layout: dense executors, which
+        # handle every schedule shape
+        sched = comp.get_schedule(program, "dense")
+        la, lb, lo, out_idx, names, out_base = \
+            comp.get_sched_dev(program, "dense")
+        in_idx, in_base = comp.get_in_idx(program, in_names, "dense")
+        one_cell = None if sched.one_cell is None else int(sched.one_cell)
+        schedule = "dense"
+        use_static = False
     if (vals and max(in_widths + out_widths, default=0) <= 32
             and all(v.dtype != object for v in vals)):
         # fused fast path: the bit transposes run inside the executor's
         # XLA program; only (n_ports, n_rows) uint32 cross the boundary
-        in_vals = np.zeros((len(vals), n_words * 32), np.uint32)
+        in_vals = np.empty((len(vals), n_words * 32), np.uint32)
         for p, v in enumerate(vals):
-            in_vals[p, :len(v)] = v.astype(np.uint32)
-        fn = (pim_exec_ref_level_fused if backend == "ref"
-              else pim_exec_level_fused)
-        static = dict(n_cells=sched.n_cells, one_cell=one_cell,
-                      in_widths=in_widths, out_widths=out_widths)
-        if mesh is None:
-            outs = fn(jnp.asarray(in_vals), in_idx, la, lb, lo, out_idx,
-                      **static)
+            in_vals[p, :len(v)] = v           # same-kind cast in place
+            in_vals[p, len(v):] = 0           # only the ragged tail zeroed
+        if use_static and backend == "ref":
+            run = comp.get_static_chain(program, in_names, True,
+                                        in_widths, out_widths)
+            outs = run(jnp.asarray(in_vals))
+        elif use_static and in_base == 0:
+            run = comp.get_static_pallas(program, in_names, in_widths,
+                                         out_widths)
+            outs = run(jnp.asarray(in_vals))
         else:
-            outs = _sharded_exec(fn, mesh, backend != "pallas", **static)(
-                jnp.asarray(in_vals), in_idx, la, lb, lo, out_idx)
+            if schedule != "dense":
+                fn = (pim_exec_ref_slots_fused if backend == "ref"
+                      else pim_exec_slots_fused)
+                static = dict(n_cells=sched.n_cells, one_cell=one_cell,
+                              in_widths=in_widths, out_widths=out_widths,
+                              in_base=in_base, out_base=out_base)
+            else:
+                fn = (pim_exec_ref_level_fused if backend == "ref"
+                      else pim_exec_level_fused)
+                static = dict(n_cells=sched.n_cells, one_cell=one_cell,
+                              in_widths=in_widths, out_widths=out_widths)
+            if mesh is None:
+                outs = fn(jnp.asarray(in_vals), in_idx, la, lb, lo,
+                          out_idx, **static)
+            else:
+                outs = _sharded_exec(fn, mesh, backend != "pallas",
+                                     **static)(
+                    jnp.asarray(in_vals), in_idx, la, lb, lo, out_idx)
 
         def finalize() -> Dict[str, np.ndarray]:
             o = np.asarray(outs)                     # blocks until ready
@@ -435,18 +554,32 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                     for p, n in enumerate(names)}
         return finalize
     in_rows = (np.vstack(
-        [_pack_port_words(inputs[n], len(sched.ports[n]), n_words)
+        [_pack_port_words(inputs[n], len(sched.pack_cells(n)), n_words)
          for n in in_names])
         if in_names else np.zeros((0, n_words), np.uint32))
-    exec_fn = (pim_exec_ref_level_io if backend == "ref"
-               else pim_exec_level_padded_io)
-    static = dict(n_cells=sched.n_cells, one_cell=one_cell)
-    if mesh is None:
-        sub = exec_fn(jnp.asarray(in_rows), in_idx, la, lb, lo, out_idx,
-                      **static)
+    if use_static and backend == "ref":
+        run = comp.get_static_chain(program, in_names, False,
+                                    in_widths, out_widths)
+        sub = run(jnp.asarray(in_rows))
     else:
-        sub = _sharded_exec(exec_fn, mesh, backend != "pallas", **static)(
-            jnp.asarray(in_rows), in_idx, la, lb, lo, out_idx)
+        # (slots-static + pallas has no wide-port static kernel; the scan
+        # slot executor is the closest hardware shape)
+        if schedule != "dense":
+            exec_fn = (pim_exec_ref_slots_io if backend == "ref"
+                       else pim_exec_slots_io)
+            static = dict(n_cells=sched.n_cells, one_cell=one_cell,
+                          k_out=k_out, in_base=in_base, out_base=out_base)
+        else:
+            exec_fn = (pim_exec_ref_level_io if backend == "ref"
+                       else pim_exec_level_padded_io)
+            static = dict(n_cells=sched.n_cells, one_cell=one_cell)
+        if mesh is None:
+            sub = exec_fn(jnp.asarray(in_rows), in_idx, la, lb, lo,
+                          out_idx, **static)
+        else:
+            sub = _sharded_exec(exec_fn, mesh, backend != "pallas",
+                                **static)(
+                jnp.asarray(in_rows), in_idx, la, lb, lo, out_idx)
 
     def finalize() -> Dict[str, np.ndarray]:
         return _unpack_sub(np.asarray(sub),
@@ -456,7 +589,8 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
 
 def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
                 backend: str = "pallas", levelized: bool = True,
-                mesh: Optional[Mesh] = None) -> Dict[str, np.ndarray]:
+                mesh: Optional[Mesh] = None,
+                schedule: str = DEFAULT_SCHEDULE) -> Dict[str, np.ndarray]:
     """Element-parallel execution of a gate program over ``n_rows`` rows.
 
     backend: 'pallas' (interpret-mode kernel), 'ref' (jnp oracle) or
@@ -465,6 +599,10 @@ def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
     ``levelized=False`` selects the original gate-serial executors.
     ``mesh`` (see :func:`row_mesh`) shards the packed word axis over
     devices; it requires a levelized jax backend.
+    ``schedule`` picks the schedule compilation mode: 'slots' (contiguous
+    bands + scan executors, the default), 'slots-static' (straight-line
+    static-slice executors; single-device -- under ``mesh`` it degrades to
+    the scan form), or 'dense' (the index-matrix executors).
 
     Returns the program's output ports -- all ports when the program does
     not declare port directions (the :func:`output_names` contract, which
@@ -484,7 +622,8 @@ def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
     if backend not in ("pallas", "ref"):
         raise ValueError(backend)
     if levelized:
-        return _dispatch_levelized(program, inputs, n_rows, backend, mesh)()
+        return _dispatch_levelized(program, inputs, n_rows, backend, mesh,
+                                   schedule=schedule)()
     comp = compiled(program)
     ops, a, b, o, n_cells = comp.get_arrays(program)
     pad_to = TILE_W if backend == "pallas" else 1
@@ -504,7 +643,8 @@ def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
 def run_program_streaming(program, inputs: Dict[str, np.ndarray],
                           n_rows: int, backend: str = "ref",
                           chunk_rows: int = DEFAULT_CHUNK_ROWS,
-                          mesh: Optional[Mesh] = None
+                          mesh: Optional[Mesh] = None,
+                          schedule: str = DEFAULT_SCHEDULE
                           ) -> Dict[str, np.ndarray]:
     """Chunked, pipelined, optionally sharded execution over ``n_rows``.
 
@@ -523,7 +663,8 @@ def run_program_streaming(program, inputs: Dict[str, np.ndarray],
             f"streaming requires a levelized jax backend, got {backend!r}")
     chunk_rows = max(32, (int(chunk_rows) + 31) // 32 * 32)  # word-aligned
     if n_rows <= chunk_rows:
-        return run_program(program, inputs, n_rows, backend, mesh=mesh)
+        return run_program(program, inputs, n_rows, backend, mesh=mesh,
+                           schedule=schedule)
     inputs = {n: np.asarray(v) for n, v in inputs.items()}
     for n, v in inputs.items():
         if len(v) != n_rows:
@@ -535,7 +676,7 @@ def run_program_streaming(program, inputs: Dict[str, np.ndarray],
         rows_k = min(chunk_rows, n_rows - start)
         chunk = {n: v[start:start + rows_k] for n, v in inputs.items()}
         fin = _dispatch_levelized(program, chunk, rows_k, backend, mesh,
-                                  pad_rows=chunk_rows)
+                                  pad_rows=chunk_rows, schedule=schedule)
         if pending is not None:
             parts.append(pending())     # blocks on k-1 while k executes
         pending = fin

@@ -18,14 +18,34 @@ Two executors (DESIGN.md §5):
     prefetch and drives a ``fori_loop``; NOT is NOR with b==a, so the compute
     is a single branchless select per gate.  One dynamic row slice per gate:
     this lowers on real TPU hardware today.
-  * :func:`pim_exec_level_padded` -- levelized.  The LevelSchedule's dense
-    (n_levels, width) index matrices drive a ``fori_loop`` over *levels*;
-    each iteration gathers the level's operand rows, NORs them as one
-    (width, TILE_W) block and scatters the results.  The gather/scatter use
-    vector indices, which Mosaic does not lower for uint32 row gathers yet,
-    so this path requires ``interpret=True`` (the mode every CPU test and
-    benchmark here runs) -- on hardware, fall back to the gate-serial kernel
-    or precompile per-level static slices.
+  * :func:`pim_exec_level_padded` -- levelized, dense ("scan"-alloc)
+    schedules.  The LevelSchedule's (n_levels, width) index matrices drive
+    a ``fori_loop`` over *levels*; each iteration gathers the level's
+    operand rows, NORs them as one (width, TILE_W) block and scatters the
+    results.  The gather/scatter use vector indices, which Mosaic does not
+    lower for uint32 row gathers, so this legacy path requires
+    ``interpret=True``.
+
+Slot-schedule kernels (DESIGN.md §9), consuming ``alloc="slots"``
+schedules from ``core.gates.levelize``:
+
+  * :func:`pim_exec_slots_fused` / :func:`pim_exec_slots_io` -- the fused
+    fast path: the kernel assembles the state from the input port rows
+    (one slice update; inputs are a contiguous run by construction), runs a
+    ``lax.scan`` over levels whose *write* side is a contiguous band
+    ``dynamic_update_slice`` (the scatter is gone), and emits the output
+    band as one slice.  The remaining vector gather on the operand read
+    side keeps this kernel interpret-only, but it is the structurally
+    leanest form and beats the jnp reference on the tracked benchmark row.
+  * :func:`pim_exec_slots_static` -- the rewritten levelized kernel
+    (:func:`_pim_level_kernel`): the straight-line static-slice emission
+    shared with ``kernels.slots``.  The level loop is unrolled at trace
+    time, every read is a ``lax.slice`` at a Python-constant offset (merged
+    into maximal runs), every band is an SSA value, and the output block is
+    a static concatenation -- **zero dynamic indexing**, so the kernel body
+    is Mosaic-lowerable on hardware.  ``interpret=True`` stays the CPU test
+    default; on CPU the unrolled form trades the loop for per-op interpret
+    overhead, which is why the scan kernel above is the CPU benchmark path.
 """
 
 from __future__ import annotations
@@ -34,8 +54,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .slots import (SLOT_UNROLL, build_init_block, emit_levels,
+                    pack_values, read_concat, static_plan, unpack_values)
 
 TILE_W = 256          # lane-dim words per block (multiple of 128)
 _FULL = 0xFFFFFFFF
@@ -74,10 +98,12 @@ def _pim_kernel(ops_ref, a_ref, b_ref, o_ref, state_ref, out_ref):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_cells", "interpret"))
+                   static_argnames=("n_cells", "interpret"),
+                   donate_argnums=(0,))
 def pim_exec_padded(state, ops, a, b, o, *, n_cells, interpret=True):
     """Run a lowered NOR program over ``state`` (uint32[n_cells, n_words]),
-    n_words a multiple of TILE_W.  Returns the final state."""
+    n_words a multiple of TILE_W.  Returns the final state.  ``state`` is
+    donated (single-use staging buffer on the gate-serial path)."""
     n_words = state.shape[1]
     _check_state_shape("pim_exec_padded", state, n_cells)
     grid = (n_words // TILE_W,)
@@ -94,7 +120,10 @@ def pim_exec_padded(state, ops, a, b, o, *, n_cells, interpret=True):
     )(ops, a, b, o, state)
 
 
-def _pim_level_kernel(la_ref, lb_ref, lo_ref, state_ref, out_ref):
+def _pim_level_gather_kernel(la_ref, lb_ref, lo_ref, state_ref, out_ref):
+    """Legacy levelized kernel for dense ("scan"-alloc) schedules: vector
+    gathers and scatters per level, which Mosaic does not lower -- retained
+    for ``schedule="dense"`` compatibility, interpret mode only."""
     n_levels = la_ref.shape[0]
     st0 = state_ref[...]
     if n_levels == 0:           # gate-free (passthrough) program
@@ -110,7 +139,8 @@ def _pim_level_kernel(la_ref, lb_ref, lo_ref, state_ref, out_ref):
     out_ref[...] = jax.lax.fori_loop(0, n_levels, body, st0)
 
 
-@functools.partial(jax.jit, static_argnames=("n_cells", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_cells", "interpret"),
+                   donate_argnums=(0,))
 def pim_exec_level_padded(state, la, lb, lo, out_idx=None, *, n_cells,
                           interpret=True):
     """Run a levelized NOR schedule over ``state`` (uint32[n_cells,
@@ -118,12 +148,14 @@ def pim_exec_level_padded(state, la, lb, lo, out_idx=None, *, n_cells,
     LevelSchedule's dense int32[n_levels, width] index matrices (padding
     lanes write distinct sink cells, keeping scatter indices unique).
     Returns the final state, or only the rows in ``out_idx`` (the port
-    cells) when given."""
+    cells) when given.  ``state`` is donated: the caller's buffer is
+    consumed (the padded paths materialize it purely as kernel input, so
+    the donation kills the defensive copy)."""
     n_words = state.shape[1]
     _check_state_shape("pim_exec_level_padded", state, n_cells)
     grid = (n_words // TILE_W,)
     final = pl.pallas_call(
-        _pim_level_kernel,
+        _pim_level_gather_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
@@ -167,3 +199,177 @@ def pim_exec_level_padded_io(in_rows, in_idx, la, lb, lo, out_idx, *,
     final = pim_exec_level_padded(st, la, lb, lo, n_cells=n_cells,
                                   interpret=interpret)
     return final[out_idx]
+
+
+# --------------------------------------------------------------------------
+# slot-schedule kernels (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+def _slot_scan_kernel(la_ref, lb_ref, lo_ref, in_ref, out_ref, *,
+                      n_cells, one_cell, k_in, in_base, out_base, k_out,
+                      unroll, has_levels=True):
+    """Scan-form slot kernel: state assembly, the level loop and the output
+    band extraction all happen on kernel-resident values.  Writes are
+    contiguous band slice updates (no scatter); the operand read remains a
+    vector gather, so this kernel is the interpret-mode fast path while
+    :func:`_pim_level_kernel` is the hardware-legal form.  ``has_levels``
+    is False for gate-free (passthrough) programs, whose index operands are
+    dummy 1x1 blocks (gridless pallas rejects 0-sized blocks)."""
+    n_words = in_ref.shape[1]
+    st = jnp.zeros((n_cells, n_words), jnp.uint32)
+    if k_in:                    # inputs are the leading contiguous run
+        st = lax.dynamic_update_slice(st, in_ref[...][:k_in], (in_base, 0))
+    if one_cell is not None:
+        st = st.at[one_cell].set(jnp.uint32(_FULL))
+    if has_levels:
+        W = la_ref.shape[1]
+        lab = jnp.concatenate([la_ref[...], lb_ref[...]], axis=1)
+        off = lo_ref[...][:, 0]
+
+        def body(s, idx):
+            ab, o = idx
+            g = s[ab]
+            return lax.dynamic_update_slice(s, ~(g[:W] | g[W:]),
+                                            (o, 0)), None
+
+        st, _ = lax.scan(body, st, (lab, off), unroll=unroll)
+    out_ref[...] = lax.dynamic_slice(st, (out_base, 0),
+                                     (out_ref.shape[0], n_words))
+
+
+def _nonempty_levels(la, lb, lo):
+    """Replace 0-sized schedule operands (gate-free programs) with dummy
+    1x1 blocks; returns (la, lb, lo, has_levels)."""
+    if la.shape[0] and la.shape[1]:
+        return la, lb, lo, True
+    dummy = jnp.zeros((1, 1), jnp.int32)
+    return dummy, dummy, dummy, False
+
+
+def _slots_call(kernel, k_out, n_words, interpret, la, lb, lo,
+                in_rows):
+    """Single whole-array ``pallas_call`` for the scan-form slot kernel.
+
+    Gridless on purpose: the kernel is interpret-only (its operand read is
+    a vector gather), and under interpretation every block boundary is a
+    real buffer copy -- a word-tiled grid would re-copy the schedule
+    operands per tile for no benefit.  The hardware-shaped, word-tiled
+    TILE_W grid lives on the static-slice kernel
+    (:func:`make_slots_static`), which is the Mosaic-lowerable form."""
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((max(k_out, 1), n_words), jnp.uint32),
+        interpret=interpret,
+    )(la, lb, lo, in_rows)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_cells", "one_cell", "in_widths", "out_widths", "in_base", "out_base",
+    "unroll", "interpret"))
+def pim_exec_slots_fused(in_vals, in_idx, la, lb, lo, out_idx, *,
+                         n_cells, one_cell, in_widths, out_widths,
+                         in_base, out_base, unroll=SLOT_UNROLL,
+                         interpret=True):
+    """Fused slot executor, Pallas backend: butterfly bit transposes wrap a
+    single scan-form kernel; only (n_ports, n_rows) uint32 values cross the
+    host/device boundary.  Requires the slot layout's contiguous input and
+    output runs (``in_base``/``out_base``)."""
+    n_words = in_vals.shape[1] // 32
+    packed = pack_values(in_vals, in_widths)
+    k_in, k_out = packed.shape[0], sum(out_widths)
+    if not k_in:        # constant-generator program: dummy zero block
+        packed = jnp.zeros((1, n_words), jnp.uint32)
+    la, lb, lo, has_levels = _nonempty_levels(la, lb, lo)
+    kern = functools.partial(
+        _slot_scan_kernel, n_cells=n_cells, one_cell=one_cell,
+        k_in=k_in, in_base=in_base if k_in else 0, out_base=out_base,
+        k_out=k_out, unroll=unroll, has_levels=has_levels)
+    sub = _slots_call(kern, k_out, n_words, interpret, la, lb, lo,
+                      packed)
+    return unpack_values(sub[:k_out], out_widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_cells", "one_cell", "k_out", "in_base", "out_base", "unroll",
+    "interpret"))
+def pim_exec_slots_io(in_rows, in_idx, la, lb, lo, out_idx, *,
+                      n_cells, one_cell, k_out, in_base, out_base,
+                      unroll=SLOT_UNROLL, interpret=True):
+    """Slot executor over pre-packed port rows, Pallas backend (arbitrary
+    port widths)."""
+    n_words = in_rows.shape[1]
+    k_in = in_rows.shape[0]
+    if not k_in:
+        in_rows = jnp.zeros((1, n_words), jnp.uint32)
+    la, lb, lo, has_levels = _nonempty_levels(la, lb, lo)
+    kern = functools.partial(
+        _slot_scan_kernel, n_cells=n_cells, one_cell=one_cell,
+        k_in=k_in, in_base=in_base if k_in else 0, out_base=out_base,
+        k_out=k_out, unroll=unroll, has_levels=has_levels)
+    sub = _slots_call(kern, k_out, n_words, interpret, la, lb, lo,
+                      in_rows)
+    return sub[:k_out]
+
+
+def _pim_level_kernel(sched, in_widths, out_names):
+    """The rewritten levelized kernel: build the static-slice straight-line
+    body for a slot schedule.  The returned kernel reads the packed input
+    block, reconstructs the initial region by concatenation (inputs are the
+    leading run; constants are broadcast rows), unrolls every level into
+    ``band = ~(A | B)`` with A/B as static-offset slice concatenations, and
+    stores the contiguous output band.  No gather, no scatter, no dynamic
+    offset anywhere: every index is a Python constant at trace time, which
+    is what makes the body Mosaic-lowerable."""
+    reads, out_srcs, n_init = static_plan(sched)
+    one_cell = None if sched.one_cell is None else int(sched.one_cell)
+    stacked_out = [s for name in out_names for s in out_srcs[name]]
+
+    def kernel(in_ref, out_ref):
+        packed = in_ref[...][:sum(in_widths)]
+        init_block = build_init_block(packed, n_init, one_cell)
+        bands = emit_levels(reads, 0, sched.n_levels, init_block, {})
+        sub = read_concat(init_block, bands, stacked_out)
+        if sub.shape[0] < out_ref.shape[0]:     # k_out == 0 pad block
+            pad = jnp.zeros((out_ref.shape[0] - sub.shape[0],
+                             out_ref.shape[1]), jnp.uint32)
+            sub = jnp.concatenate([sub, pad])
+        out_ref[...] = sub
+
+    return kernel
+
+
+def make_slots_static(sched, in_widths, out_widths, out_names,
+                      interpret=True):
+    """Hardware-legal levelized Pallas executor factory: returns a jitted
+    ``run(in_vals) -> out_vals`` wrapping one ``pallas_call`` whose body is
+    the fully static-slice form of ``sched`` (see
+    :func:`_pim_level_kernel`).  Fused bridges; ports of <= 32 cells.
+    Interpret mode pays per-op cost for the unrolled body on CPU -- this
+    entry exists for hardware lowering and bit-exactness testing, and is
+    benchmarked as its own row.  Callers cache the returned function (the
+    kernel closure embeds the whole unrolled program; rebuilding it per
+    call would retrace)."""
+    kernel = _pim_level_kernel(sched, in_widths, out_names)
+    k_out = sum(out_widths)
+
+    @jax.jit
+    def run(in_vals):
+        n_words = in_vals.shape[1] // 32
+        packed = pack_values(in_vals, in_widths)
+        k_in = packed.shape[0]
+        if not k_in:
+            packed = jnp.zeros((1, n_words), jnp.uint32)
+        sub = pl.pallas_call(
+            kernel,
+            grid=(n_words // TILE_W,),
+            in_specs=[pl.BlockSpec((max(k_in, 1), TILE_W),
+                                   lambda i: (0, i))],
+            out_specs=pl.BlockSpec((max(k_out, 1), TILE_W),
+                                   lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((max(k_out, 1), n_words),
+                                           jnp.uint32),
+            interpret=interpret,
+        )(packed)
+        return unpack_values(sub[:k_out], out_widths)
+
+    return run

@@ -1,0 +1,394 @@
+"""Slot-schedule executors: contiguous-band scan kernels and the
+schedule-to-jaxpr straight-line compiler (DESIGN.md §9).
+
+Consumes :class:`~repro.core.gates.LevelSchedule` in ``alloc="slots"`` form,
+whose layout contract turns the executor's per-level work from dynamic
+gather -> NOR -> scatter into static-offset slices:
+
+  * every level writes one contiguous band (``out[l] == out[l, 0] + lane``),
+    so the write side is a single ``dynamic_update_slice`` -- the scatter,
+    the op XLA:CPU handles worst and Mosaic cannot lower, is gone;
+  * input ports occupy one run at cell 0 (state assembly is a slice update);
+  * output-port finals occupy one run (extraction is a slice).
+
+Two emission strategies:
+
+  * **scan** (:func:`pim_exec_ref_slots_fused` / ``_io``): a
+    ``lax.scan`` over levels -- reads stay vector gathers, writes are
+    band slice updates.  The loop keeps the state buffer in place, which on
+    XLA:CPU beats any unrolled form (unrolled full-state updates copy the
+    whole state per level); this is the fast CPU path and the default.
+  * **static** (:func:`build_static_chain`): the straight-line compiler.
+    Levels unroll at trace time into pure dataflow over per-level *band
+    values* -- reads are ``lax.slice`` at Python-constant offsets (merged
+    into maximal contiguous runs), writes don't exist (a band is an SSA
+    value), and no monolithic state array is ever updated.  XLA
+    constant-folds the offsets and fuses across levels; compile time is
+    bounded by segmenting into fixed-size level chunks, each its own jitted
+    function.  This emission is also what the Mosaic-lowerable Pallas
+    kernel consumes (``kernels.pim_exec``): zero dynamic indexing of any
+    kind, hence hardware-legal.
+
+Bridges here are the butterfly bit-transposes (:func:`pack_values` /
+:func:`unpack_values`): a 32x32 bit-matrix transpose in 5 masked
+shift/xor steps per word block, replacing the (width, n_words, 32) bit
+expansion of the previous in-jit transposes -- ~10x less intermediate
+traffic, shared by the dense executors in ``kernels.ref`` too.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+_FULL = 0xFFFFFFFF
+
+# Default level-chunk size of the straight-line compiler: bounds per-segment
+# jaxpr size (and therefore XLA compile time, which grows superlinearly) at
+# the cost of one extra dispatch per chunk.
+SLOT_SEG_LEVELS = 128
+
+# Default scan unroll for the slot level loop (bodies per while-loop trip);
+# small unrolls amortize loop overhead without breaking XLA's in-place
+# carry updates.
+SLOT_UNROLL = 2
+
+
+# --------------------------------------------------------------------------
+# butterfly bit-transpose bridges (in-jit, ports of <= 32 cells)
+# --------------------------------------------------------------------------
+
+def transpose32(x):
+    """Bit-transpose 32x32 blocks: ``y[..., i]`` bit ``j`` == ``x[..., j]``
+    bit ``i``.  Five butterfly steps of masked shift/xor (Hacker's Delight
+    7-3, vectorized over leading axes; the double flip converts HD's
+    bit-reversed convention to the straight transpose)."""
+    x = x[..., ::-1]
+    j = 16
+    m = jnp.uint32(0x0000FFFF)
+    s = x.shape[:-1]
+    while j:
+        xr = x.reshape(s + (32 // (2 * j), 2, j))
+        lo, hi = xr[..., 0, :], xr[..., 1, :]
+        t = (lo ^ (hi >> j)) & m
+        x = jnp.stack([lo ^ t, hi ^ (t << j)], axis=-2).reshape(s + (32,))
+        j >>= 1
+        if j:
+            m = m ^ jnp.uint32(m << j)
+    return x[..., ::-1]
+
+
+def pack_values(in_vals, widths: Sequence[int]):
+    """Row-major -> column-major bit transpose: per-row port values
+    (uint32[n_ports, n_words*32]) to stacked port cell rows
+    (uint32[sum(widths), n_words]); bit w of row word i is row 32*i+w."""
+    n_words = in_vals.shape[1] // 32
+    rows = []
+    for p, wp in enumerate(widths):
+        t = transpose32(in_vals[p].reshape(n_words, 32)).T    # (32, n_words)
+        rows.append(t[:wp])
+    return jnp.concatenate(rows, axis=0) if rows else \
+        jnp.zeros((0, n_words), jnp.uint32)
+
+
+def unpack_values(sub, widths: Sequence[int]):
+    """Inverse of :func:`pack_values`: stacked port cell rows
+    (uint32[sum(widths), n_words]) to per-row values
+    (uint32[n_ports, n_words*32])."""
+    n_words = sub.shape[1]
+    outs = []
+    off = 0
+    for wp in widths:
+        blk = sub[off:off + wp]
+        off += wp
+        if wp < 32:
+            blk = jnp.concatenate(
+                [blk, jnp.zeros((32 - wp, n_words), jnp.uint32)], axis=0)
+        outs.append(transpose32(blk.T).reshape(-1))
+    return jnp.stack(outs)
+
+
+# --------------------------------------------------------------------------
+# run helpers
+# --------------------------------------------------------------------------
+
+def as_run(idx) -> Optional[int]:
+    """Start of the single contiguous ascending run ``idx`` forms, or None.
+    Slot schedules guarantee runs for stacked input cells and output-port
+    finals; detection keeps the executors correct for any schedule."""
+    idx = np.asarray(idx)
+    if idx.size == 0:
+        return 0
+    start = int(idx[0])
+    if np.array_equal(idx, np.arange(start, start + idx.size)):
+        return start
+    return None
+
+
+# --------------------------------------------------------------------------
+# scan emission: the fast CPU executors
+# --------------------------------------------------------------------------
+
+def _slot_levels(st, la, lb, lo, unroll):
+    """Level loop over a slot schedule: per level one vectorized gather of
+    both operand sides (stacked into a single (2*width,) index row -- one
+    gather op instead of two) and one contiguous band write
+    (``dynamic_update_slice`` at ``lo[l, 0]``) -- scatter-free."""
+    if la.shape[0] == 0:
+        return st
+    W = la.shape[1]
+    lab = jnp.concatenate([la, lb], axis=1)
+    off = lo[:, 0]
+
+    def body(s, idx):
+        ab, o = idx
+        g = s[ab]
+        return lax.dynamic_update_slice(s, ~(g[:W] | g[W:]), (o, 0)), None
+
+    st, _ = lax.scan(body, st, (lab, off), unroll=unroll)
+    return st
+
+
+def _assemble_slots(packed, in_idx, n_words, *, n_cells, one_cell, in_base):
+    """Zero state + input rows (slice update when the input cells form a
+    run, else scatter) + the folded INIT1 constant row."""
+    st = jnp.zeros((n_cells, n_words), jnp.uint32)
+    if packed.shape[0]:
+        if in_base is not None:
+            st = lax.dynamic_update_slice(st, packed, (in_base, 0))
+        else:
+            st = st.at[in_idx].set(packed, mode="promise_in_bounds")
+    if one_cell is not None:
+        st = st.at[one_cell].set(jnp.uint32(_FULL))
+    return st
+
+
+def _extract(st, out_idx, k_out, out_base):
+    return (lax.dynamic_slice(st, (out_base, 0), (k_out, st.shape[1]))
+            if out_base is not None else st[out_idx])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_cells", "one_cell", "in_widths", "out_widths", "in_base", "out_base",
+    "unroll"))
+def pim_exec_ref_slots_fused(in_vals, in_idx, la, lb, lo, out_idx, *,
+                             n_cells, one_cell, in_widths, out_widths,
+                             in_base=None, out_base=None,
+                             unroll=SLOT_UNROLL):
+    """Fused slot executor (ports of <= 32 cells): butterfly transposes,
+    state assembly, the scan level loop and the output transpose in one XLA
+    executable; only (n_ports, n_rows) uint32 cross the boundary.  Shares
+    the 6-array levelized signature, so the shard_map plumbing in
+    ``kernels.ops`` applies unchanged."""
+    st = _assemble_slots(pack_values(in_vals, in_widths), in_idx,
+                         in_vals.shape[1] // 32,
+                         n_cells=n_cells, one_cell=one_cell, in_base=in_base)
+    st = _slot_levels(st, la, lb, lo, unroll)
+    return unpack_values(_extract(st, out_idx, sum(out_widths), out_base),
+                         out_widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_cells", "one_cell", "k_out", "in_base", "out_base", "unroll"))
+def pim_exec_ref_slots_io(in_rows, in_idx, la, lb, lo, out_idx, *,
+                          n_cells, one_cell, k_out,
+                          in_base=None, out_base=None, unroll=SLOT_UNROLL):
+    """Slot executor over pre-packed port rows (arbitrary port widths):
+    ships in uint32[k_in, n_words], returns the output port rows."""
+    st = _assemble_slots(in_rows, in_idx, in_rows.shape[1],
+                         n_cells=n_cells, one_cell=one_cell, in_base=in_base)
+    st = _slot_levels(st, la, lb, lo, unroll)
+    return _extract(st, out_idx, k_out, out_base)
+
+
+# --------------------------------------------------------------------------
+# static emission: the schedule-to-jaxpr straight-line compiler
+# --------------------------------------------------------------------------
+
+Source = Tuple[object, int]          # ("i", init cell) or (row, lane)
+
+
+def static_plan(sched):
+    """Resolve every read of a slot schedule to its defining band at
+    compile time: returns ``(reads, out_srcs, n_init)`` where ``reads[l]``
+    is the pair of per-lane source lists of level ``l``, ``out_srcs`` maps
+    each port to its per-cell sources, and ``n_init`` is the size of the
+    initial (non-slot) region.  A source is
+    ``("i", cell)`` for the initial region or ``(row, lane)`` for the
+    band written by a dense row -- slot reuse is dissolved here, exactly
+    like the value numbering that built the schedule."""
+    if sched.alloc != "slots":
+        raise ValueError("static emission requires a slot schedule "
+                         f"(got alloc={sched.alloc!r})")
+    D = sched.n_levels
+    n_init = int(sched.out[:, 0].min()) if D else sched.n_cells
+    owner: Dict[int, Source] = {}
+
+    def src(c) -> Source:
+        c = int(c)
+        return owner.get(c, ("i", c))
+
+    reads: List[Tuple[List[Source], List[Source]]] = []
+    for l in range(D):
+        w = int(sched.level_width[l])
+        reads.append(([src(c) for c in sched.a[l, :w]],
+                      [src(c) for c in sched.b[l, :w]]))
+        off = int(sched.out[l, 0])
+        for k in range(w):
+            owner[off + k] = (l, k)
+    out_srcs = {name: [src(c) for c in cells]
+                for name, cells in sched.ports.items()}
+    return reads, out_srcs, n_init
+
+
+def read_concat(init_block, bands, srcs: List[Source]):
+    """Gather the source rows as a concatenation of static slices, merging
+    consecutive lanes of the same source array into one slice."""
+    parts = []
+    i = 0
+    while i < len(srcs):
+        kind, pos = srcs[i]
+        j = i + 1
+        while (j < len(srcs) and srcs[j][0] == kind
+               and srcs[j][1] == srcs[j - 1][1] + 1):
+            j += 1
+        arr = init_block if kind == "i" else bands[kind]
+        parts.append(lax.slice_in_dim(arr, pos, srcs[j - 1][1] + 1, axis=0))
+        i = j
+    if not parts:
+        return jnp.zeros((0, init_block.shape[1]), jnp.uint32)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def emit_levels(reads, lo_row: int, hi_row: int, init_block,
+                bands: Dict[int, object]) -> Dict[int, object]:
+    """Trace levels ``[lo_row, hi_row)`` as straight-line dataflow: each
+    level's band becomes one SSA value ``~(A | B)`` with A/B read by static
+    slices.  Shared by the ref segments and the Pallas static kernel."""
+    bands = dict(bands)
+    for l in range(lo_row, hi_row):
+        ra, rb = reads[l]
+        bands[l] = ~(read_concat(init_block, bands, ra)
+                     | read_concat(init_block, bands, rb))
+    return bands
+
+
+def _band_liveness(reads, out_srcs, D: int):
+    """last_row[r] = last row (or D for outputs) whose reads touch band r."""
+    last: Dict[int, int] = {}
+    for l in range(D):
+        for side in reads[l]:
+            for kind, _ in side:
+                if kind != "i":
+                    last[kind] = l
+    for srcs in out_srcs.values():
+        for kind, _ in srcs:
+            if kind != "i":
+                last[kind] = D
+    return last
+
+
+def _init_tail(n_init: int, k_in: int, one_cell: Optional[int], n_words):
+    """Constant rows of the initial region past the packed inputs: zeros,
+    with the folded INIT1 row at ``one_cell``.  Built from broadcasts so
+    the Pallas kernel stays constant-and-elementwise only."""
+    n_tail = n_init - k_in
+    if n_tail <= 0:
+        return None
+    if one_cell is None or not (k_in <= one_cell < n_init):
+        return jnp.zeros((n_tail, n_words), jnp.uint32)
+    rows = jnp.arange(n_tail, dtype=jnp.int32)[:, None]
+    return jnp.where(rows == (one_cell - k_in),
+                     jnp.uint32(_FULL), jnp.uint32(0)) * \
+        jnp.ones((1, n_words), jnp.uint32)
+
+
+def build_init_block(packed, n_init: int, one_cell: Optional[int]):
+    """Initial region from the packed input rows: inputs occupy the leading
+    run (slot layout), constants and uninitialized cells follow.  Falls
+    back to a scatter only when the inputs are not the leading run."""
+    k_in = packed.shape[0]
+    n_words = packed.shape[1]
+    tail = _init_tail(n_init, k_in, one_cell, n_words)
+    if tail is None:
+        return packed[:n_init]
+    return jnp.concatenate([packed, tail], axis=0) if k_in else tail
+
+
+def build_static_chain(sched, in_widths, out_widths, out_names,
+                       in_cells: Sequence[int],
+                       seg_levels: int = SLOT_SEG_LEVELS,
+                       fused: bool = True):
+    """Compile a slot schedule into a chain of jitted straight-line
+    segments (the bounded-compile-time form of the static emission).
+
+    Returns ``run(in_arr) -> out`` where ``in_arr`` is the fused row-major
+    value block (uint32[n_ports, n_words*32]) when ``fused`` else
+    pre-packed port rows (uint32[k_in, n_words]); ``out`` mirrors the
+    corresponding slot executor.  ``in_cells`` is the stacked cell list of
+    the ports the caller actually provides (a subset of the schedule's
+    input ports is fine; missing ports stay zero).  Segment boundaries
+    pass only the live bands (a dict pytree of (width, n_words) values) --
+    no monolithic state array exists at any point, so XLA never copies
+    one.
+    """
+    reads, out_srcs, n_init = static_plan(sched)
+    D = sched.n_levels
+    last = _band_liveness(reads, out_srcs, D)
+    one_cell = None if sched.one_cell is None else int(sched.one_cell)
+    stacked_out = [s for name in out_names for s in out_srcs[name]]
+    in_cells = list(in_cells)
+    leading_run = as_run(in_cells) == 0   # inputs are the leading run
+    in_idx_arr = None
+    if not leading_run:               # partial/aliased inputs: scatter
+        in_idx_arr = jnp.asarray(np.asarray(in_cells, np.int32))
+
+    def sched_words(in_arr):
+        return in_arr.shape[1] // 32 if fused else in_arr.shape[1]
+
+    def assemble(in_arr):
+        packed = pack_values(in_arr, in_widths) if fused else in_arr
+        if leading_run:
+            return build_init_block(packed, n_init, one_cell)
+        init = jnp.zeros((n_init, sched_words(in_arr)), jnp.uint32)
+        if packed.shape[0]:
+            init = init.at[in_idx_arr].set(packed, mode="promise_in_bounds")
+        if one_cell is not None:
+            init = init.at[one_cell].set(jnp.uint32(_FULL))
+        return init
+
+    bounds = list(range(0, D, max(int(seg_levels), 1))) + [D]
+
+    def make_seg(lo_row, hi_row):
+        keep = sorted(r for r in range(hi_row)
+                      if r in last and last[r] >= hi_row)
+
+        def seg(init_block, bands):
+            bands = emit_levels(reads, lo_row, hi_row, init_block, bands)
+            return {r: bands[r] for r in keep}
+
+        return jax.jit(seg)
+
+    segs = [make_seg(lo_row, hi_row)
+            for lo_row, hi_row in zip(bounds, bounds[1:]) if hi_row > lo_row]
+
+    @jax.jit
+    def post(init_block, bands):
+        sub = read_concat(init_block, bands, stacked_out)
+        return unpack_values(sub, out_widths) if fused else sub
+
+    pre = jax.jit(assemble)
+
+    def run(in_arr):
+        init_block = pre(in_arr)
+        bands: Dict[int, object] = {}
+        for seg in segs:
+            bands = seg(init_block, bands)
+        return post(init_block, bands)
+
+    return run

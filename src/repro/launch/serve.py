@@ -79,6 +79,8 @@ def pim_request(req: dict) -> dict:
             dtype = _PIM_DTYPES[req.get("dtype", "uint32")]
         if req.get("width") is not None:
             kw["width"] = int(req["width"])
+        if req.get("schedule") is not None:
+            kw["schedule"] = req["schedule"]    # slots / slots-static / dense
         x = np.asarray(req["x"], dtype)
         y = np.asarray(req["y"], dtype)
         t0 = time.perf_counter()
@@ -223,8 +225,16 @@ def main(argv=None):
     ap.add_argument("--pim-requests", type=int, default=4)
     ap.add_argument("--pim-dtype", default="uint32",
                     choices=sorted(_PIM_DTYPES))
+    from ..kernels.ops import SCHEDULES
+    ap.add_argument("--pim-schedule", default=None, choices=SCHEDULES,
+                    help="executor schedule mode (default: the ufunc "
+                         "config default, i.e. the contiguous-slot scan "
+                         "executors)")
     args = ap.parse_args(argv)
 
+    if args.pim_schedule:
+        from .. import pim_ufunc as pim
+        pim.configure(schedule=args.pim_schedule)
     if args.pim_stdin:
         return serve_pim_stdin()
     if args.pim:

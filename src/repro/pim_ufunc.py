@@ -47,12 +47,17 @@ class Config:
     chunk_rows: streaming chunk size; arrays larger than this stream through
     the pipelined executor.  shards: device count for row sharding (None =
     all available; 1 disables).  parallel: use the bit-parallel
-    (partition-parallel) builders instead of bit-serial.
+    (partition-parallel) builders instead of bit-serial.  schedule: the
+    executor's schedule compilation mode ('slots' contiguous-band scan
+    executors, the default; 'slots-static' straight-line static-slice
+    executors; 'dense' index-matrix executors) -- see
+    ``kernels.ops.DEFAULT_SCHEDULE``.
     """
     backend: str = "ref"
     chunk_rows: int = kops.DEFAULT_CHUNK_ROWS
     shards: Optional[int] = None
     parallel: bool = False
+    schedule: str = kops.DEFAULT_SCHEDULE
 
 
 config = Config()
@@ -78,6 +83,10 @@ def _resolve(kw):
         raise ValueError(f"unknown backend {backend!r}")
     chunk_rows = opt("chunk_rows", config.chunk_rows)
     parallel = opt("parallel", config.parallel)
+    schedule = opt("schedule", config.schedule)
+    if schedule not in kops.SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r} "
+                         f"(expected one of {kops.SCHEDULES})")
     if "mesh" in kw:
         mesh = kw.pop("mesh")
         kw.pop("shards", None)
@@ -88,15 +97,16 @@ def _resolve(kw):
         mesh = kops.row_mesh(opt("shards", config.shards))
     if kw:
         raise TypeError(f"unknown keyword arguments {sorted(kw)}")
-    return backend, chunk_rows, parallel, mesh
+    return backend, chunk_rows, parallel, mesh, schedule
 
 
-def _run(prog, inputs, n_rows, backend, chunk_rows, mesh):
+def _run(prog, inputs, n_rows, backend, chunk_rows, mesh, schedule):
     if backend == "numpy":
         return kops.run_program(prog, inputs, n_rows, backend)
     # streaming falls back to one-shot run_program below chunk_rows itself
     return kops.run_program_streaming(prog, inputs, n_rows, backend,
-                                      chunk_rows=chunk_rows, mesh=mesh)
+                                      chunk_rows=chunk_rows, mesh=mesh,
+                                      schedule=schedule)
 
 
 # --------------------------------------------------------------------------
@@ -150,40 +160,43 @@ def _vmax(v):
 def add(x, y, *, width=None, **kw):
     """Elementwise ``x + y`` with the full carry: (width+1)-bit sums as
     uint64 (object array beyond 63 bits)."""
-    backend, chunk, parallel, mesh = _resolve(kw)
+    backend, chunk, parallel, mesh, schedule = _resolve(kw)
     xr, yr, shape, w = _int_operands("add", x, y, width)
     prog = program_for("int-parallel" if parallel else "int-serial",
                        "add", w)
-    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh)
+    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh,
+               schedule)
     return out["z"].reshape(shape)
 
 
 def sub(x, y, *, width=None, **kw):
     """Elementwise ``x - y`` modulo 2**width (two's-complement wraparound),
     as uint64 (object array beyond 63 bits)."""
-    backend, chunk, parallel, mesh = _resolve(kw)
+    backend, chunk, parallel, mesh, schedule = _resolve(kw)
     xr, yr, shape, w = _int_operands("sub", x, y, width)
     prog = program_for("int-parallel" if parallel else "int-serial",
                        "sub", w)
-    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh)
+    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh,
+               schedule)
     return out["z"].reshape(shape)
 
 
 def mul(x, y, *, width=None, **kw):
     """Elementwise ``x * y``: exact double-width (2*width-bit) products as
     uint64, or an object array when 2*width exceeds 63 bits."""
-    backend, chunk, parallel, mesh = _resolve(kw)
+    backend, chunk, parallel, mesh, schedule = _resolve(kw)
     xr, yr, shape, w = _int_operands("mul", x, y, width)
     prog = program_for("int-parallel" if parallel else "int-serial",
                        "mul", w)
-    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh)
+    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh,
+               schedule)
     return out["z"].reshape(shape)
 
 
 def div(x, y, *, width=None, **kw):
     """Elementwise unsigned division: ``(x // y, x % y)`` as uint64 arrays
     (object beyond 63 bits).  Zero divisors are rejected."""
-    backend, chunk, parallel, mesh = _resolve(kw)
+    backend, chunk, parallel, mesh, schedule = _resolve(kw)
     xr, yr, shape, w = _int_operands("div", x, y, width)
     if xr.size and _vmin(yr) == 0:
         raise ValueError("pim.div: zero divisor")
@@ -191,7 +204,8 @@ def div(x, y, *, width=None, **kw):
     prog = program_for("int-parallel" if parallel else "int-serial",
                        "div", w)
     out = _run(prog, {"z": xr.astype(np.uint64) if xr.dtype != object
-                      else xr, "d": yr}, xr.size, backend, chunk, mesh)
+                      else xr, "d": yr}, xr.size, backend, chunk, mesh,
+               schedule)
     return out["q"].reshape(shape), out["r"].reshape(shape)
 
 
@@ -228,7 +242,7 @@ def _check_fp_bits(op, name, bits, fmt, reject_zero=False):
 
 def _fp(op, x, y, fmt, kw):
     check = kw.pop("check", True)
-    backend, chunk, parallel, mesh = _resolve(kw)
+    backend, chunk, parallel, mesh, schedule = _resolve(kw)
     x, y = np.broadcast_arrays(np.asarray(x), np.asarray(y))
     if fmt is None:
         if x.dtype != y.dtype or x.dtype not in _NP_FMT:
@@ -269,7 +283,8 @@ def _fp(op, x, y, fmt, kw):
         op = "add"
     prog = program_for("fp-parallel" if parallel else "fp-serial",
                        op, fmt_name)
-    out = _run(prog, {"x": xb, "y": yb}, xb.size, backend, chunk, mesh)["z"]
+    out = _run(prog, {"x": xb, "y": yb}, xb.size, backend, chunk, mesh,
+               schedule)["z"]
     return decode(np.asarray(out, np.uint64))
 
 

@@ -1,5 +1,6 @@
-"""Smoke test for the benchmark harness: the --json machine-readable mode
-(the per-PR perf trajectory format) and the --only section filter."""
+"""Smoke tests for the benchmark harness: the --json machine-readable mode
+(the per-PR perf trajectory format), the --only section filter, and the
+--compare perf-regression gate."""
 
 import json
 import os
@@ -9,15 +10,50 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def test_bench_json_smoke(tmp_path):
-    out = tmp_path / "bench.json"
+def _bench_env():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.run", "--only", "kernel",
-         "--json", str(out)],
-        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    return env
+
+
+def _run_bench(args, timeout=900):
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run"] + args,
+        cwd=REPO, env=_bench_env(), capture_output=True, text=True,
+        timeout=timeout)
+
+
+def _fake_baseline(path, name, us):
+    path.write_text(json.dumps(
+        {"meta": {"suite": "aritpim-repro"},
+         "rows": [{"name": name, "us_per_call": us}]}))
+
+
+def test_bench_compare_gate(tmp_path):
+    """--compare exits nonzero with a delta table when a tracked kernel row
+    regresses past the threshold, and passes against a slow baseline.
+    Measured on the cheap single-row section to keep the smoke test fast."""
+    only = ["--only", "kernel/fp16_add_8k_rows_serial"]
+    fast = tmp_path / "fast.json"
+    _fake_baseline(fast, "kernel/fp16_add_8k_rows_serial", 0.001)
+    proc = _run_bench(only + ["--compare", str(fast)])
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "REGRESSED" in proc.stdout
+    slow = tmp_path / "slow.json"
+    _fake_baseline(slow, "kernel/fp16_add_8k_rows_serial", 1e9)
+    proc = _run_bench(only + ["--compare", str(slow)])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "perf gate: OK" in proc.stdout
+    # untracked (non-kernel) rows never gate
+    proc = _run_bench(["--only", "karatsuba/N8", "--compare", str(fast)])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_bench_json_smoke(tmp_path):
+    out = tmp_path / "bench.json"
+    proc = _run_bench(["--only", "kernel/fp16_add_8k_rows",
+                       "--json", str(out)], timeout=900)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert proc.stdout.startswith("name,us_per_call,derived")
 
@@ -25,8 +61,11 @@ def test_bench_json_smoke(tmp_path):
     assert doc["meta"]["suite"] == "aritpim-repro"
     names = {r["name"] for r in doc["rows"]}
     assert "kernel/fp16_add_8k_rows" in names
+    assert "kernel/fp16_add_8k_rows_pallas_fused" in names
+    assert "kernel/fp16_add_8k_rows_pallas_static" in names
     for r in doc["rows"]:
         assert isinstance(r["us_per_call"], (int, float))
     row = next(r for r in doc["rows"]
                if r["name"] == "kernel/fp16_add_8k_rows")
     assert row["levelized"] == 1 and row["levels"] > 0
+    assert row["schedule"] == "slots"

@@ -1,0 +1,289 @@
+"""Contiguous-slot schedules and their executors (DESIGN.md §9): layout
+invariants, copy-gate accounting, bit-exact parity of the scan and
+straight-line (static) emissions against the cycle-accurate numpy oracle
+across every memoized build_* program family, and buffer donation."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitparallel as bp
+from repro.core import bitparallel_fp as bpf
+from repro.core import bitserial as bs
+from repro.core import bitserial_fp as bsf
+from repro.core.floatfmt import BF16, FP16
+from repro.core.gates import Builder, levelize
+from repro.kernels import ops as kops
+from repro.kernels import slots as kslots
+
+# every memoized build_* constructor family: serial + parallel, fixed + FP
+ALL_PROGRAMS = [
+    ("add16", lambda: bs.build_add(16)),
+    ("sub16", lambda: bs.build_sub(16)),
+    ("mul8", lambda: bs.build_mul(8)),
+    ("div8", lambda: bs.build_div(8)),
+    ("fp16_add", lambda: bsf.build_fp_add(FP16)),
+    ("fp16_mul", lambda: bsf.build_fp_mul(FP16)),
+    ("fp16_div", lambda: bsf.build_fp_div(FP16)),
+    ("bf16_add", lambda: bsf.build_fp_add(BF16)),
+    ("bp_add16", lambda: bp.build_bp_add(16)),
+    ("bp_mul8", lambda: bp.build_bp_mul(8)),
+    ("bp_fp16_add", lambda: bpf.build_bp_fp_add(FP16)),
+    ("bp_fp16_mul", lambda: bpf.build_bp_fp_mul(FP16)),
+]
+
+
+def _rand_inputs(prog, rows, seed):
+    rng = np.random.default_rng(seed)
+    return {n: np.array([int(x) for x in rng.integers(
+        0, 1 << min(len(prog.ports[n]), 62), rows)], np.uint64)
+        for n in prog.in_ports}
+
+
+# ------------------------------------------------------------- layout
+@pytest.mark.parametrize("name,build", ALL_PROGRAMS)
+def test_slot_layout_invariants(name, build):
+    """Slot schedules deliver the static-offset contract: every level's
+    outputs are one contiguous band at ``out[l, 0]``, stacked input cells
+    form one run starting at cell 0, and stacked output finals form one
+    run."""
+    prog = build()
+    sched = levelize(prog, alloc="slots", max_width=8)
+    assert sched.alloc == "slots" and sched.slot_width == 8
+    out_expect = sched.out[:, :1] + np.arange(sched.width, dtype=np.int32)
+    assert np.array_equal(sched.out, out_expect)
+    stacked_in = [c for n in sorted(sched.in_cells)
+                  for c in sched.in_cells[n]]
+    assert stacked_in == list(range(len(stacked_in)))
+    names = sorted(sched.out_ports or sched.ports)
+    outs = [c for n in names for c in sched.ports[n]]
+    assert outs == list(range(outs[0], outs[0] + len(outs)))
+    # pad lanes read cell 0, which no level ever writes
+    assert int(sched.out.min()) > 0 or sched.n_levels == 0
+
+
+@pytest.mark.parametrize("name,build", ALL_PROGRAMS[:6])
+def test_slot_hazard_freedom(name, build):
+    """Within a level no lane (real or pad) reads a cell the level writes,
+    and output indices stay unique."""
+    sched = levelize(build(), alloc="slots", max_width=8)
+    for l in range(sched.n_levels):
+        outs = sched.out[l]
+        assert len(set(outs.tolist())) == len(outs)
+        w = sched.level_width[l]
+        written = set(outs.tolist())            # incl. the slot's pad tail
+        reads = set(sched.a[l, :w].tolist()) | set(sched.b[l, :w].tolist())
+        assert not (written & reads)
+
+
+@pytest.mark.parametrize("name,build", ALL_PROGRAMS)
+def test_slot_mode_preserves_cost_and_reports_copies(name, build):
+    """Slot allocation is an executor artifact: the Program's cost model is
+    byte-identical before/after, and inserted copy gates are reported
+    separately from the DCE'd gate count."""
+    prog = build()
+    before = prog.cost().as_dict()
+    pbefore = prog.parallel_cost()
+    dense = levelize(prog, max_width=8)
+    sched = levelize(prog, alloc="slots", max_width=8)
+    assert prog.cost().as_dict() == before
+    after = prog.parallel_cost()
+    if pbefore is None:
+        assert after is None
+    else:
+        assert after.as_dict() == pbefore.as_dict()
+    # n_gates excludes copies; the dense schedule agrees on the gate count
+    assert sched.n_gates == dense.n_gates
+    assert sched.copy_gates % 2 == 0
+    if sched.copy_gates:
+        names = sorted(sched.out_ports or sched.ports)
+        k = sum(len(sched.ports[n]) for n in names)
+        assert sched.copy_gates == 2 * k
+    # copy lanes appear in the dense form but never in the cost model
+    total_lanes = int(sched.level_width.sum())
+    assert total_lanes == sched.n_gates + sched.copy_gates
+
+
+# ------------------------------------------------------------- executors
+@pytest.mark.parametrize("name,build", ALL_PROGRAMS)
+def test_scan_executors_match_numpy_oracle(name, build):
+    """Bit-exact parity of the slot scan executors (ref + pallas) against
+    the cycle-accurate numpy oracle, for all build_* families."""
+    prog = build()
+    rows = 37
+    ins = _rand_inputs(prog, rows, hash(name) & 0xFFFF)
+    want = kops.run_program(prog, ins, rows, backend="numpy")
+    for backend in ("ref", "pallas"):
+        got = kops.run_program(prog, ins, rows, backend=backend,
+                               schedule="slots")
+        for port in want:
+            assert np.array_equal(np.asarray(got[port], np.uint64),
+                                  np.asarray(want[port], np.uint64)), \
+                (backend, port)
+
+
+@pytest.mark.parametrize("name,build", ALL_PROGRAMS[:8])
+def test_static_executor_matches_numpy_oracle(name, build):
+    """The straight-line (schedule-to-jaxpr) emission is bit-exact too,
+    including across segment boundaries (seg_levels exercised well below
+    the default so multi-segment chains are covered)."""
+    prog = build()
+    rows = 19
+    ins = _rand_inputs(prog, rows, hash(name) & 0xFFF)
+    want = kops.run_program(prog, ins, rows, backend="numpy")
+    got = kops.run_program(prog, ins, rows, backend="ref",
+                           schedule="slots-static")
+    for port in want:
+        assert np.array_equal(np.asarray(got[port], np.uint64),
+                              np.asarray(want[port], np.uint64)), port
+
+
+def test_static_chain_segmentation_boundaries():
+    """Short segments force live bands across many chain boundaries; the
+    result must stay bit-exact."""
+    prog = bsf.build_fp_add(FP16)
+    sched = levelize(prog, alloc="slots", max_width=8)
+    in_names = sorted(prog.in_ports)
+    in_widths = tuple(len(sched.pack_cells(n)) for n in in_names)
+    out_names = sorted(sched.out_ports)
+    out_widths = tuple(len(sched.ports[n]) for n in out_names)
+    in_cells = [c for n in in_names for c in sched.pack_cells(n)]
+    run = kslots.build_static_chain(sched, in_widths, out_widths, out_names,
+                                    in_cells, seg_levels=17, fused=True)
+    rows = 11
+    ins = _rand_inputs(prog, rows, 7)
+    n_words = (rows + 31) // 32
+    in_vals = np.zeros((len(in_names), n_words * 32), np.uint32)
+    for p, n in enumerate(in_names):
+        in_vals[p, :rows] = ins[n].astype(np.uint32)
+    out = np.asarray(run(jnp.asarray(in_vals)))
+    want = kops.run_program(prog, ins, rows, backend="numpy")
+    for p, n in enumerate(out_names):
+        assert np.array_equal(out[p, :rows].astype(np.uint64),
+                              np.asarray(want[n], np.uint64)), n
+
+
+def test_static_pallas_kernel_matches():
+    """The rewritten static-slice Pallas kernel (zero dynamic indexing) is
+    bit-exact on a multi-level program."""
+    prog = bs.build_mul(8)
+    rows = 23
+    ins = _rand_inputs(prog, rows, 5)
+    want = kops.run_program(prog, ins, rows, backend="numpy")
+    got = kops.run_program(prog, ins, rows, backend="pallas",
+                           schedule="slots-static")
+    for port in want:
+        assert np.array_equal(np.asarray(got[port], np.uint64),
+                              np.asarray(want[port], np.uint64)), port
+
+
+def test_slots_streaming_and_degenerate_programs():
+    """Slot dispatch covers the streaming path and degenerate programs
+    (passthrough, constant generator) via the documented fallbacks."""
+    prog = bs.build_add(16)
+    n = 1500
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 1 << 16, n).astype(np.uint64)
+    y = rng.integers(0, 1 << 16, n).astype(np.uint64)
+    out = kops.run_program_streaming(prog, {"x": x, "y": y}, n,
+                                     backend="ref", chunk_rows=512,
+                                     schedule="slots")["z"]
+    assert np.array_equal(np.asarray(out, np.uint64), x + y)
+
+    b = Builder()
+    xs = b.input("x", 8)
+    b.output("z", xs)
+    p = b.finish()
+    vals = np.arange(40, dtype=np.uint64) * 5 % 256
+    for schedule in ("slots", "slots-static"):
+        for backend in ("ref", "pallas"):
+            got = kops.run_program(p, {"x": vals}, 40, backend=backend,
+                                   schedule=schedule)["z"]
+            assert np.array_equal(np.asarray(got, np.uint64), vals), \
+                (backend, schedule)
+
+    b = Builder()
+    ones = [b.const(1) for _ in range(3)]
+    b.output("z", ones + [b.const(0)])
+    p = b.finish()
+    for backend in ("ref", "pallas"):
+        got = kops.run_program(p, {}, 9, backend=backend, schedule="slots")
+        assert np.array_equal(np.asarray(got["z"], np.uint64),
+                              np.full(9, 0b0111, np.uint64)), backend
+
+
+def test_partial_inputs_agree_across_schedules():
+    """Callers may provide a subset of the input ports (missing ports are
+    zero); every schedule mode must agree -- the slots-static scatter
+    fallback used to crash here."""
+    prog = bs.build_add(8)
+    x = np.arange(16, dtype=np.uint64) * 9 % 256
+    want = kops.run_program(prog, {"y": x}, 16, backend="numpy")["z"]
+    for schedule in ("slots", "slots-static", "dense"):
+        for backend in ("ref", "pallas"):
+            got = kops.run_program(prog, {"y": x}, 16, backend=backend,
+                                   schedule=schedule)["z"]
+            assert np.array_equal(np.asarray(got, np.uint64),
+                                  np.asarray(want, np.uint64)), \
+                (backend, schedule)
+
+
+def test_butterfly_transpose_roundtrip():
+    """pack_values/unpack_values are inverse bijections and match the
+    bit-definition (bit w of word i is row 32*i + w)."""
+    rng = np.random.default_rng(0)
+    widths = (16, 7, 32)
+    vals = np.stack([rng.integers(0, 1 << w, 96).astype(np.uint32)
+                     for w in widths])
+    packed = np.asarray(kslots.pack_values(jnp.asarray(vals), widths))
+    off = 0
+    for p, w in enumerate(widths):
+        for c in range(w):
+            for i in range(3):
+                word = int(packed[off + c, i])
+                for r in range(32):
+                    assert (word >> r) & 1 == (int(vals[p, 32 * i + r])
+                                               >> c) & 1
+        off += w
+    back = np.asarray(kslots.unpack_values(jnp.asarray(packed), widths))
+    assert np.array_equal(back, vals)
+
+
+# ------------------------------------------------------------- donation
+def test_ref_level_state_donation():
+    """pim_exec_ref_level consumes its state buffer in place: the donated
+    input is invalidated, i.e. no defensive copy exists."""
+    from repro.kernels.ref import pim_exec_ref_level
+    la = jnp.zeros((1, 2), jnp.int32)
+    lo = jnp.asarray(np.array([[2, 3]], np.int32))
+    st = jnp.asarray(np.arange(8, dtype=np.uint32).reshape(4, 2))
+    out = pim_exec_ref_level(st, la, la, lo)
+    assert out.shape == (4, 2)
+    assert st.is_deleted()          # buffer donated, not copied
+
+
+def test_level_padded_state_donation():
+    """pim_exec_level_padded donates its padded state argument."""
+    from repro.kernels import pim_exec
+    n_cells = 3
+    st = jnp.zeros((n_cells, pim_exec.TILE_W), jnp.uint32)
+    la = jnp.zeros((1, 1), jnp.int32)
+    lo = jnp.asarray(np.array([[1]], np.int32))
+    out = pim_exec.pim_exec_level_padded(st, la, la, lo, n_cells=n_cells)
+    assert out.shape == (n_cells, pim_exec.TILE_W)
+    assert st.is_deleted()
+
+
+def test_slots_default_matches_dense_everywhere():
+    """The flipped default (schedule='slots') is invisible to callers:
+    dense and slot paths agree bit-exactly on the ufunc frontend."""
+    from repro import pim_ufunc as pim
+    rng = np.random.default_rng(11)
+    x = rng.integers(0, 1 << 16, 200).astype(np.uint16)
+    y = rng.integers(0, 1 << 16, 200).astype(np.uint16)
+    a = pim.add(x, y)
+    b = pim.add(x, y, schedule="dense")
+    c = pim.add(x, y, schedule="slots-static")
+    assert np.array_equal(a, b) and np.array_equal(a, c)
