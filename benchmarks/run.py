@@ -214,6 +214,66 @@ def _kernel_rows(only: str = ""):
     return rows
 
 
+def _serve_rows(only: str = ""):
+    """Mixed-traffic serving throughput (ISSUE 4 acceptance row): the same
+    interleaved request stream -- 8 distinct programs (uint16 add/sub/mul/
+    div + fp16 add/sub/mul/div), round-robin -- executed two ways: the
+    per-request serial loop (``--pim-stdin``'s execution model, one gate
+    program per request) vs the batched planner/coalescer
+    (``runtime/pim_batch``, ``--pim-serve``'s model: group by program
+    content hash, execute each group as one packed state, pipelined).
+    Both paths pay identical parse/validation work per request; the only
+    difference is row-axis coalescing."""
+    from repro import pim_ufunc as pim
+    from repro.runtime import pim_batch
+
+    rng = np.random.default_rng(0)
+    n_req_per_op = 8
+    rows_per_req = 1024
+
+    def fp16(n):
+        # mid-range exponents: the paper excludes overflow/underflow
+        return (rng.integers(10, 21, n).astype(np.uint16) << 10 |
+                rng.integers(0, 1 << 10, n).astype(np.uint16)
+                ).view(np.float16)
+
+    traffic = []
+    for _ in range(n_req_per_op):
+        n = rows_per_req
+        x = rng.integers(0, 1 << 16, n).astype(np.uint16)
+        y = rng.integers(0, 1 << 16, n).astype(np.uint16)
+        d = rng.integers(1, 1 << 16, n).astype(np.uint16)
+        fa, fb, fd = fp16(n), fp16(n), fp16(n)   # fd nonzero (exp >= 10)
+        traffic += [("add", x, y), ("sub", x, y), ("mul", x, y),
+                    ("div", x, d), ("fp_add", fa, fb), ("fp_sub", fa, fb),
+                    ("fp_mul", fa, fb), ("fp_div", fa, fd)]
+    total = len(traffic) * rows_per_req
+
+    def serial():
+        for op, x, y in traffic:
+            getattr(pim, op)(x, y)
+
+    runtime = pim_batch.BatchRuntime(pin_cap=16)
+
+    def batched():
+        runtime.execute([pim.prepare(op, x, y) for op, x, y in traffic])
+
+    serial()                    # warm: compile all 8 programs, both shapes
+    batched()
+    dts = _best_of(serial, reps=3)
+    dtb = _best_of(batched, reps=3)
+    runtime.close()
+    common = {"requests": len(traffic), "programs": 8,
+              "rows_per_request": rows_per_req}
+    return [
+        ("serve/mixed_8op_serial", dts * 1e6,
+         dict(common, rows_per_s=_rate(total, dts))),
+        ("serve/mixed_8op_batched", dtb * 1e6,
+         dict(common, rows_per_s=_rate(total, dtb),
+              speedup_vs_serial=round(dts / dtb, 2))),
+    ]
+
+
 def collect_rows(only: str = "") -> list:
     """All benchmark rows as (name, us_per_call, derived-dict) tuples."""
     rows = []
@@ -272,6 +332,8 @@ def collect_rows(only: str = "") -> list:
 
     if want("kernel"):
         rows.extend(_kernel_rows(only))
+    if want("serve"):
+        rows.extend(_serve_rows(only))
     if only:
         rows = [r for r in rows if r[0].startswith(only)]
     return rows

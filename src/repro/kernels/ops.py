@@ -87,17 +87,59 @@ _key_memo: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 _compiled: "collections.OrderedDict[bytes, _Compiled]" = \
     collections.OrderedDict()
 
+# Pinned entries (content key -> pin refcount) are exempt from LRU
+# eviction: the batched serving runtime pins its hot working set so mixed
+# traffic that keeps minting cold program structures can never churn a hot
+# program's schedule + device buffers out of the cache.  Pins are
+# refcounted (several pin caches may share a program); a fully pinned
+# cache may transiently exceed the cap -- unpinned entries still evict.
+_pinned: Dict[bytes, int] = {}
+
+
+def _evict_over_cap() -> None:
+    """Drop least-recently-used *unpinned* entries down to the cap."""
+    if len(_compiled) <= _COMPILED_CAP:
+        return
+    for key in list(_compiled):
+        if len(_compiled) <= _COMPILED_CAP:
+            break
+        if key not in _pinned:
+            del _compiled[key]
+
 
 def set_compiled_cache_cap(cap: int) -> int:
     """Set the compiled-program LRU capacity (entries); returns the old cap.
-    Shrinking evicts least-recently-used entries immediately."""
+    Shrinking evicts least-recently-used unpinned entries immediately."""
     global _COMPILED_CAP
     if cap < 1:
         raise ValueError(f"cache cap must be >= 1, got {cap}")
     old, _COMPILED_CAP = _COMPILED_CAP, cap
-    while len(_compiled) > _COMPILED_CAP:
-        _compiled.popitem(last=False)
+    _evict_over_cap()
     return old
+
+
+def pin_program(program) -> bytes:
+    """Pin ``program``'s compiled-cache entry against LRU eviction; returns
+    the content key (the token :func:`unpin_program` takes).  Creates the
+    entry if the program was never compiled, so artifacts built later land
+    in the pinned slot.  Pins nest (refcounted)."""
+    key = content_key(program)
+    if key not in _compiled:
+        _compiled[key] = _Compiled()
+    _pinned[key] = _pinned.get(key, 0) + 1
+    return key
+
+
+def unpin_program(key: bytes) -> bool:
+    """Release one pin on ``key``; returns True while pins remain.  The
+    entry stays cached but becomes evictable again once fully unpinned."""
+    n = _pinned.get(key, 0)
+    if n > 1:
+        _pinned[key] = n - 1
+        return True
+    _pinned.pop(key, None)
+    _evict_over_cap()
+    return False
 
 
 def content_key(program) -> bytes:
@@ -261,9 +303,22 @@ def compiled(program) -> _Compiled:
         entry = _compiled[key] = _Compiled()
     else:
         _compiled.move_to_end(key)
-    while len(_compiled) > _COMPILED_CAP:
-        _compiled.popitem(last=False)
+    _evict_over_cap()
     return entry
+
+
+def is_compiled(program, schedule: str = DEFAULT_SCHEDULE) -> bool:
+    """True when the compiled-program cache already holds ``program``'s
+    lowered schedule artifacts for ``schedule`` -- i.e. the next execution
+    pays no levelize/lowering cost.  A pure query: it never creates an
+    entry and never touches LRU order (serving uses it to report honest
+    ``cached`` flags without perturbing eviction)."""
+    entry = _compiled.get(content_key(program))
+    if entry is None:
+        return False
+    if schedule == "dense":
+        return entry.sched_dev is not None
+    return entry.slot_dev is not None
 
 
 def program_arrays(program):
@@ -683,3 +738,78 @@ def run_program_streaming(program, inputs: Dict[str, np.ndarray],
     parts.append(pending())
     return {name: np.concatenate([p[name] for p in parts])
             for name in parts[0]}
+
+
+def dispatch_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
+                     backend: str = "ref", mesh: Optional[Mesh] = None,
+                     pad_rows: Optional[int] = None,
+                     schedule: str = DEFAULT_SCHEDULE) -> Callable:
+    """Asynchronously dispatch one levelized execution; returns a zero-arg
+    ``finalize`` that blocks on the device result and unpacks the output
+    ports.  The pipelining primitive behind :func:`run_program_streaming`
+    and :func:`run_program_groups`: callers overlap host packing of the
+    next unit of work with device execution of this one."""
+    if backend not in ("pallas", "ref"):
+        raise ValueError(
+            f"dispatch requires a levelized jax backend, got {backend!r}")
+    return _dispatch_levelized(program, inputs, n_rows, backend, mesh,
+                               pad_rows=pad_rows, schedule=schedule)
+
+
+def run_program_groups(groups: Iterable[dict]) -> list:
+    """Execute several coalesced program groups back to back with
+    cross-group pipelining; returns their output dicts in input order.
+
+    Each group is a dict: ``program``, ``inputs`` (port name -> row
+    values), ``n_rows``, plus optional ``backend`` ('ref'), ``chunk_rows``,
+    ``mesh`` and ``schedule``.  The loop dispatches group ``k`` (JAX async)
+    and packs group ``k+1`` on the host while ``k`` executes -- the
+    streaming pipeline generalized across *heterogeneous* programs, which
+    is what lets the batched serving runtime keep the device busy across a
+    mixed-traffic plan.  Groups larger than ``chunk_rows`` tile into
+    word-aligned fixed-shape chunks inside the same pipeline (so one giant
+    group cannot stall its successors' packing).  A ``numpy``-backend
+    group is a synchronization point (the oracle is host-synchronous).
+    """
+    groups = list(groups)
+    parts: list = [[] for _ in groups]
+    pending: "collections.deque" = collections.deque()
+
+    def drain(limit: int) -> None:
+        while len(pending) > limit:
+            gi, fin = pending.popleft()
+            parts[gi].append(fin())
+
+    for gi, g in enumerate(groups):
+        program, n_rows = g["program"], int(g["n_rows"])
+        backend = g.get("backend") or "ref"
+        schedule = g.get("schedule") or DEFAULT_SCHEDULE
+        mesh = g.get("mesh")
+        inputs = {n: np.asarray(v) for n, v in g["inputs"].items()}
+        for n, v in inputs.items():
+            if len(v) != n_rows:
+                raise ValueError(
+                    f"group {gi}: input {n!r} has {len(v)} rows, "
+                    f"expected {n_rows}")
+        if backend == "numpy":
+            drain(0)
+            parts[gi].append(run_program(program, inputs, n_rows, "numpy"))
+            continue
+        chunk_rows = max(32, (int(g.get("chunk_rows") or DEFAULT_CHUNK_ROWS)
+                              + 31) // 32 * 32)
+        if n_rows <= chunk_rows:
+            pending.append((gi, _dispatch_levelized(
+                program, inputs, n_rows, backend, mesh, schedule=schedule)))
+            drain(1)
+            continue
+        for start in range(0, n_rows, chunk_rows):
+            rows_k = min(chunk_rows, n_rows - start)
+            chunk = {n: v[start:start + rows_k] for n, v in inputs.items()}
+            pending.append((gi, _dispatch_levelized(
+                program, chunk, rows_k, backend, mesh, pad_rows=chunk_rows,
+                schedule=schedule)))
+            drain(1)
+    drain(0)
+    return [ps[0] if len(ps) == 1 else
+            {k: np.concatenate([p[k] for p in ps]) for k in ps[0]}
+            for ps in parts]

@@ -20,6 +20,13 @@ Two services share this entry point:
 
       echo '{"op":"add","dtype":"uint16","x":[3,5],"y":[4,6]}' | \
           PYTHONPATH=src python -m repro.launch.serve --pim-stdin
+
+  ``--pim-serve`` is the batched variant of the same protocol: requests
+  admitted within a micro-batching window (``--pim-window-ms``, row cap
+  ``--pim-max-batch-rows``) are grouped by compiled-program structure and
+  each group executes as one packed state (``runtime/pim_batch.py``,
+  DESIGN.md §10).  Responses keep input order; a stats line goes to
+  stderr at end of stream.
 """
 
 from __future__ import annotations
@@ -27,6 +34,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import threading
 import time
 
 import jax
@@ -54,46 +62,74 @@ def _pim_encode(arr) -> list:
     return [int(v) for v in arr]
 
 
-def pim_request(req: dict) -> dict:
-    """Serve one ufunc request.
+# Parse/validation failures a request line can produce (anything else is a
+# server bug and should propagate).
+_PIM_REQ_ERRORS = (KeyError, TypeError, ValueError, OverflowError)
+
+
+def _pim_prepare_request(req: dict):
+    """Parse + validate one JSON request into a ``pim_ufunc.Prepared``
+    program handle (raises on malformed requests).
 
     Request: ``{"op": add|sub|mul|div|fp_add|fp_sub|fp_mul|fp_div,
     "x": [...], "y": [...]}`` plus either ``"dtype"`` (uint8..64 /
-    float16/float32) or ``"fmt"`` (bf16 etc., bit-pattern payloads), and
-    optional ``"width"`` for explicit fixed-point widths.
-
-    Response: ``{"op", "rows", "us"}`` with ``"result"`` (or ``"q"``/``"r"``
-    for division).  Validation failures come back as ``{"error": ...}``.
+    float16/float32) or ``"fmt"`` (bf16 etc., bit-pattern payloads),
+    optional ``"width"`` for explicit fixed-point widths and
+    ``"schedule"`` (slots / slots-static / dense).
     """
     from .. import pim_ufunc as pim
+    op = req["op"]
+    if op not in _PIM_INT_OPS + _PIM_FP_OPS:
+        raise ValueError(f"unknown op {op!r}")
+    kw = {}
+    if req.get("fmt") is not None:
+        kw["fmt"] = req["fmt"]
+        dtype = None
+    else:
+        dtype = _PIM_DTYPES[req.get("dtype", "uint32")]
+    if req.get("width") is not None:
+        kw["width"] = int(req["width"])
+    if req.get("schedule") is not None:
+        kw["schedule"] = req["schedule"]
+    x = np.asarray(req["x"], dtype)
+    y = np.asarray(req["y"], dtype)
+    return pim.prepare(op, x, y, **kw)
+
+
+def _pim_attach_result(resp: dict, op: str, out) -> dict:
+    if op == "div":
+        resp["q"], resp["r"] = _pim_encode(out[0]), _pim_encode(out[1])
+    else:
+        resp["result"] = _pim_encode(out)
+    return resp
+
+
+def pim_request(req: dict) -> dict:
+    """Serve one ufunc request (see :func:`_pim_prepare_request` for the
+    request schema).
+
+    Response: ``{"op", "rows", "us", "cached"}`` with ``"result"`` (or
+    ``"q"``/``"r"`` for division).  ``us`` is the execution latency only:
+    when the program structure was not yet compiled (``cached: false``),
+    first-call compilation -- levelize, schedule lowering, executor jit,
+    measured by a discarded warm-up row -- is reported separately as
+    ``compile_us``, so serving latency numbers stay honest.  Validation
+    failures come back as ``{"error": ...}``.
+    """
     try:
-        op = req["op"]
-        if op not in _PIM_INT_OPS + _PIM_FP_OPS:
-            raise ValueError(f"unknown op {op!r}")
-        fn = getattr(pim, op)
-        kw = {}
-        if req.get("fmt") is not None:
-            kw["fmt"] = req["fmt"]
-            dtype = None
-        else:
-            dtype = _PIM_DTYPES[req.get("dtype", "uint32")]
-        if req.get("width") is not None:
-            kw["width"] = int(req["width"])
-        if req.get("schedule") is not None:
-            kw["schedule"] = req["schedule"]    # slots / slots-static / dense
-        x = np.asarray(req["x"], dtype)
-        y = np.asarray(req["y"], dtype)
+        prep = _pim_prepare_request(req)
+        cached = prep.cached
+        resp = {"op": prep.op, "rows": int(prep.n_rows),
+                "cached": bool(cached)}
+        if not cached and prep.n_rows:
+            t0 = time.perf_counter()
+            prep.warm()
+            resp["compile_us"] = round((time.perf_counter() - t0) * 1e6, 1)
         t0 = time.perf_counter()
-        out = fn(x, y, **kw)
-        dt = time.perf_counter() - t0
-        resp = {"op": op, "rows": int(x.size),
-                "us": round(dt * 1e6, 1)}
-        if op == "div":
-            resp["q"], resp["r"] = _pim_encode(out[0]), _pim_encode(out[1])
-        else:
-            resp["result"] = _pim_encode(out)
-        return resp
-    except (KeyError, TypeError, ValueError, OverflowError) as e:
+        out = prep.run()
+        resp["us"] = round((time.perf_counter() - t0) * 1e6, 1)
+        return _pim_attach_result(resp, prep.op, out)
+    except _PIM_REQ_ERRORS as e:
         return {"error": f"{type(e).__name__}: {e}"}
 
 
@@ -116,6 +152,102 @@ def serve_pim_stdin(inp=None, outp=None) -> int:
         print(json.dumps(resp, sort_keys=True), file=outp, flush=True)
         served += 1
     return served
+
+
+def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
+                      max_batch_rows: int = 1 << 16, pin_cap: int = 32,
+                      stats: bool = True) -> dict:
+    """Batched JSON-lines loop (``--pim-serve``): same request/response
+    protocol as :func:`serve_pim_stdin`, but requests admitted within one
+    micro-batching window coalesce by compiled-program structure and each
+    group executes as one packed state (``runtime/pim_batch.py``).
+
+    A reader thread parses and validates lines into program handles while
+    the main loop executes the previous batch, so admission overlaps
+    execution.  Responses keep input order (batches are consecutive spans
+    of the input).  Per-request accounting: ``us`` (admission to response,
+    the end-to-end latency), ``queue_us`` (time spent waiting for the
+    window), ``exec_us`` (the batch's shared pipelined execution time),
+    ``batched`` (requests coalesced into this request's group), and
+    ``cached``.  At end of stream a stats summary line goes to stderr.
+    """
+    from ..runtime import pim_batch
+    inp = sys.stdin if inp is None else inp
+    outp = sys.stdout if outp is None else outp
+    q = pim_batch.BatchQueue(window_ms=window_ms,
+                             max_batch_rows=max_batch_rows)
+
+    def _admit():
+        for line in inp:
+            line = line.strip()
+            if not line:
+                continue
+            t_admit = time.perf_counter()
+            try:
+                prep = _pim_prepare_request(json.loads(line))
+            except json.JSONDecodeError as e:
+                q.put(({"error": f"JSONDecodeError: {e}"}, None, t_admit))
+            except _PIM_REQ_ERRORS as e:
+                q.put(({"error": f"{type(e).__name__}: {e}"}, None, t_admit))
+            else:
+                q.put((None, prep, t_admit), n_rows=prep.n_rows)
+        q.close()
+
+    threading.Thread(target=_admit, daemon=True).start()
+    runtime = pim_batch.BatchRuntime(pin_cap=pin_cap)
+    served = 0
+    try:
+        while (batch := q.collect()) is not None:
+            t_plan = time.perf_counter()
+            responses: dict = {}
+            live = []
+            for i, (err, prep, t_admit) in enumerate(batch):
+                if err is not None:
+                    responses[i] = err
+                else:
+                    live.append((i, prep, t_admit))
+            try:
+                results = runtime.execute([p for _, p, _ in live])
+            except Exception as e:              # poisoned group: fall back
+                results = None                  # to per-request execution
+                fallback = f"{type(e).__name__}: {e}"
+            t_done = time.perf_counter()
+            if results is not None:
+                for (i, prep, t_admit), r in zip(live, results):
+                    resp = {"op": prep.op, "rows": int(prep.n_rows),
+                            "us": round((t_done - t_admit) * 1e6, 1),
+                            "queue_us": round((t_plan - t_admit) * 1e6, 1),
+                            "exec_us": round(r.exec_us, 1),
+                            "batched": r.group_size, "cached": bool(r.cached)}
+                    responses[i] = _pim_attach_result(resp, prep.op, r.value)
+            else:
+                for i, prep, t_admit in live:
+                    try:
+                        t0 = time.perf_counter()
+                        out = prep.run()
+                        resp = {"op": prep.op, "rows": int(prep.n_rows),
+                                "us": round((time.perf_counter() - t0) * 1e6,
+                                            1),
+                                "batched": 1, "cached": True,
+                                "fallback": fallback}
+                        responses[i] = _pim_attach_result(resp, prep.op, out)
+                    except Exception as e:
+                        responses[i] = {"error": f"{type(e).__name__}: {e}"}
+            runtime.stats.errors += sum(
+                1 for r in responses.values() if "error" in r)
+            for i in range(len(batch)):
+                print(json.dumps(responses[i], sort_keys=True), file=outp,
+                      flush=True)
+            served += len(batch)
+    finally:
+        pinned = len(runtime.pins)
+        runtime.close()
+    st = runtime.stats
+    if stats:
+        print(st.summary(pinned=pinned), file=sys.stderr)
+    return {"served": served, "batches": st.batches, "groups": st.groups,
+            "rows": st.rows, "errors": st.errors, "pinned": pinned,
+            "rows_per_s": st.rows_per_s()}
 
 
 def serve_pim_synthetic(args) -> dict:
@@ -158,6 +290,20 @@ def serve_pim_synthetic(args) -> dict:
     n_dev = len(jax.devices())
     print(f"pim.{op} [{args.pim_dtype}]: {args.pim_requests} requests x "
           f"{n} rows on {n_dev} device(s) in {dt:.3f}s = {rate:,.0f} rows/s")
+    if getattr(args, "json", None):
+        # one row in the benchmarks/run.py --json / --compare format, so
+        # serving runs participate in the perf-regression gate
+        doc = {"meta": {"suite": "aritpim-repro",
+                        "tier1": "repro.launch.serve"},
+               "rows": [{"name": f"serve/{op}_{args.pim_dtype}_synthetic",
+                         "us_per_call": round(dt * 1e6 / args.pim_requests,
+                                              3),
+                         "rows_per_s": round(rate),
+                         "rows": n, "requests": args.pim_requests,
+                         "n_devices": n_dev}]}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
     return {"op": op, "rows": total, "seconds": dt, "rows_per_s": rate}
 
 
@@ -220,11 +366,27 @@ def main(argv=None):
                     help="serve the PIM ufunc API with synthetic load "
                          "instead of LLM decode")
     ap.add_argument("--pim-stdin", action="store_true",
-                    help="serve PIM ufunc requests as JSON lines on stdin")
+                    help="serve PIM ufunc requests as JSON lines on stdin "
+                         "(one program execution per request)")
+    ap.add_argument("--pim-serve", action="store_true",
+                    help="batched JSON-lines serving: coalesce requests "
+                         "that share a program structure inside a "
+                         "micro-batching window (runtime/pim_batch)")
+    ap.add_argument("--pim-window-ms", type=float, default=2.0,
+                    help="batching window after the first admitted "
+                         "request (--pim-serve; 0 = only what is queued)")
+    ap.add_argument("--pim-max-batch-rows", type=int, default=1 << 16,
+                    help="row cap per admission batch (--pim-serve)")
+    ap.add_argument("--pim-pin-cap", type=int, default=32,
+                    help="LRU-pinned working set of compiled schedules "
+                         "(--pim-serve; 0 disables pinning)")
     ap.add_argument("--pim-rows", type=int, default=1 << 20)
     ap.add_argument("--pim-requests", type=int, default=4)
     ap.add_argument("--pim-dtype", default="uint32",
                     choices=sorted(_PIM_DTYPES))
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="with --pim: write the synthetic-load result as a "
+                         "benchmarks/run.py-compatible row")
     from ..kernels.ops import SCHEDULES
     ap.add_argument("--pim-schedule", default=None, choices=SCHEDULES,
                     help="executor schedule mode (default: the ufunc "
@@ -232,14 +394,23 @@ def main(argv=None):
                          "executors)")
     args = ap.parse_args(argv)
 
+    import contextlib
+    ctx = contextlib.nullcontext()
     if args.pim_schedule:
+        # scoped override (not configure): the CLI choice must not leak
+        # into library defaults when serve is driven programmatically
         from .. import pim_ufunc as pim
-        pim.configure(schedule=args.pim_schedule)
-    if args.pim_stdin:
-        return serve_pim_stdin()
-    if args.pim:
-        return serve_pim_synthetic(args)
-    return serve_llm(args)
+        ctx = pim.options(schedule=args.pim_schedule)
+    with ctx:
+        if args.pim_serve:
+            return serve_pim_batched(window_ms=args.pim_window_ms,
+                                     max_batch_rows=args.pim_max_batch_rows,
+                                     pin_cap=args.pim_pin_cap)
+        if args.pim_stdin:
+            return serve_pim_stdin()
+        if args.pim:
+            return serve_pim_synthetic(args)
+        return serve_llm(args)
 
 
 if __name__ == "__main__":

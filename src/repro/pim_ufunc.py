@@ -24,8 +24,9 @@ subnormals are rejected up front (``check=False`` skips the scan).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -35,7 +36,11 @@ from .kernels import ops as kops
 
 __all__ = ["add", "sub", "mul", "div",
            "fp_add", "fp_sub", "fp_mul", "fp_div",
-           "config", "configure"]
+           "prepare", "Prepared",
+           "config", "configure", "options"]
+
+INT_OPS = ("add", "sub", "mul", "div")
+FP_OPS = ("fp_add", "fp_sub", "fp_mul", "fp_div")
 
 
 @dataclasses.dataclass
@@ -65,12 +70,34 @@ config = Config()
 
 def configure(**kw) -> Config:
     """Update module defaults (``configure(backend='pallas', shards=1)``);
-    returns the live :data:`config`."""
+    returns the live :data:`config`.  All keys are validated before any is
+    applied, so a bad call never leaves the config half-mutated.  Prefer
+    :func:`options` when the change should only cover a scope."""
+    unknown = [k for k in kw if k not in Config.__dataclass_fields__]
+    if unknown:
+        raise TypeError(f"unknown config field(s) {sorted(unknown)}")
     for k, v in kw.items():
-        if not hasattr(config, k):
-            raise TypeError(f"unknown config field {k!r}")
         setattr(config, k, v)
     return config
+
+
+@contextlib.contextmanager
+def options(**kw):
+    """Scoped :data:`config` overrides::
+
+        with pim.options(schedule="dense", backend="pallas"):
+            pim.add(x, y)            # runs under the overrides
+        # previous defaults restored, even on exception
+
+    The batched serving runtime uses this to pin a per-group schedule or
+    backend without leaking the choice into the process-wide defaults the
+    way a raw :func:`configure` call would.  Yields the live config."""
+    saved = {k: getattr(config, k) for k in Config.__dataclass_fields__}
+    try:
+        yield configure(**kw)
+    finally:
+        for k, v in saved.items():
+            setattr(config, k, v)
 
 
 def _resolve(kw):
@@ -98,6 +125,86 @@ def _resolve(kw):
     if kw:
         raise TypeError(f"unknown keyword arguments {sorted(kw)}")
     return backend, chunk_rows, parallel, mesh, schedule
+
+
+@dataclasses.dataclass
+class Prepared:
+    """A parsed, validated ufunc request bound to its gate program -- the
+    *program handle* the batched serving runtime plans over.
+
+    ``prepare(op, x, y, ...)`` performs everything a ufunc call does except
+    execution: broadcasting, width/format dispatch, operand validation, and
+    program lookup.  The handle exposes the pieces a batching layer needs:
+    the shared ``program`` (and its content-hash ``key``, the coalescing
+    group key), the row-major ``inputs``, the resolved execution config,
+    and ``finish`` -- the splitter hook that turns this request's slice of
+    a coalesced output back into the user-facing result (reshape, fp bit
+    decode, div's ``(q, r)`` pair).  ``run()`` executes standalone and is
+    exactly equivalent to the one-shot ufunc call.
+    """
+    op: str
+    program: object
+    inputs: Dict[str, np.ndarray]
+    n_rows: int
+    backend: str
+    chunk_rows: int
+    mesh: object
+    schedule: str
+    _finish: Callable
+
+    @property
+    def key(self) -> bytes:
+        """Content hash of the program -- structurally identical requests
+        share it, which is what makes coalescing trivial."""
+        return kops.content_key(self.program)
+
+    @property
+    def cached(self) -> bool:
+        """True when the compiled-program cache already holds this
+        program's schedule artifacts (execution pays no compile)."""
+        if self.backend == "numpy":
+            return True                     # the oracle never compiles
+        return kops.is_compiled(self.program, self.schedule)
+
+    def finish(self, outs: Dict[str, np.ndarray]):
+        """Decode raw output-port rows (this request's rows only) into the
+        user-facing result."""
+        return self._finish(outs)
+
+    def run(self):
+        """Execute standalone through the streaming executor (identical to
+        the plain ufunc call)."""
+        return self._finish(_run(self.program, self.inputs, self.n_rows,
+                                 self.backend, self.chunk_rows, self.mesh,
+                                 self.schedule))
+
+    def warm(self, rows: int = 1) -> None:
+        """Compile without serving: run ``rows`` leading rows (discarded)
+        so levelize/lowering/jit happen outside any timed request."""
+        rows = min(self.n_rows, max(1, rows))
+        if rows < 1:
+            return
+        head = {n: v[:rows] for n, v in self.inputs.items()}
+        kops.run_program(self.program, head, rows,
+                         self.backend if self.backend != "numpy" else "ref",
+                         schedule=self.schedule)
+
+
+def prepare(op: str, x, y, *, width=None, fmt=None, **kw) -> Prepared:
+    """Parse + validate one elementwise request and bind it to its program
+    without executing (see :class:`Prepared`).  ``op`` is the public ufunc
+    name (``add``..``div``, ``fp_add``..``fp_div``); keywords are exactly
+    the matching ufunc's."""
+    if op in INT_OPS:
+        if fmt is not None:
+            raise TypeError(f"pim.{op} takes no fmt= (fixed point)")
+        return _prepare_int(op, x, y, width, kw)
+    if op in FP_OPS:
+        if width is not None:
+            raise TypeError(f"pim.{op} takes no width= (format-implied)")
+        return _prepare_fp(op[3:], x, y, dict(kw, fmt=fmt))
+    raise ValueError(f"pim.prepare: unknown op {op!r} "
+                     f"(expected one of {INT_OPS + FP_OPS})")
 
 
 def _run(prog, inputs, n_rows, backend, chunk_rows, mesh, schedule):
@@ -157,56 +264,47 @@ def _vmax(v):
     return max(v.flat) if v.dtype == object else int(v.max())
 
 
+def _prepare_int(op, x, y, width, kw) -> Prepared:
+    backend, chunk, parallel, mesh, schedule = _resolve(kw)
+    xr, yr, shape, w = _int_operands(op, x, y, width)
+    prog = program_for("int-parallel" if parallel else "int-serial", op, w)
+    if op == "div":
+        if xr.size and _vmin(yr) == 0:
+            raise ValueError("pim.div: zero divisor")
+        # the divider takes a double-width dividend port z and divisor d
+        inputs = {"z": xr.astype(np.uint64) if xr.dtype != object else xr,
+                  "d": yr}
+        finish = lambda outs: (outs["q"].reshape(shape),
+                               outs["r"].reshape(shape))
+    else:
+        inputs = {"x": xr, "y": yr}
+        finish = lambda outs: outs["z"].reshape(shape)
+    return Prepared(op, prog, inputs, xr.size, backend, chunk, mesh,
+                    schedule, finish)
+
+
 def add(x, y, *, width=None, **kw):
     """Elementwise ``x + y`` with the full carry: (width+1)-bit sums as
     uint64 (object array beyond 63 bits)."""
-    backend, chunk, parallel, mesh, schedule = _resolve(kw)
-    xr, yr, shape, w = _int_operands("add", x, y, width)
-    prog = program_for("int-parallel" if parallel else "int-serial",
-                       "add", w)
-    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh,
-               schedule)
-    return out["z"].reshape(shape)
+    return _prepare_int("add", x, y, width, kw).run()
 
 
 def sub(x, y, *, width=None, **kw):
     """Elementwise ``x - y`` modulo 2**width (two's-complement wraparound),
     as uint64 (object array beyond 63 bits)."""
-    backend, chunk, parallel, mesh, schedule = _resolve(kw)
-    xr, yr, shape, w = _int_operands("sub", x, y, width)
-    prog = program_for("int-parallel" if parallel else "int-serial",
-                       "sub", w)
-    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh,
-               schedule)
-    return out["z"].reshape(shape)
+    return _prepare_int("sub", x, y, width, kw).run()
 
 
 def mul(x, y, *, width=None, **kw):
     """Elementwise ``x * y``: exact double-width (2*width-bit) products as
     uint64, or an object array when 2*width exceeds 63 bits."""
-    backend, chunk, parallel, mesh, schedule = _resolve(kw)
-    xr, yr, shape, w = _int_operands("mul", x, y, width)
-    prog = program_for("int-parallel" if parallel else "int-serial",
-                       "mul", w)
-    out = _run(prog, {"x": xr, "y": yr}, xr.size, backend, chunk, mesh,
-               schedule)
-    return out["z"].reshape(shape)
+    return _prepare_int("mul", x, y, width, kw).run()
 
 
 def div(x, y, *, width=None, **kw):
     """Elementwise unsigned division: ``(x // y, x % y)`` as uint64 arrays
     (object beyond 63 bits).  Zero divisors are rejected."""
-    backend, chunk, parallel, mesh, schedule = _resolve(kw)
-    xr, yr, shape, w = _int_operands("div", x, y, width)
-    if xr.size and _vmin(yr) == 0:
-        raise ValueError("pim.div: zero divisor")
-    # the divider takes a double-width dividend port z and divisor d
-    prog = program_for("int-parallel" if parallel else "int-serial",
-                       "div", w)
-    out = _run(prog, {"z": xr.astype(np.uint64) if xr.dtype != object
-                      else xr, "d": yr}, xr.size, backend, chunk, mesh,
-               schedule)
-    return out["q"].reshape(shape), out["r"].reshape(shape)
+    return _prepare_int("div", x, y, width, kw).run()
 
 
 # --------------------------------------------------------------------------
@@ -240,7 +338,8 @@ def _check_fp_bits(op, name, bits, fmt, reject_zero=False):
         raise ValueError(f"pim.{op}: zero divisor")
 
 
-def _fp(op, x, y, fmt, kw):
+def _prepare_fp(op, x, y, kw) -> Prepared:
+    fmt = kw.pop("fmt", None)
     check = kw.pop("check", True)
     backend, chunk, parallel, mesh, schedule = _resolve(kw)
     x, y = np.broadcast_arrays(np.asarray(x), np.asarray(y))
@@ -283,28 +382,28 @@ def _fp(op, x, y, fmt, kw):
         op = "add"
     prog = program_for("fp-parallel" if parallel else "fp-serial",
                        op, fmt_name)
-    out = _run(prog, {"x": xb, "y": yb}, xb.size, backend, chunk, mesh,
-               schedule)["z"]
-    return decode(np.asarray(out, np.uint64))
+    finish = lambda outs: decode(np.asarray(outs["z"], np.uint64))
+    return Prepared(f"fp_{op}", prog, {"x": xb, "y": yb}, xb.size, backend,
+                    chunk, mesh, schedule, finish)
 
 
 def fp_add(x, y, *, fmt=None, **kw):
     """Elementwise FP addition, exactly rounded (IEEE RNE).  float16 /
     float32 arrays, or ``fmt='bf16'`` etc. with bit-pattern arrays."""
-    return _fp("add", x, y, fmt, kw)
+    return _prepare_fp("add", x, y, dict(kw, fmt=fmt)).run()
 
 
 def fp_sub(x, y, *, fmt=None, **kw):
     """Elementwise FP subtraction, exactly rounded (IEEE RNE)."""
-    return _fp("sub", x, y, fmt, kw)
+    return _prepare_fp("sub", x, y, dict(kw, fmt=fmt)).run()
 
 
 def fp_mul(x, y, *, fmt=None, **kw):
     """Elementwise FP multiplication, exactly rounded (IEEE RNE)."""
-    return _fp("mul", x, y, fmt, kw)
+    return _prepare_fp("mul", x, y, dict(kw, fmt=fmt)).run()
 
 
 def fp_div(x, y, *, fmt=None, **kw):
     """Elementwise FP division, exactly rounded (IEEE RNE).  Zero divisors
     are rejected."""
-    return _fp("div", x, y, fmt, kw)
+    return _prepare_fp("div", x, y, dict(kw, fmt=fmt)).run()

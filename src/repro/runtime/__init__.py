@@ -1,0 +1,18 @@
+# Runtime subsystems: training fault tolerance / elastic re-meshing, and
+# the PIM batched serving runtime (queue -> planner -> coalescer ->
+# splitter; DESIGN.md §10).  ``pim_batch`` is imported lazily so the
+# training-side modules stay importable without pulling in the kernels.
+
+_PIM_BATCH = ("BatchQueue", "BatchRuntime", "Group", "PinnedSchedules",
+              "RequestResult", "Stats", "coalesce", "group_key",
+              "plan_groups")
+
+__all__ = list(_PIM_BATCH) + ["pim_batch"]
+
+
+def __getattr__(name):
+    if name == "pim_batch" or name in _PIM_BATCH:
+        import importlib
+        mod = importlib.import_module(".pim_batch", __name__)
+        return mod if name == "pim_batch" else getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,312 @@
+"""Batched serving runtime for the PIM ufunc API (DESIGN.md §10).
+
+``launch/serve.py --pim-stdin`` executes one gate program per request,
+which leaves the machine's row axis -- the dimension the paper's
+throughput case (Fig. 9) banks on -- mostly idle under heavy mixed
+traffic.  This module sits between the JSON request layer and
+``kernels/ops.py`` and fills that axis:
+
+* :class:`BatchQueue` -- thread-safe admission with a micro-batching
+  window: block for the first request, then keep admitting until the
+  window closes, the row cap fills, or the stream ends.
+* :func:`plan_groups` -- the planner: group a batch's prepared requests by
+  compiled-program content hash + execution config (``Prepared.key`` makes
+  structurally identical requests trivially groupable).
+* :func:`coalesce` -- concatenate each group's per-port rows, in arrival
+  order, into one packed input set.
+* :meth:`BatchRuntime.execute` -- run the whole plan through
+  ``kernels.ops.run_program_groups`` (group ``k+1`` packs on the host
+  while group ``k`` executes on the device -- the streaming pipeline
+  generalized across programs), then *split*: scatter each group's output
+  rows back to its member requests via ``Prepared.finish`` with
+  per-request accounting.
+* :class:`PinnedSchedules` -- an LRU-pinned working set of compiled slot
+  schedules: hot programs stay resident in the bounded compiled-program
+  cache even when cold traffic churns it, so they never recompile
+  mid-serving.
+
+Everything operates on :class:`repro.pim_ufunc.Prepared` handles, so the
+runtime is equally usable programmatically (benchmarks, tests) and from
+the ``--pim-serve`` JSON-lines loop.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..kernels import ops as kops
+from ..pim_ufunc import Prepared
+
+DEFAULT_WINDOW_MS = 2.0
+DEFAULT_MAX_BATCH_ROWS = 1 << 16
+DEFAULT_PIN_CAP = 32
+
+
+# --------------------------------------------------------------------------
+# planner
+# --------------------------------------------------------------------------
+
+def group_key(prep: Prepared) -> tuple:
+    """The coalescing key: program content hash plus everything that makes
+    two executions non-mergeable (backend, schedule, mesh, chunking).  Two
+    requests with equal keys run bit-identically as one packed state."""
+    return (prep.key, prep.backend, prep.schedule, prep.chunk_rows,
+            None if prep.mesh is None else id(prep.mesh))
+
+
+@dataclasses.dataclass
+class Group:
+    """One plan entry: the member requests (by batch index, arrival order)
+    that share a program structure and execution config."""
+    key: tuple
+    members: List[int]
+    preps: List[Prepared]
+    n_rows: int = 0
+    cached: bool = False        # were schedule artifacts already compiled?
+
+
+def plan_groups(preps: Sequence[Prepared]) -> List[Group]:
+    """Group a batch of prepared requests by :func:`group_key`.  Stable:
+    groups are ordered by first arrival and members keep arrival order, so
+    coalesced row offsets are reproducible."""
+    by_key: Dict[tuple, Group] = {}
+    plan: List[Group] = []
+    for i, p in enumerate(preps):
+        k = group_key(p)
+        g = by_key.get(k)
+        if g is None:
+            g = by_key[k] = Group(k, [], [])
+            plan.append(g)
+        g.members.append(i)
+        g.preps.append(p)
+        g.n_rows += p.n_rows
+    return plan
+
+
+def coalesce(group: Group) -> Dict[str, np.ndarray]:
+    """One packed input set for a group: per port, the members' rows
+    concatenated in arrival order (the splitter reverses this by offset).
+    Mixed member dtypes (e.g. uint16 and object rows of one width) promote
+    under numpy's rules; the bridges take either."""
+    first = group.preps[0]
+    out = {}
+    for name in first.inputs:
+        parts = [p.inputs[name] for p in group.preps]
+        out[name] = parts[0] if len(parts) == 1 else np.concatenate(parts)
+    return out
+
+
+# --------------------------------------------------------------------------
+# pinned schedule working set
+# --------------------------------------------------------------------------
+
+class PinnedSchedules:
+    """LRU working set of pinned compiled schedules (``cap`` programs).
+
+    ``touch`` pins a program's compiled-cache entry in ``kernels.ops`` (see
+    ``pin_program``) and refreshes its recency; when the working set
+    overflows, the least-recently-served program is unpinned (it stays
+    cached but becomes evictable).  Under mixed traffic this keeps the hot
+    programs' levelized schedules and device index buffers resident no
+    matter how many cold structures stream past.  ``cap=0`` disables
+    pinning entirely."""
+
+    def __init__(self, cap: int = DEFAULT_PIN_CAP):
+        if cap < 0:
+            raise ValueError(f"pin cap must be >= 0, got {cap}")
+        self.cap = int(cap)
+        self._lru: "collections.OrderedDict[bytes, bool]" = \
+            collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def __contains__(self, key: bytes) -> bool:
+        return key in self._lru
+
+    def touch(self, program) -> Optional[bytes]:
+        """Pin ``program`` (or refresh its recency); returns its content
+        key, or None when pinning is disabled."""
+        if not self.cap:
+            return None
+        key = kops.content_key(program)
+        if key in self._lru:
+            self._lru.move_to_end(key)
+            return key
+        kops.pin_program(program)
+        self._lru[key] = True
+        while len(self._lru) > self.cap:
+            old, _ = self._lru.popitem(last=False)
+            kops.unpin_program(old)
+        return key
+
+    def clear(self) -> None:
+        """Release every pin (used on server shutdown and in tests)."""
+        while self._lru:
+            key, _ = self._lru.popitem(last=False)
+            kops.unpin_program(key)
+
+
+# --------------------------------------------------------------------------
+# admission queue
+# --------------------------------------------------------------------------
+
+class BatchQueue:
+    """Thread-safe admission queue with a micro-batching window.
+
+    Producers :meth:`put` items (with a row weight) and finally
+    :meth:`close`; one consumer calls :meth:`collect`, which blocks for the
+    first item, then keeps admitting until (a) ``window_ms`` elapses from
+    that first admission, (b) admitted rows reach ``max_batch_rows`` (the
+    request that crosses the cap is still admitted -- requests are never
+    split), or (c) the stream ends.  Returns None once the stream is
+    exhausted.  ``window_ms=0`` degenerates to "whatever is already
+    queued", which keeps single-request latency at its floor."""
+
+    _EOF = object()
+
+    def __init__(self, window_ms: float = DEFAULT_WINDOW_MS,
+                 max_batch_rows: int = DEFAULT_MAX_BATCH_ROWS):
+        if max_batch_rows < 1:
+            raise ValueError(
+                f"max_batch_rows must be >= 1, got {max_batch_rows}")
+        self.window_s = max(0.0, float(window_ms)) * 1e-3
+        self.max_batch_rows = int(max_batch_rows)
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._eof = False
+
+    def put(self, item, n_rows: int = 0) -> None:
+        self._q.put((item, int(n_rows)))
+
+    def close(self) -> None:
+        """Signal end of stream (producer side)."""
+        self._q.put((self._EOF, 0))
+
+    def collect(self) -> Optional[list]:
+        """The next admission batch (arrival order), or None at end."""
+        if self._eof:
+            return None
+        item, rows = self._q.get()
+        if item is self._EOF:
+            self._eof = True
+            return None
+        batch = [item]
+        total = rows
+        deadline = time.monotonic() + self.window_s
+        while total < self.max_batch_rows:
+            remaining = deadline - time.monotonic()
+            try:
+                item, rows = self._q.get(timeout=max(0.0, remaining)) \
+                    if remaining > 0 else self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is self._EOF:
+                self._eof = True
+                break
+            batch.append(item)
+            total += rows
+        return batch
+
+
+# --------------------------------------------------------------------------
+# execution engine: coalesce -> pipelined group run -> split
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RequestResult:
+    """One request's share of a batch execution.  ``exec_us`` is the whole
+    batch's pipelined execution wall time -- groups overlap on the device,
+    so per-group times are not separable; the shared figure is the honest
+    one.  ``cached`` reports whether the request's program had compiled
+    schedule artifacts *before* this batch ran."""
+    value: object
+    group_rows: int
+    group_size: int
+    batch_rows: int
+    exec_us: float
+    cached: bool
+
+
+@dataclasses.dataclass
+class Stats:
+    """Cumulative serving counters (one line at server shutdown)."""
+    requests: int = 0
+    batches: int = 0
+    groups: int = 0
+    rows: int = 0
+    errors: int = 0
+    exec_s: float = 0.0
+
+    def rows_per_s(self) -> float:
+        return self.rows / self.exec_s if self.exec_s > 0 else float("nan")
+
+    def summary(self, pinned: int = 0) -> str:
+        gsz = self.requests / self.groups if self.groups else 0.0
+        return (f"pim-serve: {self.requests} requests in {self.batches} "
+                f"batches / {self.groups} groups (mean {gsz:.1f} req/group), "
+                f"{self.rows} rows @ {self.rows_per_s():,.0f} rows/s, "
+                f"errors={self.errors}, pinned={pinned}")
+
+
+class BatchRuntime:
+    """Planner + coalescer + splitter over ``kernels.ops`` group execution,
+    with an LRU-pinned schedule working set and cumulative :class:`Stats`.
+
+    One instance per server; :meth:`execute` is also directly usable on a
+    list of :class:`Prepared` handles (the benchmark and the property tests
+    drive it that way, bypassing the queue)."""
+
+    def __init__(self, pin_cap: int = DEFAULT_PIN_CAP):
+        self.pins = PinnedSchedules(pin_cap)
+        self.stats = Stats()
+
+    def close(self) -> None:
+        self.pins.clear()
+
+    def execute(self, preps: Sequence[Prepared]) -> List[RequestResult]:
+        """Execute one admission batch; per-request results in input order.
+
+        Plans groups, pins their programs into the working set, runs all
+        groups through the pipelined group executor, and splits each
+        group's output rows back to its members (each request's
+        ``finish`` decodes its own slice -- including div's ``(q, r)``
+        pair and fp bit-pattern decode)."""
+        results: List[Optional[RequestResult]] = [None] * len(preps)
+        if not preps:
+            return []
+        plan = plan_groups(preps)
+        specs = []
+        for g in plan:
+            p0 = g.preps[0]
+            g.cached = p0.cached
+            self.pins.touch(p0.program)
+            specs.append(dict(program=p0.program, inputs=coalesce(g),
+                              n_rows=g.n_rows, backend=p0.backend,
+                              chunk_rows=p0.chunk_rows, mesh=p0.mesh,
+                              schedule=p0.schedule))
+        t0 = time.perf_counter()
+        outs = kops.run_program_groups(specs)
+        exec_s = time.perf_counter() - t0
+        batch_rows = sum(g.n_rows for g in plan)
+        exec_us = exec_s * 1e6
+        for g, out in zip(plan, outs):
+            off = 0
+            for i, p in zip(g.members, g.preps):
+                sub = {k: v[off:off + p.n_rows] for k, v in out.items()}
+                off += p.n_rows
+                results[i] = RequestResult(
+                    value=p.finish(sub), group_rows=g.n_rows,
+                    group_size=len(g.preps), batch_rows=batch_rows,
+                    exec_us=exec_us, cached=g.cached)
+        self.stats.requests += len(preps)
+        self.stats.batches += 1
+        self.stats.groups += len(plan)
+        self.stats.rows += batch_rows
+        self.stats.exec_s += exec_s
+        return results  # type: ignore[return-value]

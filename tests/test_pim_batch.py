@@ -1,0 +1,437 @@
+"""Batched serving runtime (DESIGN.md §10): planner/coalescer/splitter
+bit-exactness on randomized mixed traffic, grouping structure, the
+LRU-pinned schedule working set, admission-window semantics, the scoped
+ufunc config, the serving error paths, and the CLI/bench smokes."""
+
+import io
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import pim_ufunc as pim
+from repro.kernels import ops as kops
+from repro.launch import serve
+from repro.runtime import pim_batch as pb
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fp16(rng, n):
+    """Normal-range fp16 values (mid exponents, per the paper's domain)."""
+    return (rng.integers(10, 21, n).astype(np.uint16) << 10 |
+            rng.integers(0, 1 << 10, n).astype(np.uint16)).view(np.float16)
+
+
+def _mixed_traffic(rng, n_requests):
+    """Randomized mixed request stream over 8 op kinds: fixed point
+    (uint8/uint16, incl. div and an object-dtype wide width) + fp16."""
+    kinds = []
+    for i in range(n_requests):
+        n = int(rng.integers(1, 40))
+        k = i % 8
+        if k == 0:
+            kinds.append(("add", rng.integers(0, 256, n).astype(np.uint8),
+                          rng.integers(0, 256, n).astype(np.uint8), {}))
+        elif k == 1:
+            kinds.append(("sub", rng.integers(0, 256, n).astype(np.uint8),
+                          rng.integers(0, 256, n).astype(np.uint8), {}))
+        elif k == 2:
+            kinds.append(("mul",
+                          rng.integers(0, 1 << 16, n).astype(np.uint16),
+                          rng.integers(0, 1 << 16, n).astype(np.uint16), {}))
+        elif k == 3:
+            kinds.append(("div", rng.integers(0, 256, n).astype(np.uint8),
+                          rng.integers(1, 256, n).astype(np.uint8), {}))
+        elif k == 4:
+            kinds.append(("fp_add", _fp16(rng, n), _fp16(rng, n), {}))
+        elif k == 5:
+            kinds.append(("fp_sub", _fp16(rng, n), _fp16(rng, n), {}))
+        elif k == 6:
+            kinds.append(("fp_mul", _fp16(rng, n), _fp16(rng, n), {}))
+        else:
+            # object-dtype arbitrary precision exercises the padded-io
+            # (non-fused) executor path through the coalescer
+            kinds.append((
+                "add",
+                np.array([(1 << 69) + int(v)
+                          for v in rng.integers(0, 100, n)], object),
+                np.array([int(v) for v in rng.integers(0, 100, n)], object),
+                {"width": 70}))
+    return kinds
+
+
+# ------------------------------------------------------------ bit-exactness
+
+def test_batched_equals_serial_mixed_stream():
+    """Acceptance: coalesced execution equals per-request execution for
+    every request of a randomized mixed stream (fixed + FP, div's (q, r)
+    pair included), row for row."""
+    rng = np.random.default_rng(42)
+    traffic = _mixed_traffic(rng, 32)
+    preps = [pim.prepare(op, x, y, **kw) for op, x, y, kw in traffic]
+    rt = pb.BatchRuntime(pin_cap=8)
+    try:
+        results = rt.execute(preps)
+        assert len(results) == len(traffic)
+        for (op, x, y, kw), res in zip(traffic, results):
+            want = getattr(pim, op)(x, y, **kw)     # independent serial run
+            if op == "div":
+                assert np.array_equal(res.value[0], want[0])
+                assert np.array_equal(res.value[1], want[1])
+            else:
+                assert np.array_equal(res.value, want), op
+        # accounting invariants
+        assert rt.stats.requests == len(traffic)
+        assert rt.stats.rows == sum(p.n_rows for p in preps)
+        assert rt.stats.groups == len({pb.group_key(p) for p in preps})
+        for res in results:
+            assert res.group_size >= 1 and res.group_rows <= rt.stats.rows
+    finally:
+        rt.close()
+    assert len(rt.pins) == 0
+
+
+def test_empty_and_single_request_batches():
+    rt = pb.BatchRuntime(pin_cap=2)
+    try:
+        assert rt.execute([]) == []
+        p = pim.prepare("add", np.uint8([7]), np.uint8([8]))
+        (res,) = rt.execute([p])
+        assert np.array_equal(res.value, [15])
+        assert res.group_size == 1 and res.group_rows == 1
+    finally:
+        rt.close()
+
+
+# ----------------------------------------------------------------- planner
+
+def test_plan_groups_structure_and_order():
+    a1 = pim.prepare("add", np.uint8([1, 2]), np.uint8([3, 4]))
+    b1 = pim.prepare("mul", np.uint8([5]), np.uint8([6]))
+    a2 = pim.prepare("add", np.uint8([7, 8, 9]), np.uint8([1, 1, 1]))
+    c1 = pim.prepare("add", np.uint16([1]), np.uint16([2]))  # other width
+    plan = pb.plan_groups([a1, b1, a2, c1])
+    assert [g.members for g in plan] == [[0, 2], [1], [3]]
+    assert plan[0].n_rows == 5 and plan[1].n_rows == 1
+    # coalesced rows keep arrival order per port
+    ins = pb.coalesce(plan[0])
+    assert np.array_equal(ins["x"], [1, 2, 7, 8, 9])
+    assert np.array_equal(ins["y"], [3, 4, 1, 1, 1])
+
+
+def test_group_key_separates_exec_config():
+    x, y = np.uint8([1]), np.uint8([2])
+    base = pim.prepare("add", x, y)
+    dense = pim.prepare("add", x, y, schedule="dense")
+    numpy_be = pim.prepare("add", x, y, backend="numpy")
+    assert base.key == dense.key == numpy_be.key        # same structure
+    plan = pb.plan_groups([base, dense, numpy_be])
+    assert len(plan) == 3                               # but never merged
+
+
+# ------------------------------------------------------ group-execute entry
+
+def test_run_program_groups_matches_run_program():
+    """ops-level group executor: heterogeneous groups (incl. one larger
+    than chunk_rows, so it tiles inside the pipeline, and one on the
+    synchronous numpy oracle) must match one-shot run_program."""
+    from repro.core import bitserial as bs
+
+    rng = np.random.default_rng(5)
+    p16, p8 = bs.build_add(16), bs.build_mul(8)
+    x = rng.integers(0, 1 << 16, 100).astype(np.uint64)
+    y = rng.integers(0, 1 << 16, 100).astype(np.uint64)
+    u = rng.integers(0, 256, 7).astype(np.uint64)
+    v = rng.integers(0, 256, 7).astype(np.uint64)
+    outs = kops.run_program_groups([
+        dict(program=p16, inputs={"x": x, "y": y}, n_rows=100,
+             chunk_rows=32),                            # 4 chunks
+        dict(program=p8, inputs={"x": u, "y": v}, n_rows=7),
+        dict(program=p16, inputs={"x": x[:3], "y": y[:3]}, n_rows=3,
+             backend="numpy"),                          # sync barrier
+    ])
+    assert np.array_equal(outs[0]["z"],
+                          kops.run_program(p16, {"x": x, "y": y}, 100,
+                                           backend="ref")["z"])
+    assert np.array_equal(outs[1]["z"], u * v)
+    assert np.array_equal(outs[2]["z"], (x[:3] + y[:3]))
+    with pytest.raises(ValueError, match="rows"):
+        kops.run_program_groups([
+            dict(program=p16, inputs={"x": x[:5], "y": y}, n_rows=100)])
+
+
+# --------------------------------------------------------------- pin cache
+
+def _mini_program(seed, n_gates=12):
+    from repro.core.gates import Builder
+
+    rng = np.random.default_rng(seed)
+    b = Builder()
+    avail = b.input("x", 16) + b.input("y", 16)
+    fns = [b.nor, b.or_, b.and_, b.xor, b.xnor, b.nand]
+    for _ in range(n_gates):
+        f = fns[rng.integers(0, len(fns))]
+        i, j = rng.integers(0, len(avail), 2)
+        avail.append(f(avail[i], avail[j]))
+    b.output("z", avail[-16:])
+    return b.finish()
+
+
+def test_pinned_working_set_survives_cache_churn():
+    """A pinned hot program must keep its compiled entry while cold
+    traffic churns the bounded LRU; the pin cache's own overflow unpins."""
+    hot = _mini_program(1)
+    rng = np.random.default_rng(0)
+    ins = {"x": rng.integers(0, 1 << 16, 33).astype(np.uint64),
+           "y": rng.integers(0, 1 << 16, 33).astype(np.uint64)}
+    want = kops.run_program(hot, ins, 33, backend="numpy")["z"]
+    old_cap = kops.set_compiled_cache_cap(2)
+    pins = pb.PinnedSchedules(cap=1)
+    try:
+        kops.run_program(hot, ins, 33, backend="ref")
+        key = pins.touch(hot)
+        assert key in kops._compiled and key in kops._pinned
+        for s in range(4):                       # churn with cold programs
+            kops.run_program(_mini_program(50 + s), ins, 33, backend="ref")
+        assert key in kops._compiled             # survived eviction
+        assert kops.is_compiled(hot)
+        assert len(kops._compiled) <= 2 + 1      # cap + the pinned entry
+        # pin LRU overflow unpins the older program
+        other = _mini_program(2)
+        kops.run_program(other, ins, 33, backend="ref")
+        pins.touch(other)
+        assert key not in kops._pinned and len(pins) == 1
+        # eviction was invisible: recompilation is pure
+        got = kops.run_program(hot, ins, 33, backend="ref")["z"]
+        assert np.array_equal(got, want)
+    finally:
+        pins.clear()
+        kops.set_compiled_cache_cap(old_cap)
+    assert not kops._pinned
+
+
+def test_pin_refcounts_nest():
+    prog = _mini_program(3)
+    key = kops.pin_program(prog)
+    assert kops.pin_program(prog) == key
+    assert kops.unpin_program(key) is True       # one pin remains
+    assert key in kops._pinned
+    assert kops.unpin_program(key) is False
+    assert key not in kops._pinned
+    pins = pb.PinnedSchedules(cap=0)             # disabled
+    assert pins.touch(prog) is None and len(pins) == 0
+
+
+# ---------------------------------------------------------- admission queue
+
+def test_batch_queue_row_cap_and_eof():
+    q = pb.BatchQueue(window_ms=200, max_batch_rows=100)
+    for i in range(5):
+        q.put(i, n_rows=30)
+    q.close()
+    # 30+30+30 < 100 admits a 4th (crossing request never splits), then
+    # stops; the 5th lands in the next batch; then end-of-stream
+    assert q.collect() == [0, 1, 2, 3]
+    assert q.collect() == [4]
+    assert q.collect() is None
+    assert q.collect() is None                   # stays closed
+
+
+def test_batch_queue_zero_window_drains_backlog():
+    q = pb.BatchQueue(window_ms=0, max_batch_rows=1 << 30)
+    for i in range(3):
+        q.put(i, n_rows=1)
+    assert q.collect() == [0, 1, 2]              # whatever is queued
+    q.close()
+    assert q.collect() is None
+    with pytest.raises(ValueError):
+        pb.BatchQueue(max_batch_rows=0)
+
+
+# ------------------------------------------------------------ scoped config
+
+def test_options_scopes_and_restores():
+    assert pim.config.schedule == "slots"
+    with pim.options(schedule="dense", backend="numpy") as cfg:
+        assert cfg is pim.config
+        assert pim.config.schedule == "dense"
+        assert pim.prepare("add", np.uint8([1]), np.uint8([2])).schedule \
+            == "dense"
+    assert pim.config.schedule == "slots" and pim.config.backend == "ref"
+    with pytest.raises(ValueError):              # restored on exception
+        with pim.options(schedule="dense"):
+            raise ValueError("boom")
+    assert pim.config.schedule == "slots"
+    with pytest.raises(TypeError):               # validated before applied
+        with pim.options(schedule="dense", bogus=1):
+            pass
+    assert pim.config.schedule == "slots"
+
+
+def test_configure_validates_atomically():
+    with pytest.raises(TypeError):
+        pim.configure(backend="numpy", not_a_field=1)
+    assert pim.config.backend == "ref"           # nothing was applied
+
+
+# ---------------------------------------------------------- prepared handle
+
+def test_prepared_handle_api():
+    x, y = np.uint16([9, 7]), np.uint16([4, 2])
+    p = pim.prepare("add", x, y)
+    assert p.op == "add" and p.n_rows == 2
+    assert np.array_equal(p.run(), pim.add(x, y))
+    outs = kops.run_program(p.program, p.inputs, p.n_rows, backend="ref")
+    assert np.array_equal(p.finish(outs), pim.add(x, y))
+    q, r = pim.prepare("div", x, y).run()
+    assert np.array_equal(q, [2, 3]) and np.array_equal(r, [1, 1])
+    with pytest.raises(ValueError):
+        pim.prepare("nope", x, y)
+    with pytest.raises(TypeError):
+        pim.prepare("add", x, y, fmt="bf16")     # fixed point takes no fmt
+    with pytest.raises(TypeError):
+        pim.prepare("fp_add", np.float16([1]), np.float16([1]), width=8)
+
+
+def test_prepared_cached_flag_lifecycle():
+    # width 29 is used nowhere else in the suite -> first sight uncached
+    xo = np.array([123], object)
+    yo = np.array([456], object)
+    p = pim.prepare("add", xo, yo, width=29)
+    assert not p.cached
+    p.warm()
+    assert p.cached
+    assert pim.prepare("add", xo, yo, width=29).cached
+    assert np.array_equal(p.run(), [579])
+
+
+# -------------------------------------------------------- serve error paths
+
+_BAD_LINES = ('{"op":"add","dtype":"uint8","x":[1,2],"y":[3,4]}\n'
+              '\n'                                        # blank: skipped
+              'not json at all\n'
+              '{"op":"nope","x":[1],"y":[1]}\n'
+              '{"op":"fp_add","dtype":"uint16","x":[1],"y":[2]}\n'
+              '{"op":"add","dtype":"float16","x":[1.0],"y":[2.0]}\n'
+              '{"op":"div","dtype":"uint8","x":[1],"y":[0]}\n'
+              '{"x":[1],"y":[2]}\n'                       # missing op
+              '{"op":"div","dtype":"uint8","x":[17],"y":[5]}\n')
+
+
+def _check_protocol_responses(lines):
+    assert lines[0]["result"] == [4, 6]
+    assert "JSONDecodeError" in lines[1]["error"]
+    assert "unknown op" in lines[2]["error"]
+    assert "float16/float32" in lines[3]["error"]         # fp op, int dtype
+    assert "infer width" in lines[4]["error"]             # int op, fp dtype
+    assert "zero divisor" in lines[5]["error"]
+    assert "KeyError" in lines[6]["error"]
+    assert (lines[7]["q"], lines[7]["r"]) == ([3], [2])
+
+
+def test_serve_stdin_error_paths():
+    outp = io.StringIO()
+    served = serve.serve_pim_stdin(io.StringIO(_BAD_LINES), outp)
+    lines = [json.loads(l) for l in outp.getvalue().splitlines()]
+    assert served == 8 and len(lines) == 8                # blank skipped
+    _check_protocol_responses(lines)
+    ok = lines[0]
+    assert ok["rows"] == 2 and "us" in ok and "cached" in ok
+
+
+def test_serve_batched_matches_stdin_protocol():
+    """The batched loop speaks the same protocol: same results and same
+    error lines, in input order, plus batch accounting fields."""
+    outp = io.StringIO()
+    stats = serve.serve_pim_batched(io.StringIO(_BAD_LINES), outp,
+                                    window_ms=25, stats=False)
+    lines = [json.loads(l) for l in outp.getvalue().splitlines()]
+    assert stats["served"] == 8 and len(lines) == 8
+    _check_protocol_responses(lines)
+    assert stats["errors"] == 6
+    for resp in (lines[0], lines[7]):
+        assert resp["batched"] >= 1
+        assert {"us", "queue_us", "exec_us", "cached"} <= set(resp)
+
+
+def test_serve_batched_coalesces_same_program():
+    reqs = "".join('{"op":"add","dtype":"uint8","x":[%d],"y":[%d]}\n'
+                   % (i, i + 1) for i in range(6))
+    outp = io.StringIO()
+    stats = serve.serve_pim_batched(io.StringIO(reqs), outp, window_ms=50,
+                                    stats=False)
+    lines = [json.loads(l) for l in outp.getvalue().splitlines()]
+    assert [l["result"] for l in lines] == [[2 * i + 1] for i in range(6)]
+    # all six share one program structure -> one group per batch
+    assert stats["groups"] == stats["batches"]
+    assert any(l["batched"] > 1 for l in lines)
+
+
+def test_pim_request_reports_compile_separately():
+    r1 = serve.pim_request({"op": "add", "width": 27, "x": [5], "y": [9]})
+    assert r1["result"] == [14]
+    r2 = serve.pim_request({"op": "add", "width": 27, "x": [6], "y": [9]})
+    assert r2["cached"] is True and "compile_us" not in r2
+    # the cold-call compile cost, when it happens, is reported separately
+    # (width 27 may have been compiled by an earlier test run in-process,
+    # so only the invariant is asserted, not r1's flag itself)
+    if not r1["cached"]:
+        assert r1["compile_us"] > 0
+
+
+# ------------------------------------------------------------------ smokes
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+
+def test_serve_batched_cli_roundtrip():
+    """--pim-serve subprocess round-trip: small rows, strict timeout; a
+    serving regression fails tests, not just benchmarks."""
+    reqs = ('{"op":"add","dtype":"uint8","x":[1,2],"y":[3,4]}\n'
+            '{"op":"div","dtype":"uint8","x":[17],"y":[5]}\n'
+            'broken\n'
+            '{"op":"add","dtype":"uint8","x":[9],"y":[9]}\n')
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--pim-serve",
+         "--pim-window-ms", "25", "--pim-max-batch-rows", "4096"],
+        input=reqs, cwd=REPO, env=_env(), capture_output=True, text=True,
+        timeout=420)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    lines = [json.loads(l) for l in proc.stdout.splitlines()]
+    assert len(lines) == 4
+    assert lines[0]["result"] == [4, 6]
+    assert (lines[1]["q"], lines[1]["r"]) == ([3], [2])
+    assert "error" in lines[2]
+    assert lines[3]["result"] == [18]
+    assert "pim-serve:" in proc.stderr                    # the stats line
+
+
+def test_bench_serve_rows_and_compare_gate_smoke(tmp_path):
+    """The mixed-traffic rows emit in --json format and the --compare
+    BENCH_3.json invocation passes (serve/ rows are new there; the loose
+    threshold keeps this a machinery smoke, not a timing assertion --
+    BENCH_4.json records the real figures)."""
+    out = tmp_path / "serve.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "serve/mixed",
+         "--json", str(out), "--compare",
+         os.path.join(REPO, "BENCH_3.json"), "--threshold", "100"],
+        cwd=REPO, env=_env(), capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    assert "perf gate: OK" in proc.stdout
+    rows = {r["name"]: r for r in json.loads(out.read_text())["rows"]}
+    serial = rows["serve/mixed_8op_serial"]
+    batched = rows["serve/mixed_8op_batched"]
+    assert serial["rows_per_s"] > 0 and batched["rows_per_s"] > 0
+    # the acceptance bar is 2x (recorded in BENCH_4.json); the in-test
+    # bar is looser so a loaded CI host cannot flake it
+    assert batched["rows_per_s"] > 1.2 * serial["rows_per_s"]
+    assert batched["speedup_vs_serial"] >= 1.2
