@@ -48,13 +48,14 @@ def _best_of(fn, reps: int = 8) -> float:
     return best
 
 
-def _sharded_row_subprocess():
-    """Measure the sharded 1M-row kernel in a child process with a forced
-    4-device CPU backend.  Isolation is the honest methodology: the XLA
-    device-split flag divides the host's thread pool for *every* array op
-    in the process, so measuring the unsharded rows under it would tax them
-    with the sharded row's configuration (and the flag only takes effect
-    before jax initializes anyway)."""
+def _sharded_row_subprocess(row_name):
+    """Measure one sharded 1M-row kernel row in a child process with a
+    forced 4-device CPU backend.  Isolation is the honest methodology: the
+    XLA device-split flag divides the host's thread pool for *every* array
+    op in the process, so measuring the unsharded rows under it would tax
+    them with the sharded row's configuration (and the flag only takes
+    effect before jax initializes anyway).  ``row_name`` is matched
+    exactly (several sharded rows share a name prefix)."""
     import subprocess
     import tempfile
 
@@ -68,15 +69,14 @@ def _sharded_row_subprocess():
     with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
         proc = subprocess.run(
             [sys.executable, "-m", "benchmarks.run",
-             "--only", "kernel/fp16_add_1M_rows_sharded",
-             "--json", tmp.name],
+             "--only", row_name, "--json", tmp.name],
             cwd=repo, env=env, capture_output=True, text=True, timeout=1200)
         if proc.returncode != 0:
             raise RuntimeError(
                 f"sharded benchmark subprocess failed: {proc.stderr[-800:]}")
         with open(tmp.name) as f:
             doc = json.load(f)
-    (row,) = doc["rows"]
+    (row,) = [r for r in doc["rows"] if r["name"] == row_name]
     us = row.pop("us_per_call")
     name = row.pop("name")
     return name, us, row
@@ -157,6 +157,14 @@ def _kernel_rows(only: str = ""):
             "rows_per_s": _rate(n, dtf), "backend": "pallas",
             "levelized": 1, "schedule": "slots",
             "vs_ref": round(dtf / base_dt(), 3)}))
+    if want_row("kernel/fp16_add_8k_rows_rows64"):
+        # the paired-uint32 word layout (ExecPlan layout="rows64",
+        # DESIGN.md §11): 64 rows per word-pair, halved trailing word axis
+        dt64 = bench(plan=kops.make_plan(backend="ref", layout="rows64"))
+        rows.append(("kernel/fp16_add_8k_rows_rows64", dt64 * 1e6, {
+            "rows_per_s": _rate(n, dt64), "backend": "ref", "levelized": 1,
+            "schedule": "slots", "layout": "rows64",
+            "vs_rows32": round(dt64 / base_dt(), 3)}))
 
     # straight-line static-slice emission (the Mosaic-lowerable shape):
     # segmented jaxpr chain on ref, fully unrolled kernel on pallas.  On
@@ -177,12 +185,13 @@ def _kernel_rows(only: str = ""):
     nm = 1 << 20
     chunk = kops.DEFAULT_CHUNK_ROWS
 
-    def bench_stream(mesh):
+    def bench_stream(mesh, layout="rows32"):
         xm = FP16.random_bits(rng, nm, emin=10, emax=20).astype(np.uint64)
         ym = FP16.random_bits(rng, nm, emin=10, emax=20).astype(np.uint64)
+        stream_plan = kops.make_plan(backend="ref", chunk_rows=chunk,
+                                     mesh=mesh, layout=layout)
         run = lambda: kops.run_program_streaming(
-            prog, {"x": xm, "y": ym}, nm, backend="ref",
-            chunk_rows=chunk, mesh=mesh)
+            prog, {"x": xm, "y": ym}, nm, stream_plan)
         run()                               # warm up (compiles chunk shape)
         return _best_of(run, reps=3)
 
@@ -192,25 +201,34 @@ def _kernel_rows(only: str = ""):
             "rows_per_s": _rate(nm, dt1), "backend": "ref", "levelized": 1,
             "chunk_rows": chunk, "n_devices": 1}))
 
-    if want_row("kernel/fp16_add_1M_rows_sharded"):
+    def sharded_row(name, layout):
         is_child = os.environ.get("_ARITPIM_SHARDED_BENCH_CHILD") == "1"
         if len(jax.devices()) > 1:          # already multi-device: in-process
             mesh = kops.row_mesh()
-            dt4 = bench_stream(mesh=mesh)
-            rows.append(("kernel/fp16_add_1M_rows_sharded", dt4 * 1e6, {
+            dt4 = bench_stream(mesh=mesh, layout=layout)
+            return (name, dt4 * 1e6, {
                 "rows_per_s": _rate(nm, dt4), "backend": "ref",
-                "levelized": 1, "chunk_rows": chunk,
-                "n_devices": int(mesh.devices.size)}))
-        elif is_child:
+                "levelized": 1, "chunk_rows": chunk, "layout": layout,
+                "n_devices": int(mesh.devices.size)})
+        if is_child:
             # the device-split flag did not take (e.g. a non-CPU backend
             # ignores it): record the degenerate single-device measurement
             # rather than recursing into another identical child
-            dt4 = bench_stream(mesh=None)
-            rows.append(("kernel/fp16_add_1M_rows_sharded", dt4 * 1e6, {
+            dt4 = bench_stream(mesh=None, layout=layout)
+            return (name, dt4 * 1e6, {
                 "rows_per_s": _rate(nm, dt4), "backend": "ref",
-                "levelized": 1, "chunk_rows": chunk, "n_devices": 1}))
-        else:
-            rows.append(_sharded_row_subprocess())
+                "levelized": 1, "chunk_rows": chunk, "layout": layout,
+                "n_devices": 1})
+        return _sharded_row_subprocess(name)
+
+    if want_row("kernel/fp16_add_1M_rows_sharded"):
+        rows.append(sharded_row("kernel/fp16_add_1M_rows_sharded",
+                                "rows32"))
+    if want_row("kernel/fp16_add_1M_rows64_sharded"):
+        # the sharded scale path under the paired word layout: half the
+        # words per shard for the same 1M rows
+        rows.append(sharded_row("kernel/fp16_add_1M_rows64_sharded",
+                                "rows64"))
     return rows
 
 

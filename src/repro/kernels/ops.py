@@ -1,17 +1,26 @@
-"""jit'd wrappers around the PIM executor kernels: compiled-program caching,
-padding, row-major <-> packed-column bridging, and the scale layer --
-chunked streaming execution and multi-device row sharding.
+"""jit'd wrappers around the PIM executor kernels: the compile->execute
+pipeline behind every entry point.
 
-Pipeline (DESIGN.md §5): Program -> (content-hash cache) levelized schedule /
-lowered arrays -> pack_rows -> kernel -> unpack_rows.  All host-side
-bridging is fully vectorized: packing and unpacking move whole ports per
-numpy call (one 32-bit limb loop for arbitrarily wide ports), never per cell
-or per row.
+Pipeline (DESIGN.md §5, §11): ``Program`` -> :func:`levelize` schedule ->
+:class:`~repro.kernels.plan.ExecPlan` (schedule kind x backend x
+:class:`~repro.kernels.plan.WordLayout` x mesh/chunking) -> resolved
+executor + packed bridges -> kernel -> unpack.  All host-side bridging is
+fully vectorized: packing and unpacking move whole ports per numpy call
+(one 32-bit limb loop for arbitrarily wide ports), never per cell or per
+row.
+
+Execution configuration is an :class:`ExecPlan` (``kernels.plan``):
+every public entry point here accepts either a plan or the historical
+convenience strings, normalizes them **once** via :func:`plan.as_plan`,
+and threads only the plan below that point.  The compiled-program cache,
+the pin API and the resolved-executor memo all key on the plan, and the
+dense-fallback decision for degenerate slot layouts happens once at plan
+resolution -- not per call site.
 
 Scale layer (DESIGN.md §8): :func:`run_program_streaming` tiles arbitrary
 row counts into fixed-shape word-aligned chunks and overlaps host packing of
 chunk ``k+1`` with device execution of chunk ``k`` (JAX async dispatch);
-:func:`row_mesh` + the ``mesh=`` arguments shard the packed word axis over
+:func:`row_mesh` + the plan's ``mesh`` shard the packed word axis over
 multiple devices with ``jax.shard_map`` (the level loop is elementwise along
 words, so sharding needs no communication).
 """
@@ -23,7 +32,7 @@ import dataclasses
 import functools
 import hashlib
 import weakref
-from typing import Callable, Dict, Iterable, Optional
+from typing import Callable, Dict, Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +42,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.gates import LevelSchedule, levelize
 from . import slots as kslots
-from .pim_exec import (TILE_W, make_slots_static, pim_exec_level_fused,
+from .plan import (BACKENDS, DEFAULT_LAYOUT, DEFAULT_PLAN, DEFAULT_SCHEDULE,
+                   LAYOUTS, ROWS32, ROWS64, SCHEDULES, TILE_W, Backend,
+                   ExecPlan, WordLayout, as_plan)
+from .pim_exec import (make_slots_static, pim_exec_level_fused,
                        pim_exec_level_padded_io, pim_exec_padded,
                        pim_exec_slots_fused, pim_exec_slots_io)
 from .ref import (pim_exec_ref, pim_exec_ref_level_fused,
@@ -42,38 +54,34 @@ from .slots import (as_run, pim_exec_ref_slots_fused, pim_exec_ref_slots_io)
 
 _FULL = np.uint32(0xFFFFFFFF)
 
-# Default schedule compilation mode for the levelized jax backends:
-#   'slots'        -- contiguous-slot schedule + scan executors (DESIGN.md
-#                     §9): band slice writes instead of scatters, slice
-#                     state assembly/extraction, butterfly bridges.  The
-#                     fast path on CPU and the default.
-#   'slots-static' -- slot schedule + the straight-line static-slice
-#                     executors (segmented schedule-to-jaxpr chain on
-#                     'ref', the Mosaic-lowerable unrolled kernel on
-#                     'pallas').  The hardware-shaped emission; on CPU it
-#                     pays per-op overhead for the unrolled form.
-#   'dense'        -- the PR-1/2 dense index-matrix executors
-#                     (gather -> NOR -> scatter per level).
-DEFAULT_SCHEDULE = "slots"
-SCHEDULES = ("slots", "slots-static", "dense")
+# Historical tunable names, re-exported from their canonical home on
+# kernels.plan (the Backend descriptors read the same values) for callers
+# that import them from here.
+from .plan import (DEFAULT_CHUNK_ROWS, LEVEL_MAX_WIDTH,  # noqa: F401
+                   SLOT_WIDTH)
 
-# Streaming chunk size (rows).  262144 rows = 8192 packed words: big enough
-# to amortize per-chunk dispatch (and to give each shard of a several-way
-# mesh multiple Pallas tiles), small enough that two in-flight chunks stay
-# cache-friendly and the pack/exec pipeline keeps overlapping.
-DEFAULT_CHUNK_ROWS = 1 << 18
+
+def make_plan(**kw) -> ExecPlan:
+    """Build an :class:`ExecPlan` from convenience keywords
+    (``backend=``, ``schedule=``, ``layout=``, ``mesh=``, ``chunk_rows=``,
+    or a ready plan via ``plan=``).  The exemplary entry for callers that
+    want to name their execution config once and reuse it."""
+    return as_plan(kw.pop("plan", None), **kw)
 
 
 # --------------------------------------------------------------------------
-# content-hash-keyed compiled-program cache (bounded LRU)
+# plan-keyed compiled-program cache (bounded LRU)
 # --------------------------------------------------------------------------
 #
 # Programs are compiled (NOR-lowered to dense arrays, levelized, shipped to
-# the device) once per *structure*, not per instance: the cache key is a
-# content hash of the instruction stream + ports, so structurally identical
-# programs share compiled artifacts and -- unlike the previous id()-keyed
-# cache -- a dead program's recycled id can never poison the entry of a new
-# one.  Keys are memoized per live instance via a WeakKeyDictionary.
+# the device) once per (*structure*, *plan*): the cache key pairs a content
+# hash of the instruction stream + ports with the plan's ``compile_key`` --
+# the plan fields that determine compiled artifacts (schedule kind, word
+# layout, allocator widths, static segmentation).  Structurally identical
+# programs under the same plan share compiled artifacts, and -- unlike an
+# id()-keyed cache -- a dead program's recycled id can never poison the
+# entry of a new one.  Content keys are memoized per live instance via a
+# WeakKeyDictionary.
 #
 # The cache is a bounded LRU: each entry pins device buffers (schedule index
 # matrices, port gather vectors), so an unbounded dict would leak device
@@ -84,32 +92,42 @@ DEFAULT_CHUNK_ROWS = 1 << 18
 _COMPILED_CAP = 64
 
 _key_memo: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
-_compiled: "collections.OrderedDict[bytes, _Compiled]" = \
+_compiled: "collections.OrderedDict[tuple, _Compiled]" = \
     collections.OrderedDict()
 
-# Pinned entries (content key -> pin refcount) are exempt from LRU
+# Pinned entries (cache key -> pin refcount) are exempt from LRU
 # eviction: the batched serving runtime pins its hot working set so mixed
 # traffic that keeps minting cold program structures can never churn a hot
 # program's schedule + device buffers out of the cache.  Pins are
 # refcounted (several pin caches may share a program); a fully pinned
 # cache may transiently exceed the cap -- unpinned entries still evict.
-_pinned: Dict[bytes, int] = {}
+_pinned: Dict[tuple, int] = {}
 
 
-def _evict_over_cap() -> None:
-    """Drop least-recently-used *unpinned* entries down to the cap."""
+def _evict_over_cap(protect: Optional[tuple] = None) -> None:
+    """Drop least-recently-used *unpinned* entries down to the cap.
+
+    ``protect`` exempts one key -- the entry a caller just created or
+    touched.  Without it, a cache whose cap is saturated by pinned entries
+    would evict the entry it is in the middle of handing out: the caller
+    would keep building artifacts on an orphaned object that the next
+    lookup (or a later ``pin_program``) silently replaces, so the work is
+    lost and a pin can land on an empty twin.  (The pinned-vs-cap audit of
+    ISSUE 5; regression-tested in tests/test_plan.py.)"""
     if len(_compiled) <= _COMPILED_CAP:
         return
     for key in list(_compiled):
         if len(_compiled) <= _COMPILED_CAP:
             break
-        if key not in _pinned:
+        if key not in _pinned and key != protect:
             del _compiled[key]
 
 
 def set_compiled_cache_cap(cap: int) -> int:
     """Set the compiled-program LRU capacity (entries); returns the old cap.
-    Shrinking evicts least-recently-used unpinned entries immediately."""
+    Shrinking evicts least-recently-used unpinned entries immediately;
+    pinned entries always survive, even when the new cap is smaller than
+    the pinned count (the cache then runs over cap until pins release)."""
     global _COMPILED_CAP
     if cap < 1:
         raise ValueError(f"cache cap must be >= 1, got {cap}")
@@ -118,19 +136,28 @@ def set_compiled_cache_cap(cap: int) -> int:
     return old
 
 
-def pin_program(program) -> bytes:
-    """Pin ``program``'s compiled-cache entry against LRU eviction; returns
-    the content key (the token :func:`unpin_program` takes).  Creates the
-    entry if the program was never compiled, so artifacts built later land
-    in the pinned slot.  Pins nest (refcounted)."""
-    key = content_key(program)
+def cache_key(program, plan: Optional[ExecPlan] = None) -> tuple:
+    """The compiled-program cache key: (program content hash,
+    plan.compile_key).  The plan defaults to :data:`plan.DEFAULT_PLAN`."""
+    plan = DEFAULT_PLAN if plan is None else plan
+    return (content_key(program), plan.compile_key)
+
+
+def pin_program(program, plan: Optional[ExecPlan] = None) -> tuple:
+    """Pin ``program``'s compiled-cache entry (under ``plan``, default the
+    default plan) against LRU eviction; returns the cache key (the token
+    :func:`unpin_program` takes).  Creates the entry if the program was
+    never compiled, so artifacts built later land in the pinned slot.
+    Pins nest (refcounted)."""
+    key = cache_key(program, plan)
     if key not in _compiled:
         _compiled[key] = _Compiled()
+        _evict_over_cap(protect=key)
     _pinned[key] = _pinned.get(key, 0) + 1
     return key
 
 
-def unpin_program(key: bytes) -> bool:
+def unpin_program(key: tuple) -> bool:
     """Release one pin on ``key``; returns True while pins remain.  The
     entry stays cached but becomes evictable again once fully unpinned."""
     n = _pinned.get(key, 0)
@@ -192,146 +219,201 @@ def output_names(ports_owner) -> list:
                   or ports_owner.ports)
 
 
-# Dense-schedule width cap: levels wider than this are split into several
-# rows, trading a few extra fori_loop trips for much less sink padding (the
-# sweet spot on CPU interpret mode; see ISSUE 1 / BENCH_1.json).
-LEVEL_MAX_WIDTH = 8
+# --------------------------------------------------------------------------
+# per-(structure, plan) compilation artifacts
+# --------------------------------------------------------------------------
 
-# Slot-schedule width: the W-wide band granularity of the contiguous-slot
-# allocator.  Narrower slots mean more scan iterations but a smaller state
-# (slots turn over faster), and on XLA:CPU the level loop's cost tracks the
-# carried state size much more than the iteration count -- W=6 won the
-# sweep on the tracked row (BENCH_3) with W in 4..6 within noise of each
-# other and W>=8 measurably slower.
-SLOT_WIDTH = 6
+@dataclasses.dataclass
+class _Resolved:
+    """One plan+program+input-set binding, resolved exactly once: the
+    *effective* schedule kind (the dense fallback for degenerate slot
+    layouts is decided here, not per call site), the device-resident
+    schedule operands, the bridge index vectors, and the static widths the
+    executors take as compile-time constants."""
+    kind: str                        # effective schedule after fallback
+    sched: LevelSchedule
+    la: object
+    lb: object
+    lo: object
+    out_idx: object
+    names: list
+    out_base: Optional[int]
+    in_idx: object
+    in_base: Optional[int]
+    one_cell: Optional[int]
+    in_widths: tuple
+    out_widths: tuple
+    k_out: int
+    fused_ok: bool                   # every port fits a 32-bit transpose
+    use_static: bool                 # the straight-line emission applies
 
 
 @dataclasses.dataclass
 class _Compiled:
-    """Lazily-populated per-structure compilation artifacts (dense and slot
-    schedules, device index buffers, and the static straight-line chains,
-    all shared under one content-hash entry)."""
+    """Lazily-populated compilation artifacts for one (program structure,
+    plan compile-key) cache entry: the plan's own levelized schedule, the
+    dense-fallback artifacts for degenerate slot layouts, device index
+    buffers, resolved executor bindings and the static straight-line
+    chains."""
     arrays: Optional[tuple] = None              # (ops, a, b, o, n_cells)
-    schedule: Optional[LevelSchedule] = None
-    sched_dev: Optional[tuple] = None           # (la, lb, lo, out_idx, names)
-    in_idx: Optional[dict] = None               # input-name tuple -> indices
-    slot_schedule: Optional[LevelSchedule] = None
-    slot_dev: Optional[tuple] = None
-    slot_in: Optional[dict] = None              # name tuple -> (idx, base)
-    static_chain: Optional[dict] = None         # statics key -> callable
+    scheds: Dict[str, LevelSchedule] = dataclasses.field(default_factory=dict)
+    devs: Dict[str, tuple] = dataclasses.field(default_factory=dict)
+    in_idx: Dict[tuple, tuple] = dataclasses.field(default_factory=dict)
+    resolved: Dict[tuple, _Resolved] = dataclasses.field(default_factory=dict)
+    static_chain: Dict[tuple, Callable] = dataclasses.field(
+        default_factory=dict)
 
     def get_arrays(self, program):
         if self.arrays is None:
             self.arrays = program.to_arrays()
         return self.arrays
 
-    def get_schedule(self, program, schedule: str = "dense"
+    def get_schedule(self, program, plan: ExecPlan, kind: Optional[str] = None
                      ) -> LevelSchedule:
-        if schedule != "dense":
-            if self.slot_schedule is None:
-                self.slot_schedule = levelize(program, alloc="slots",
-                                              max_width=SLOT_WIDTH)
-            return self.slot_schedule
-        if self.schedule is None:
-            self.schedule = levelize(program, max_width=LEVEL_MAX_WIDTH)
-        return self.schedule
+        kind = plan.schedule if kind is None else kind
+        alloc = "dense" if kind == "dense" else "slots"
+        s = self.scheds.get(alloc)
+        if s is None:
+            if alloc == "dense":
+                s = levelize(program,
+                             max_width=plan.backend.level_max_width)
+            else:
+                s = levelize(program, alloc="slots",
+                             max_width=plan.backend.slot_width)
+            self.scheds[alloc] = s
+        return s
 
-    def get_sched_dev(self, program, schedule: str = "dense"):
-        if schedule != "dense":
-            if self.slot_dev is None:
-                s = self.get_schedule(program, schedule)
-                names = output_names(s)
-                cells = _stacked_cells([s.ports[n] for n in names])
-                self.slot_dev = (jnp.asarray(s.a), jnp.asarray(s.b),
-                                 jnp.asarray(s.out), jnp.asarray(cells),
-                                 names, as_run(cells))
-            return self.slot_dev
-        if self.sched_dev is None:
-            s = self.get_schedule(program)
+    def get_sched_dev(self, program, plan: ExecPlan, kind: str):
+        alloc = "dense" if kind == "dense" else "slots"
+        dev = self.devs.get(alloc)
+        if dev is None:
+            s = self.get_schedule(program, plan, kind)
             names = output_names(s)
             cells = _stacked_cells([s.ports[n] for n in names])
-            self.sched_dev = (jnp.asarray(s.a), jnp.asarray(s.b),
-                              jnp.asarray(s.out), jnp.asarray(cells), names,
-                              None)
-        return self.sched_dev
+            dev = (jnp.asarray(s.a), jnp.asarray(s.b), jnp.asarray(s.out),
+                   jnp.asarray(cells), names,
+                   as_run(cells) if alloc == "slots" else None)
+            self.devs[alloc] = dev
+        return dev
 
-    def get_in_idx(self, program, in_names, schedule: str = "dense"):
-        memo = {}
-        if schedule != "dense":
-            if self.slot_in is None:
-                self.slot_in = {}
-            memo = self.slot_in
-        else:
-            if self.in_idx is None:
-                self.in_idx = {}
-            memo = self.in_idx
-        key = tuple(in_names)
-        if key not in memo:
-            s = self.get_schedule(program, schedule)
+    def get_in_idx(self, program, plan: ExecPlan, kind: str, in_names):
+        alloc = "dense" if kind == "dense" else "slots"
+        key = (alloc, tuple(in_names))
+        if key not in self.in_idx:
+            s = self.get_schedule(program, plan, kind)
             cells = _stacked_cells([s.pack_cells(n) for n in in_names])
-            memo[key] = (jnp.asarray(cells), as_run(cells))
-        return memo[key]
+            self.in_idx[key] = (jnp.asarray(cells), as_run(cells))
+        return self.in_idx[key]
 
-    def get_static_chain(self, program, in_names, fused, in_widths,
-                         out_widths):
-        if self.static_chain is None:
-            self.static_chain = {}
-        key = (tuple(in_names), fused, in_widths, out_widths)
+    def resolve(self, program, plan: ExecPlan, in_names: tuple) -> _Resolved:
+        """Bind ``plan`` to this program for one input-name set: pick the
+        effective schedule (dense fallback for layouts the slot executors
+        cannot assemble), materialize the device operands, and freeze the
+        static widths.  Memoized -- the per-call dispatcher only reads."""
+        memo_key = (plan.schedule, plan.backend.name, plan.mesh is None,
+                    in_names)
+        r = self.resolved.get(memo_key)
+        if r is not None:
+            return r
+        kind = plan.schedule
+        sched = self.get_schedule(program, plan, kind)
+        la, lb, lo, out_idx, names, out_base = \
+            self.get_sched_dev(program, plan, kind)
+        in_idx, in_base = self.get_in_idx(program, plan, kind, in_names)
+        k_out = sum(len(sched.ports[n]) for n in names)
+        slots_ok = (kind != "dense" and out_base is not None and k_out > 0)
+        if plan.backend.name == "pallas" and slots_ok and in_base is None:
+            slots_ok = False    # aliased input ports: slice assembly
+            #                     impossible, use the dense kernels
+        if not slots_ok and kind != "dense":
+            # degenerate program for the slot layout: dense executors,
+            # which handle every schedule shape
+            kind = "dense"
+            sched = self.get_schedule(program, plan, kind)
+            la, lb, lo, out_idx, names, out_base = \
+                self.get_sched_dev(program, plan, kind)
+            in_idx, in_base = self.get_in_idx(program, plan, kind, in_names)
+        in_widths = tuple(len(sched.pack_cells(n)) for n in in_names)
+        out_widths = tuple(len(sched.ports[n]) for n in names)
+        r = _Resolved(
+            kind=kind, sched=sched, la=la, lb=lb, lo=lo, out_idx=out_idx,
+            names=names, out_base=out_base, in_idx=in_idx, in_base=in_base,
+            one_cell=None if sched.one_cell is None else int(sched.one_cell),
+            in_widths=in_widths, out_widths=out_widths,
+            k_out=sum(out_widths),
+            fused_ok=bool(in_names) and
+            max(in_widths + out_widths, default=0) <= 32,
+            use_static=(plan.schedule == "slots-static" and slots_ok
+                        and plan.mesh is None))
+        self.resolved[memo_key] = r
+        return r
+
+    def get_static_chain(self, program, plan: ExecPlan, in_names, fused,
+                         in_widths, out_widths):
+        key = (tuple(in_names), fused, in_widths, out_widths,
+               plan.layout.planes)
         if key not in self.static_chain:
-            s = self.get_schedule(program, "slots")
+            s = self.get_schedule(program, plan, "slots")
             cells = _stacked_cells([s.pack_cells(n) for n in in_names])
             self.static_chain[key] = kslots.build_static_chain(
                 s, in_widths, out_widths, output_names(s), cells,
-                fused=fused)
+                seg_levels=plan.backend.seg_levels, fused=fused,
+                planes=plan.layout.planes)
         return self.static_chain[key]
 
-    def get_static_pallas(self, program, in_names, in_widths, out_widths):
-        if self.static_chain is None:
-            self.static_chain = {}
-        key = ("pallas", tuple(in_names), in_widths, out_widths)
+    def get_static_pallas(self, program, plan: ExecPlan, in_names,
+                          in_widths, out_widths):
+        key = ("pallas", tuple(in_names), in_widths, out_widths,
+               plan.layout.planes)
         if key not in self.static_chain:
-            s = self.get_schedule(program, "slots")
+            s = self.get_schedule(program, plan, "slots")
             self.static_chain[key] = make_slots_static(
-                s, in_widths, out_widths, output_names(s))
+                s, in_widths, out_widths, output_names(s),
+                planes=plan.layout.planes)
         return self.static_chain[key]
 
 
-def compiled(program) -> _Compiled:
-    key = content_key(program)
+def compiled(program, plan: Optional[ExecPlan] = None) -> _Compiled:
+    key = cache_key(program, plan)
     entry = _compiled.get(key)
     if entry is None:
         entry = _compiled[key] = _Compiled()
     else:
         _compiled.move_to_end(key)
-    _evict_over_cap()
+    _evict_over_cap(protect=key)
     return entry
 
 
-def is_compiled(program, schedule: str = DEFAULT_SCHEDULE) -> bool:
+def is_compiled(program, plan=None) -> bool:
     """True when the compiled-program cache already holds ``program``'s
-    lowered schedule artifacts for ``schedule`` -- i.e. the next execution
-    pays no levelize/lowering cost.  A pure query: it never creates an
-    entry and never touches LRU order (serving uses it to report honest
-    ``cached`` flags without perturbing eviction)."""
-    entry = _compiled.get(content_key(program))
+    lowered schedule artifacts for ``plan`` -- i.e. the next execution
+    pays no levelize/lowering cost.  ``plan`` accepts an ExecPlan or a
+    schedule-name string (the historical signature).  A pure query: it
+    never creates an entry and never touches LRU order (serving uses it to
+    report honest ``cached`` flags without perturbing eviction)."""
+    if isinstance(plan, str):
+        plan = as_plan(schedule=plan)
+    entry = _compiled.get(cache_key(program, plan))
     if entry is None:
         return False
-    if schedule == "dense":
-        return entry.sched_dev is not None
-    return entry.slot_dev is not None
+    kind = (plan or DEFAULT_PLAN).schedule
+    return ("dense" if kind == "dense" else "slots") in entry.devs
 
 
 def program_arrays(program):
     """(ops, a, b, out, n_cells) of the NOR-lowered program, cached by
-    structural content hash."""
+    structural content hash (under the default plan's cache entry)."""
     return compiled(program).get_arrays(program)
 
 
-def program_schedule(program, schedule: str = DEFAULT_SCHEDULE
-                     ) -> LevelSchedule:
+def program_schedule(program, plan=None) -> LevelSchedule:
     """The levelized execution schedule of ``program`` (slot or dense
-    layout per ``schedule``), cached by structural content hash."""
-    return compiled(program).get_schedule(program, schedule)
+    layout per the plan's schedule kind), cached per (structure, plan).
+    ``plan`` accepts an ExecPlan or a schedule-name string."""
+    if isinstance(plan, str):
+        plan = as_plan(schedule=plan)
+    plan = DEFAULT_PLAN if plan is None else plan
+    return compiled(program, plan).get_schedule(program, plan)
 
 
 # --------------------------------------------------------------------------
@@ -370,29 +452,46 @@ def _le_bytes(arr: np.ndarray) -> np.ndarray:
         arr.dtype.newbyteorder("<"), copy=False).view(np.uint8)
 
 
-def _n_words(n_rows: int, pad_to: int) -> int:
-    return max(((n_rows + 31) // 32 + pad_to - 1) // pad_to * pad_to, pad_to)
-
-
-def _pack_port_words(vals, nc: int, n_words: int) -> np.ndarray:
-    """Column-major words (uint32[nc, n_words]) of one port's per-row
-    integers; bit w of word i is row 32*i + w."""
+def _pack_port_words(vals, nc: int, n_words: int,
+                     layout: WordLayout = ROWS32) -> np.ndarray:
+    """Packed words of one port's per-row integers: uint32[nc, n_words]
+    under rows32 (bit w of word i is row 32*i + w), or the planes-leading
+    uint32[planes, nc, n_words] under rows64 (plane h of word i covers
+    rows ``64*i + 32*h + w`` -- the little-endian uint64 halves)."""
     n_limbs = (nc + 31) // 32
-    limbs = _value_limbs(vals, n_limbs, n_words * 32)
+    n32 = n_words * layout.planes
+    limbs = _value_limbs(vals, n_limbs, n32 * 32)
     # [pad_rows, 32 * n_limbs] -> cell-major [nc, pad_rows] bit matrix
     bits = np.unpackbits(_le_bytes(limbs), axis=1, bitorder="little")
     cols = np.ascontiguousarray(bits.T[:nc])
-    words = np.packbits(cols.reshape(nc, n_words, 32), axis=2,
-                        bitorder="little")                   # [nc, n_words, 4]
-    return words.reshape(nc, -1).view("<u4")
+    words = np.packbits(cols.reshape(nc, n32, 32), axis=2,
+                        bitorder="little")                    # [nc, n32, 4]
+    w32 = words.reshape(nc, -1).view("<u4")
+    if layout.planes == 1:
+        return w32
+    # uint32 word 2i+h of rows32 is plane h of logical word i
+    return np.ascontiguousarray(
+        np.moveaxis(w32.reshape(nc, n_words, layout.planes), -1, 0))
+
+
+def _sub_to_rows32(sub: np.ndarray) -> np.ndarray:
+    """Collapse a planes-leading packed block back to the rows32 word
+    order: (planes, k, n_words) -> (k, n_words * planes)."""
+    if sub.ndim == 2:
+        return sub
+    planes, k, n_words = sub.shape
+    return np.ascontiguousarray(
+        np.moveaxis(sub, 0, -1).reshape(k, n_words * planes))
 
 
 def pack_rows(values: Dict[str, np.ndarray], ports, n_rows: int,
               n_cells: int, one_cell: Optional[int] = None,
-              pad_to: int = TILE_W) -> np.ndarray:
-    """Pack per-row port integers into column-major word state
-    (uint32[n_cells, n_words]); bit w of state[c, i] = cell c of row
-    32*i + w.  ``ports`` is a name -> cell-list mapping (or any object with
+              pad_to: int = TILE_W,
+              layout: WordLayout = ROWS32) -> np.ndarray:
+    """Pack per-row port integers into column-major word state --
+    uint32[n_cells, n_words] (rows32; bit w of state[c, i] = cell c of row
+    32*i + w) or the planes-leading uint32[planes, n_cells, n_words]
+    (rows64).  ``ports`` is a name -> cell-list mapping (or any object with
     a ``.ports`` attribute).  ``one_cell``, when given, is filled with ones
     (the LevelSchedule's folded INIT1 constant).
 
@@ -401,13 +500,14 @@ def pack_rows(values: Dict[str, np.ndarray], ports, n_rows: int,
     arbitrarily wide ports.
     """
     ports = _ports_of(ports)
-    n_words = _n_words(n_rows, pad_to)
-    state = np.zeros((n_cells, n_words), np.uint32)
+    n_words = layout.n_words(n_rows, pad_to)
+    state = np.zeros(layout.state_shape(n_cells, n_words), np.uint32)
     if one_cell is not None:
-        state[one_cell] = _FULL
+        state[..., one_cell, :] = _FULL
     for name, vals in values.items():
         cells = np.asarray(ports[name], np.int64)
-        state[cells] = _pack_port_words(vals, len(cells), n_words)
+        state[..., cells, :] = _pack_port_words(vals, len(cells), n_words,
+                                                layout)
     return state
 
 
@@ -415,8 +515,9 @@ def unpack_rows(state: np.ndarray, ports, n_rows: int,
                 names: Optional[Iterable[str]] = None
                 ) -> Dict[str, np.ndarray]:
     """Inverse of :func:`pack_rows` (row-major ints); ``names`` restricts
-    which ports are unpacked (default: all).  Ports wider than 63 cells come
-    back as object arrays of Python ints.
+    which ports are unpacked (default: all).  The word layout is inferred
+    from the state rank.  Ports wider than 63 cells come back as object
+    arrays of Python ints.
 
     ``state`` may be a device (jnp) array: the port rows are gathered with
     one indexed read and transferred once.
@@ -426,13 +527,16 @@ def unpack_rows(state: np.ndarray, ports, n_rows: int,
     all_cells = np.concatenate(
         [np.asarray(ports[n], np.int64) for n in names]) if names else \
         np.zeros(0, np.int64)
-    sub = np.asarray(state[all_cells])        # one gather + host transfer
+    sub = np.asarray(state[all_cells] if state.ndim == 2
+                     else state[:, all_cells])   # one gather + host transfer
     return _unpack_sub(sub, [(n, len(ports[n])) for n in names], n_rows)
 
 
 def _unpack_sub(sub: np.ndarray, name_widths, n_rows: int
                 ) -> Dict[str, np.ndarray]:
-    """Unpack pre-gathered port rows (stacked in ``name_widths`` order)."""
+    """Unpack pre-gathered port rows (stacked in ``name_widths`` order;
+    rows32 2-D or planes-leading 3-D)."""
+    sub = _sub_to_rows32(np.asarray(sub))
     out = {}
     off = 0
     for name, nc in name_widths:
@@ -488,8 +592,14 @@ def row_mesh(n_devices: Optional[int] = None) -> Optional[Mesh]:
 # Every levelized executor entry point shares one signature --
 # (in_block, in_idx, la, lb, lo, out_idx) -- with the data block sharded
 # along its trailing word/row axis and the schedule operands replicated.
-_SHARD_IN_SPECS = (P(None, "rows"), P(None),
-                   P(None, None), P(None, None), P(None, None), P(None))
+# The data block is rank 2 (fused values, rows32 port rows) or rank 3
+# (rows64 port rows with the leading plane axis); specs follow the rank.
+
+def _shard_specs(data_rank: int) -> Tuple[tuple, P]:
+    data = P(*([None] * (data_rank - 1) + ["rows"]))
+    return ((data, P(None), P(None, None), P(None, None), P(None, None),
+             P(None)), data)
+
 
 # Bounded like _compiled, and for the same reason: each wrapper pins
 # compiled XLA executables keyed by per-program statics, so long-running
@@ -499,17 +609,19 @@ _shard_cache: "collections.OrderedDict[tuple, Callable]" = \
     collections.OrderedDict()
 
 
-def _sharded_exec(fn, mesh: Mesh, check_rep: bool, **static) -> Callable:
-    """``jax.jit(shard_map(fn))`` over :data:`_SHARD_IN_SPECS`, cached per
+def _sharded_exec(fn, mesh: Mesh, check_rep: bool, data_rank: int = 2,
+                  **static) -> Callable:
+    """``jax.jit(shard_map(fn))`` over the rank-matched specs, cached per
     (executor, mesh, statics) so each chunk shape compiles once.  Pallas
     calls have no replication rule, hence ``check_rep=False`` there."""
-    key = (fn, mesh, check_rep, tuple(sorted(static.items())))
+    key = (fn, mesh, check_rep, data_rank, tuple(sorted(static.items())))
     wrapped = _shard_cache.get(key)
     if wrapped is None:
         inner = functools.partial(fn, **static)
+        in_specs, out_spec = _shard_specs(data_rank)
         wrapped = jax.jit(shard_map(
-            inner, mesh=mesh, in_specs=_SHARD_IN_SPECS,
-            out_specs=P(None, "rows"), check_rep=check_rep))
+            inner, mesh=mesh, in_specs=in_specs,
+            out_specs=out_spec, check_rep=check_rep))
         _shard_cache[key] = wrapped
         while len(_shard_cache) > _SHARD_CACHE_CAP:
             _shard_cache.popitem(last=False)
@@ -523,167 +635,153 @@ def _sharded_exec(fn, mesh: Mesh, check_rep: bool, **static) -> Callable:
 # --------------------------------------------------------------------------
 
 def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
-                        backend: str, mesh: Optional[Mesh] = None,
-                        pad_rows: Optional[int] = None,
-                        schedule: str = DEFAULT_SCHEDULE) -> Callable:
-    """Pack ``inputs`` and dispatch one levelized execution; returns a
-    zero-arg ``finalize`` that blocks on the device result and unpacks it.
+                        plan: ExecPlan,
+                        pad_rows: Optional[int] = None) -> Callable:
+    """Pack ``inputs`` and dispatch one levelized execution under ``plan``;
+    returns a zero-arg ``finalize`` that blocks on the device result and
+    unpacks it.
 
     Dispatch is asynchronous (JAX futures), so callers can overlap host
     packing of the next chunk with device execution of this one -- the
     streaming executor's pipeline.  ``pad_rows`` fixes the padded row count
     (>= n_rows) so every streaming chunk shares one compiled shape.
-    ``schedule`` selects the compilation mode (see :data:`DEFAULT_SCHEDULE`).
     """
-    if schedule not in SCHEDULES:
-        raise ValueError(f"unknown schedule {schedule!r} "
-                         f"(expected one of {SCHEDULES})")
-    comp = compiled(program)
-    sched = comp.get_schedule(program, schedule)
-    shards = 1 if mesh is None else mesh.devices.size
-    pad_to = (TILE_W if backend == "pallas" else 1) * shards
-    n_words = _n_words(n_rows if pad_rows is None else pad_rows, pad_to)
-    la, lb, lo, out_idx, names, out_base = \
-        comp.get_sched_dev(program, schedule)
+    comp = compiled(program, plan)
     in_names = sorted(inputs)
-    in_idx, in_base = comp.get_in_idx(program, in_names, schedule)
-    one_cell = None if sched.one_cell is None else int(sched.one_cell)
-    in_widths = tuple(len(sched.pack_cells(n)) for n in in_names)
-    out_widths = tuple(len(sched.ports[n]) for n in names)
-    k_out = sum(out_widths)
-    slots_ok = (schedule != "dense" and out_base is not None and k_out > 0)
-    use_static = schedule == "slots-static" and slots_ok and mesh is None
+    r = comp.resolve(program, plan, tuple(in_names))
+    layout, backend, mesh = plan.layout, plan.backend, plan.mesh
+    planes = layout.planes
+    shards = 1 if mesh is None else mesh.devices.size
+    pad_to = backend.pad_to * shards
+    n_words = layout.n_words(n_rows if pad_rows is None else pad_rows,
+                             pad_to)
+    is_pallas = backend.name == "pallas"
     vals = [np.asarray(inputs[n]) for n in in_names]
-    if backend == "pallas" and slots_ok and in_base is None:
-        slots_ok = False        # aliased input ports: slice assembly
-        #                         impossible, use the dense kernels
-    if not slots_ok and schedule != "dense":
-        # degenerate program for the slot layout: dense executors, which
-        # handle every schedule shape
-        sched = comp.get_schedule(program, "dense")
-        la, lb, lo, out_idx, names, out_base = \
-            comp.get_sched_dev(program, "dense")
-        in_idx, in_base = comp.get_in_idx(program, in_names, "dense")
-        one_cell = None if sched.one_cell is None else int(sched.one_cell)
-        schedule = "dense"
-        use_static = False
-    if (vals and max(in_widths + out_widths, default=0) <= 32
-            and all(v.dtype != object for v in vals)):
+    if r.fused_ok and all(v.dtype != object for v in vals):
         # fused fast path: the bit transposes run inside the executor's
         # XLA program; only (n_ports, n_rows) uint32 cross the boundary
-        in_vals = np.empty((len(vals), n_words * 32), np.uint32)
+        pad_rows_total = n_words * 32 * planes
+        in_vals = np.empty((len(vals), pad_rows_total), np.uint32)
         for p, v in enumerate(vals):
             in_vals[p, :len(v)] = v           # same-kind cast in place
             in_vals[p, len(v):] = 0           # only the ragged tail zeroed
-        if use_static and backend == "ref":
-            run = comp.get_static_chain(program, in_names, True,
-                                        in_widths, out_widths)
+        if r.use_static and not is_pallas:
+            run = comp.get_static_chain(program, plan, in_names, True,
+                                        r.in_widths, r.out_widths)
             outs = run(jnp.asarray(in_vals))
-        elif use_static and in_base == 0:
-            run = comp.get_static_pallas(program, in_names, in_widths,
-                                         out_widths)
+        elif r.use_static and r.in_base == 0:
+            run = comp.get_static_pallas(program, plan, in_names,
+                                         r.in_widths, r.out_widths)
             outs = run(jnp.asarray(in_vals))
         else:
-            if schedule != "dense":
-                fn = (pim_exec_ref_slots_fused if backend == "ref"
-                      else pim_exec_slots_fused)
-                static = dict(n_cells=sched.n_cells, one_cell=one_cell,
-                              in_widths=in_widths, out_widths=out_widths,
-                              in_base=in_base, out_base=out_base)
+            if r.kind != "dense":
+                fn = (pim_exec_slots_fused if is_pallas
+                      else pim_exec_ref_slots_fused)
+                static = dict(n_cells=r.sched.n_cells, one_cell=r.one_cell,
+                              in_widths=r.in_widths, out_widths=r.out_widths,
+                              in_base=r.in_base, out_base=r.out_base,
+                              planes=planes)
             else:
-                fn = (pim_exec_ref_level_fused if backend == "ref"
-                      else pim_exec_level_fused)
-                static = dict(n_cells=sched.n_cells, one_cell=one_cell,
-                              in_widths=in_widths, out_widths=out_widths)
+                fn = (pim_exec_level_fused if is_pallas
+                      else pim_exec_ref_level_fused)
+                static = dict(n_cells=r.sched.n_cells, one_cell=r.one_cell,
+                              in_widths=r.in_widths, out_widths=r.out_widths,
+                              planes=planes)
             if mesh is None:
-                outs = fn(jnp.asarray(in_vals), in_idx, la, lb, lo,
-                          out_idx, **static)
+                outs = fn(jnp.asarray(in_vals), r.in_idx, r.la, r.lb, r.lo,
+                          r.out_idx, **static)
             else:
-                outs = _sharded_exec(fn, mesh, backend != "pallas",
-                                     **static)(
-                    jnp.asarray(in_vals), in_idx, la, lb, lo, out_idx)
+                outs = _sharded_exec(fn, mesh, not is_pallas, 2, **static)(
+                    jnp.asarray(in_vals), r.in_idx, r.la, r.lb, r.lo,
+                    r.out_idx)
 
         def finalize() -> Dict[str, np.ndarray]:
             o = np.asarray(outs)                     # blocks until ready
             return {n: o[p, :n_rows].astype(np.uint64)
-                    for p, n in enumerate(names)}
+                    for p, n in enumerate(r.names)}
         return finalize
-    in_rows = (np.vstack(
-        [_pack_port_words(inputs[n], len(sched.pack_cells(n)), n_words)
-         for n in in_names])
-        if in_names else np.zeros((0, n_words), np.uint32))
-    if use_static and backend == "ref":
-        run = comp.get_static_chain(program, in_names, False,
-                                    in_widths, out_widths)
+    if in_names:
+        in_rows = np.concatenate(
+            [_pack_port_words(inputs[n], len(r.sched.pack_cells(n)),
+                              n_words, layout) for n in in_names], axis=-2)
+    else:
+        in_rows = np.zeros(layout.state_shape(0, n_words), np.uint32)
+    if r.use_static and not is_pallas:
+        run = comp.get_static_chain(program, plan, in_names, False,
+                                    r.in_widths, r.out_widths)
         sub = run(jnp.asarray(in_rows))
     else:
         # (slots-static + pallas has no wide-port static kernel; the scan
         # slot executor is the closest hardware shape)
-        if schedule != "dense":
-            exec_fn = (pim_exec_ref_slots_io if backend == "ref"
-                       else pim_exec_slots_io)
-            static = dict(n_cells=sched.n_cells, one_cell=one_cell,
-                          k_out=k_out, in_base=in_base, out_base=out_base)
+        if r.kind != "dense":
+            exec_fn = (pim_exec_slots_io if is_pallas
+                       else pim_exec_ref_slots_io)
+            static = dict(n_cells=r.sched.n_cells, one_cell=r.one_cell,
+                          k_out=r.k_out, in_base=r.in_base,
+                          out_base=r.out_base)
         else:
-            exec_fn = (pim_exec_ref_level_io if backend == "ref"
-                       else pim_exec_level_padded_io)
-            static = dict(n_cells=sched.n_cells, one_cell=one_cell)
+            exec_fn = (pim_exec_level_padded_io if is_pallas
+                       else pim_exec_ref_level_io)
+            static = dict(n_cells=r.sched.n_cells, one_cell=r.one_cell)
         if mesh is None:
-            sub = exec_fn(jnp.asarray(in_rows), in_idx, la, lb, lo,
-                          out_idx, **static)
+            sub = exec_fn(jnp.asarray(in_rows), r.in_idx, r.la, r.lb, r.lo,
+                          r.out_idx, **static)
         else:
-            sub = _sharded_exec(exec_fn, mesh, backend != "pallas",
-                                **static)(
-                jnp.asarray(in_rows), in_idx, la, lb, lo, out_idx)
+            sub = _sharded_exec(exec_fn, mesh, not is_pallas,
+                                in_rows.ndim, **static)(
+                jnp.asarray(in_rows), r.in_idx, r.la, r.lb, r.lo, r.out_idx)
 
     def finalize() -> Dict[str, np.ndarray]:
         return _unpack_sub(np.asarray(sub),
-                           [(n, len(sched.ports[n])) for n in names], n_rows)
+                           [(n, len(r.sched.ports[n])) for n in r.names],
+                           n_rows)
     return finalize
 
 
 def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
-                backend: str = "pallas", levelized: bool = True,
-                mesh: Optional[Mesh] = None,
-                schedule: str = DEFAULT_SCHEDULE) -> Dict[str, np.ndarray]:
+                plan=None, levelized: bool = True, *,
+                backend=None, mesh=None, schedule=None, layout=None
+                ) -> Dict[str, np.ndarray]:
     """Element-parallel execution of a gate program over ``n_rows`` rows.
 
-    backend: 'pallas' (interpret-mode kernel), 'ref' (jnp oracle) or
-    'numpy' (the cycle-accurate simulator's packed executor, abstract IR).
-    'pallas' and 'ref' consume the levelized schedule by default;
-    ``levelized=False`` selects the original gate-serial executors.
-    ``mesh`` (see :func:`row_mesh`) shards the packed word axis over
-    devices; it requires a levelized jax backend.
-    ``schedule`` picks the schedule compilation mode: 'slots' (contiguous
-    bands + scan executors, the default), 'slots-static' (straight-line
-    static-slice executors; single-device -- under ``mesh`` it degrades to
-    the scan form), or 'dense' (the index-matrix executors).
+    ``plan`` is an :class:`ExecPlan` -- or, for convenience, a backend
+    name ('pallas' interpret-mode kernels, 'ref' jnp oracle, 'numpy' the
+    cycle-accurate simulator's packed executor); the keyword strings
+    (``backend=``/``schedule=``/``layout=``/``mesh=``) build a plan at
+    this boundary.  'pallas' and 'ref' consume the levelized schedule by
+    default; ``levelized=False`` selects the original gate-serial
+    executors (rows32 only).  The plan's mesh (see :func:`row_mesh`)
+    shards the packed word axis over devices; its layout picks the packed
+    word form ('rows32' uint32 words, 'rows64' the paired 64-row layout).
 
     Returns the program's output ports -- all ports when the program does
     not declare port directions (the :func:`output_names` contract, which
     every backend path shares).
     """
-    if mesh is not None and (backend == "numpy" or not levelized):
+    plan = as_plan(plan, backend=backend, mesh=mesh, schedule=schedule,
+                   layout=layout, default_backend="pallas")
+    if not levelized and (plan.mesh is not None or plan.layout.planes > 1):
         raise ValueError(
             "mesh sharding requires a levelized jax backend "
-            f"(got backend={backend!r}, levelized={levelized})")
-    if backend == "numpy":
+            f"(got backend={plan.backend.name!r}, levelized={levelized})"
+            if plan.mesh is not None else
+            f"layout {plan.layout.name!r} requires the levelized executors")
+    if plan.backend.name == "numpy":
+        if plan.mesh is not None:       # unreachable (plan validates) --
+            raise ValueError("mesh sharding requires a jax backend")
         state = pack_rows(inputs, program.ports, n_rows, program.n_cells,
                           pad_to=1)
         st = np.ascontiguousarray(state.T)
         program.exec_packed(st)
         return unpack_rows(st.T, program.ports, n_rows,
                            names=output_names(program))
-    if backend not in ("pallas", "ref"):
-        raise ValueError(backend)
     if levelized:
-        return _dispatch_levelized(program, inputs, n_rows, backend, mesh,
-                                   schedule=schedule)()
-    comp = compiled(program)
+        return _dispatch_levelized(program, inputs, n_rows, plan)()
+    comp = compiled(program, plan)
     ops, a, b, o, n_cells = comp.get_arrays(program)
-    pad_to = TILE_W if backend == "pallas" else 1
-    state = pack_rows(inputs, program.ports, n_rows, n_cells, pad_to=pad_to)
-    if backend == "ref":
+    state = pack_rows(inputs, program.ports, n_rows, n_cells,
+                      pad_to=plan.backend.pad_to)
+    if plan.backend.name == "ref":
         final = np.asarray(pim_exec_ref(
             jnp.asarray(state), jnp.asarray(ops), jnp.asarray(a),
             jnp.asarray(b), jnp.asarray(o)))
@@ -696,30 +794,31 @@ def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
 
 
 def run_program_streaming(program, inputs: Dict[str, np.ndarray],
-                          n_rows: int, backend: str = "ref",
-                          chunk_rows: int = DEFAULT_CHUNK_ROWS,
-                          mesh: Optional[Mesh] = None,
-                          schedule: str = DEFAULT_SCHEDULE
+                          n_rows: int, plan=None, *,
+                          backend=None, chunk_rows=None, mesh=None,
+                          schedule=None, layout=None
                           ) -> Dict[str, np.ndarray]:
     """Chunked, pipelined, optionally sharded execution over ``n_rows``.
 
-    Rows are tiled into word-aligned chunks of ``chunk_rows``; the loop
-    dispatches chunk ``k`` to the device, packs chunk ``k+1`` on the host
-    while ``k`` executes (JAX async dispatch), then blocks on ``k``'s
+    Rows are tiled into word-aligned chunks of the plan's chunk size; the
+    loop dispatches chunk ``k`` to the device, packs chunk ``k+1`` on the
+    host while ``k`` executes (JAX async dispatch), then blocks on ``k``'s
     result -- so host bridging and device execution overlap instead of one
     monolithic pack -> exec -> unpack.  Every chunk (including the ragged
     last one) is padded to the same shape, so the executor compiles once.
 
-    Levelized jax backends only ('ref'/'pallas'); ``mesh`` additionally
-    shards each chunk's word axis over devices (:func:`row_mesh`).
+    Levelized jax backends only ('ref'/'pallas'); the plan's mesh
+    additionally shards each chunk's word axis over devices
+    (:func:`row_mesh`).
     """
-    if backend not in ("pallas", "ref"):
-        raise ValueError(
-            f"streaming requires a levelized jax backend, got {backend!r}")
-    chunk_rows = max(32, (int(chunk_rows) + 31) // 32 * 32)  # word-aligned
-    if n_rows <= chunk_rows:
-        return run_program(program, inputs, n_rows, backend, mesh=mesh,
-                           schedule=schedule)
+    plan = as_plan(plan, backend=backend, chunk_rows=chunk_rows, mesh=mesh,
+                   schedule=schedule, layout=layout)
+    if not plan.backend.is_jax:
+        raise ValueError("streaming requires a levelized jax backend, "
+                         f"got {plan.backend.name!r}")
+    chunk = plan.effective_chunk_rows
+    if n_rows <= chunk:
+        return run_program(program, inputs, n_rows, plan)
     inputs = {n: np.asarray(v) for n, v in inputs.items()}
     for n, v in inputs.items():
         if len(v) != n_rows:
@@ -727,11 +826,11 @@ def run_program_streaming(program, inputs: Dict[str, np.ndarray],
                 f"input {n!r} has {len(v)} rows, expected {n_rows}")
     parts = []
     pending = None
-    for start in range(0, n_rows, chunk_rows):
-        rows_k = min(chunk_rows, n_rows - start)
-        chunk = {n: v[start:start + rows_k] for n, v in inputs.items()}
-        fin = _dispatch_levelized(program, chunk, rows_k, backend, mesh,
-                                  pad_rows=chunk_rows, schedule=schedule)
+    for start in range(0, n_rows, chunk):
+        rows_k = min(chunk, n_rows - start)
+        chunk_in = {n: v[start:start + rows_k] for n, v in inputs.items()}
+        fin = _dispatch_levelized(program, chunk_in, rows_k, plan,
+                                  pad_rows=chunk)
         if pending is not None:
             parts.append(pending())     # blocks on k-1 while k executes
         pending = fin
@@ -741,19 +840,20 @@ def run_program_streaming(program, inputs: Dict[str, np.ndarray],
 
 
 def dispatch_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
-                     backend: str = "ref", mesh: Optional[Mesh] = None,
-                     pad_rows: Optional[int] = None,
-                     schedule: str = DEFAULT_SCHEDULE) -> Callable:
+                     plan=None, *, backend=None, mesh=None, schedule=None,
+                     layout=None, pad_rows: Optional[int] = None) -> Callable:
     """Asynchronously dispatch one levelized execution; returns a zero-arg
     ``finalize`` that blocks on the device result and unpacks the output
     ports.  The pipelining primitive behind :func:`run_program_streaming`
     and :func:`run_program_groups`: callers overlap host packing of the
     next unit of work with device execution of this one."""
-    if backend not in ("pallas", "ref"):
-        raise ValueError(
-            f"dispatch requires a levelized jax backend, got {backend!r}")
-    return _dispatch_levelized(program, inputs, n_rows, backend, mesh,
-                               pad_rows=pad_rows, schedule=schedule)
+    plan = as_plan(plan, backend=backend, mesh=mesh, schedule=schedule,
+                   layout=layout)
+    if not plan.backend.is_jax:
+        raise ValueError("dispatch requires a levelized jax backend, "
+                         f"got {plan.backend.name!r}")
+    return _dispatch_levelized(program, inputs, n_rows, plan,
+                               pad_rows=pad_rows)
 
 
 def run_program_groups(groups: Iterable[dict]) -> list:
@@ -761,14 +861,15 @@ def run_program_groups(groups: Iterable[dict]) -> list:
     cross-group pipelining; returns their output dicts in input order.
 
     Each group is a dict: ``program``, ``inputs`` (port name -> row
-    values), ``n_rows``, plus optional ``backend`` ('ref'), ``chunk_rows``,
-    ``mesh`` and ``schedule``.  The loop dispatches group ``k`` (JAX async)
-    and packs group ``k+1`` on the host while ``k`` executes -- the
+    values), ``n_rows``, plus a ``plan`` (:class:`ExecPlan`; the legacy
+    ``backend``/``schedule``/``chunk_rows``/``mesh`` keys still normalize
+    into one here, at the boundary).  The loop dispatches group ``k`` (JAX
+    async) and packs group ``k+1`` on the host while ``k`` executes -- the
     streaming pipeline generalized across *heterogeneous* programs, which
     is what lets the batched serving runtime keep the device busy across a
-    mixed-traffic plan.  Groups larger than ``chunk_rows`` tile into
-    word-aligned fixed-shape chunks inside the same pipeline (so one giant
-    group cannot stall its successors' packing).  A ``numpy``-backend
+    mixed-traffic plan.  Groups larger than the plan's chunk size tile
+    into word-aligned fixed-shape chunks inside the same pipeline (so one
+    giant group cannot stall its successors' packing).  A numpy-backend
     group is a synchronization point (the oracle is host-synchronous).
     """
     groups = list(groups)
@@ -782,32 +883,31 @@ def run_program_groups(groups: Iterable[dict]) -> list:
 
     for gi, g in enumerate(groups):
         program, n_rows = g["program"], int(g["n_rows"])
-        backend = g.get("backend") or "ref"
-        schedule = g.get("schedule") or DEFAULT_SCHEDULE
-        mesh = g.get("mesh")
+        plan = as_plan(g.get("plan"), backend=g.get("backend"),
+                       schedule=g.get("schedule"), layout=g.get("layout"),
+                       mesh=g.get("mesh"), chunk_rows=g.get("chunk_rows"))
         inputs = {n: np.asarray(v) for n, v in g["inputs"].items()}
         for n, v in inputs.items():
             if len(v) != n_rows:
                 raise ValueError(
                     f"group {gi}: input {n!r} has {len(v)} rows, "
                     f"expected {n_rows}")
-        if backend == "numpy":
+        if plan.backend.name == "numpy":
             drain(0)
-            parts[gi].append(run_program(program, inputs, n_rows, "numpy"))
+            parts[gi].append(run_program(program, inputs, n_rows, plan))
             continue
-        chunk_rows = max(32, (int(g.get("chunk_rows") or DEFAULT_CHUNK_ROWS)
-                              + 31) // 32 * 32)
-        if n_rows <= chunk_rows:
+        chunk = plan.effective_chunk_rows
+        if n_rows <= chunk:
             pending.append((gi, _dispatch_levelized(
-                program, inputs, n_rows, backend, mesh, schedule=schedule)))
+                program, inputs, n_rows, plan)))
             drain(1)
             continue
-        for start in range(0, n_rows, chunk_rows):
-            rows_k = min(chunk_rows, n_rows - start)
-            chunk = {n: v[start:start + rows_k] for n, v in inputs.items()}
+        for start in range(0, n_rows, chunk):
+            rows_k = min(chunk, n_rows - start)
+            chunk_in = {n: v[start:start + rows_k]
+                        for n, v in inputs.items()}
             pending.append((gi, _dispatch_levelized(
-                program, chunk, rows_k, backend, mesh, pad_rows=chunk_rows,
-                schedule=schedule)))
+                program, chunk_in, rows_k, plan, pad_rows=chunk)))
             drain(1)
     drain(0)
     return [ps[0] if len(ps) == 1 else

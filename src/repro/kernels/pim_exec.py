@@ -58,25 +58,36 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .slots import (SLOT_UNROLL, build_init_block, emit_levels,
-                    pack_values, read_concat, static_plan, unpack_values)
+from .plan import TILE_W            # lane-dim words per block (re-export)
+from .slots import (SLOT_UNROLL, at_cells, band_slice, band_update,
+                    build_init_block, emit_levels, pack_values, plane_shape,
+                    read_concat, static_plan, take_cells, unpack_values)
 
-TILE_W = 256          # lane-dim words per block (multiple of 128)
 _FULL = 0xFFFFFFFF
 
 
 def _check_state_shape(where: str, state, n_cells: int) -> None:
     """Trace-time shape validation.  Explicit raises, not ``assert``: these
     guard grid construction and block specs, and must survive ``python -O``
-    (asserts are stripped there, turning shape bugs into silent garbage)."""
-    if state.ndim != 2 or state.shape[0] != n_cells:
+    (asserts are stripped there, turning shape bugs into silent garbage).
+    State is (n_cells, n_words) under rows32 or (planes, n_cells, n_words)
+    under the paired rows64 layout."""
+    if state.ndim not in (2, 3) or state.shape[-2] != n_cells:
         raise ValueError(
-            f"{where}: state must be (n_cells={n_cells}, n_words), "
-            f"got shape {tuple(state.shape)}")
-    if state.shape[1] % TILE_W != 0:
+            f"{where}: state must be ([planes,] n_cells={n_cells}, "
+            f"n_words), got shape {tuple(state.shape)}")
+    if state.shape[-1] % TILE_W != 0:
         raise ValueError(
-            f"{where}: n_words={state.shape[1]} must be a multiple of "
+            f"{where}: n_words={state.shape[-1]} must be a multiple of "
             f"TILE_W={TILE_W}")
+
+
+def _state_block(state, n_cells: int):
+    """(BlockSpec shape, index_map) tiling the trailing word axis of a 2-D
+    or planes-leading 3-D state."""
+    if state.ndim == 2:
+        return (n_cells, TILE_W), lambda i, *_: (0, i)
+    return (state.shape[0], n_cells, TILE_W), lambda i, *_: (0, 0, i)
 
 
 def _pim_kernel(ops_ref, a_ref, b_ref, o_ref, state_ref, out_ref):
@@ -123,7 +134,8 @@ def pim_exec_padded(state, ops, a, b, o, *, n_cells, interpret=True):
 def _pim_level_gather_kernel(la_ref, lb_ref, lo_ref, state_ref, out_ref):
     """Legacy levelized kernel for dense ("scan"-alloc) schedules: vector
     gathers and scatters per level, which Mosaic does not lower -- retained
-    for ``schedule="dense"`` compatibility, interpret mode only."""
+    for ``schedule="dense"`` compatibility, interpret mode only.  Any
+    leading plane axis (rows64) batches through the gather/scatter."""
     n_levels = la_ref.shape[0]
     st0 = state_ref[...]
     if n_levels == 0:           # gate-free (passthrough) program
@@ -131,10 +143,10 @@ def _pim_level_gather_kernel(la_ref, lb_ref, lo_ref, state_ref, out_ref):
         return
 
     def body(l, st):
-        av = jnp.take(st, la_ref[l], axis=0)      # (width, TILE_W)
-        bv = jnp.take(st, lb_ref[l], axis=0)
-        return st.at[lo_ref[l]].set(~(av | bv), mode="promise_in_bounds",
-                                    unique_indices=True)
+        av = take_cells(st, la_ref[l])            # (..., width, TILE_W)
+        bv = take_cells(st, lb_ref[l])
+        return at_cells(st, lo_ref[l]).set(
+            ~(av | bv), mode="promise_in_bounds", unique_indices=True)
 
     out_ref[...] = jax.lax.fori_loop(0, n_levels, body, st0)
 
@@ -144,45 +156,49 @@ def _pim_level_gather_kernel(la_ref, lb_ref, lo_ref, state_ref, out_ref):
 def pim_exec_level_padded(state, la, lb, lo, out_idx=None, *, n_cells,
                           interpret=True):
     """Run a levelized NOR schedule over ``state`` (uint32[n_cells,
-    n_words]), n_words a multiple of TILE_W.  ``la``/``lb``/``lo`` are the
-    LevelSchedule's dense int32[n_levels, width] index matrices (padding
-    lanes write distinct sink cells, keeping scatter indices unique).
-    Returns the final state, or only the rows in ``out_idx`` (the port
-    cells) when given.  ``state`` is donated: the caller's buffer is
-    consumed (the padded paths materialize it purely as kernel input, so
-    the donation kills the defensive copy)."""
-    n_words = state.shape[1]
+    n_words] or the planes-leading rows64 form), n_words a multiple of
+    TILE_W.  ``la``/``lb``/``lo`` are the LevelSchedule's dense
+    int32[n_levels, width] index matrices (padding lanes write distinct
+    sink cells, keeping scatter indices unique).  Returns the final state,
+    or only the rows in ``out_idx`` (the port cells) when given.
+    ``state`` is donated: the caller's buffer is consumed (the padded
+    paths materialize it purely as kernel input, so the donation kills the
+    defensive copy)."""
+    n_words = state.shape[-1]
     _check_state_shape("pim_exec_level_padded", state, n_cells)
     grid = (n_words // TILE_W,)
+    block, index_map = _state_block(state, n_cells)
     final = pl.pallas_call(
         _pim_level_gather_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
-            in_specs=[pl.BlockSpec((n_cells, TILE_W), lambda i, *_: (0, i))],
-            out_specs=pl.BlockSpec((n_cells, TILE_W), lambda i, *_: (0, i)),
+            in_specs=[pl.BlockSpec(block, index_map)],
+            out_specs=pl.BlockSpec(block, index_map),
         ),
         out_shape=jax.ShapeDtypeStruct(state.shape, jnp.uint32),
         interpret=interpret,
     )(la, lb, lo, state)
-    return final if out_idx is None else final[out_idx]
+    return final if out_idx is None else take_cells(final, out_idx)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "n_cells", "one_cell", "in_widths", "out_widths", "interpret"))
+    "n_cells", "one_cell", "in_widths", "out_widths", "interpret",
+    "planes"))
 def pim_exec_level_fused(in_vals, in_idx, la, lb, lo, out_idx, *,
                          n_cells, one_cell, in_widths, out_widths,
-                         interpret=True):
+                         interpret=True, planes=1):
     """Fully fused levelized Pallas executor (ports of <= 32 cells): the
     row-major <-> column-major bit transposes run on device around the
-    kernel, so only (n_ports, n_rows) uint32 values cross the boundary."""
+    kernel, so only (n_ports, n_rows) uint32 values cross the boundary.
+    ``planes`` selects the word layout (kernels.plan)."""
     from .ref import assemble_state, pack_columns, unpack_columns
-    st = assemble_state(pack_columns(in_vals, in_widths), in_idx,
-                        in_vals.shape[1] // 32,
+    st = assemble_state(pack_columns(in_vals, in_widths, planes), in_idx,
+                        in_vals.shape[1] // (32 * planes),
                         n_cells=n_cells, one_cell=one_cell)
     final = pim_exec_level_padded(st, la, lb, lo, n_cells=n_cells,
                                   interpret=interpret)
-    return unpack_columns(final[out_idx], out_widths)
+    return unpack_columns(take_cells(final, out_idx), out_widths, planes)
 
 
 @functools.partial(jax.jit,
@@ -190,15 +206,15 @@ def pim_exec_level_fused(in_vals, in_idx, la, lb, lo, out_idx, *,
 def pim_exec_level_padded_io(in_rows, in_idx, la, lb, lo, out_idx, *,
                              n_cells, one_cell=None, interpret=True):
     """Levelized Pallas executor with on-device state assembly: ships in
-    only the input port rows (uint32[k_in, n_words]), materializes the zero
-    state and the folded INIT1 constant device-side, and returns only the
-    output port rows."""
+    only the input port rows (uint32[k_in, n_words], planes-leading under
+    rows64), materializes the zero state and the folded INIT1 constant
+    device-side, and returns only the output port rows."""
     from .ref import assemble_state
-    st = assemble_state(in_rows, in_idx, in_rows.shape[1],
+    st = assemble_state(in_rows, in_idx, in_rows.shape[-1],
                         n_cells=n_cells, one_cell=one_cell)
     final = pim_exec_level_padded(st, la, lb, lo, n_cells=n_cells,
                                   interpret=interpret)
-    return final[out_idx]
+    return take_cells(final, out_idx)
 
 
 # --------------------------------------------------------------------------
@@ -207,20 +223,22 @@ def pim_exec_level_padded_io(in_rows, in_idx, la, lb, lo, out_idx, *,
 
 def _slot_scan_kernel(la_ref, lb_ref, lo_ref, in_ref, out_ref, *,
                       n_cells, one_cell, k_in, in_base, out_base, k_out,
-                      unroll, has_levels=True):
+                      unroll, has_levels=True, planes=1):
     """Scan-form slot kernel: state assembly, the level loop and the output
     band extraction all happen on kernel-resident values.  Writes are
     contiguous band slice updates (no scatter); the operand read remains a
     vector gather, so this kernel is the interpret-mode fast path while
     :func:`_pim_level_kernel` is the hardware-legal form.  ``has_levels``
     is False for gate-free (passthrough) programs, whose index operands are
-    dummy 1x1 blocks (gridless pallas rejects 0-sized blocks)."""
-    n_words = in_ref.shape[1]
-    st = jnp.zeros((n_cells, n_words), jnp.uint32)
+    dummy 1x1 blocks (gridless pallas rejects 0-sized blocks).  ``planes``
+    is the word layout: the rows64 state keeps its leading pair axis as a
+    batch dim through every op."""
+    n_words = in_ref.shape[-1]
+    st = jnp.zeros(plane_shape(planes, n_cells, n_words), jnp.uint32)
     if k_in:                    # inputs are the leading contiguous run
-        st = lax.dynamic_update_slice(st, in_ref[...][:k_in], (in_base, 0))
+        st = band_update(st, in_ref[...][..., :k_in, :], in_base)
     if one_cell is not None:
-        st = st.at[one_cell].set(jnp.uint32(_FULL))
+        st = at_cells(st, one_cell).set(jnp.uint32(_FULL))
     if has_levels:
         W = la_ref.shape[1]
         lab = jnp.concatenate([la_ref[...], lb_ref[...]], axis=1)
@@ -228,13 +246,11 @@ def _slot_scan_kernel(la_ref, lb_ref, lo_ref, in_ref, out_ref, *,
 
         def body(s, idx):
             ab, o = idx
-            g = s[ab]
-            return lax.dynamic_update_slice(s, ~(g[:W] | g[W:]),
-                                            (o, 0)), None
+            g = take_cells(s, ab)
+            return band_update(s, ~(g[..., :W, :] | g[..., W:, :]), o), None
 
         st, _ = lax.scan(body, st, (lab, off), unroll=unroll)
-    out_ref[...] = lax.dynamic_slice(st, (out_base, 0),
-                                     (out_ref.shape[0], n_words))
+    out_ref[...] = band_slice(st, out_base, out_ref.shape[-2])
 
 
 def _nonempty_levels(la, lb, lo):
@@ -247,7 +263,7 @@ def _nonempty_levels(la, lb, lo):
 
 
 def _slots_call(kernel, k_out, n_words, interpret, la, lb, lo,
-                in_rows):
+                in_rows, planes=1):
     """Single whole-array ``pallas_call`` for the scan-form slot kernel.
 
     Gridless on purpose: the kernel is interpret-only (its operand read is
@@ -258,35 +274,36 @@ def _slots_call(kernel, k_out, n_words, interpret, la, lb, lo,
     (:func:`make_slots_static`), which is the Mosaic-lowerable form."""
     return pl.pallas_call(
         kernel,
-        out_shape=jax.ShapeDtypeStruct((max(k_out, 1), n_words), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct(
+            plane_shape(planes, max(k_out, 1), n_words), jnp.uint32),
         interpret=interpret,
     )(la, lb, lo, in_rows)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "n_cells", "one_cell", "in_widths", "out_widths", "in_base", "out_base",
-    "unroll", "interpret"))
+    "unroll", "interpret", "planes"))
 def pim_exec_slots_fused(in_vals, in_idx, la, lb, lo, out_idx, *,
                          n_cells, one_cell, in_widths, out_widths,
                          in_base, out_base, unroll=SLOT_UNROLL,
-                         interpret=True):
+                         interpret=True, planes=1):
     """Fused slot executor, Pallas backend: butterfly bit transposes wrap a
     single scan-form kernel; only (n_ports, n_rows) uint32 values cross the
     host/device boundary.  Requires the slot layout's contiguous input and
     output runs (``in_base``/``out_base``)."""
-    n_words = in_vals.shape[1] // 32
-    packed = pack_values(in_vals, in_widths)
-    k_in, k_out = packed.shape[0], sum(out_widths)
+    n_words = in_vals.shape[1] // (32 * planes)
+    packed = pack_values(in_vals, in_widths, planes)
+    k_in, k_out = packed.shape[-2], sum(out_widths)
     if not k_in:        # constant-generator program: dummy zero block
-        packed = jnp.zeros((1, n_words), jnp.uint32)
+        packed = jnp.zeros(plane_shape(planes, 1, n_words), jnp.uint32)
     la, lb, lo, has_levels = _nonempty_levels(la, lb, lo)
     kern = functools.partial(
         _slot_scan_kernel, n_cells=n_cells, one_cell=one_cell,
         k_in=k_in, in_base=in_base if k_in else 0, out_base=out_base,
-        k_out=k_out, unroll=unroll, has_levels=has_levels)
+        k_out=k_out, unroll=unroll, has_levels=has_levels, planes=planes)
     sub = _slots_call(kern, k_out, n_words, interpret, la, lb, lo,
-                      packed)
-    return unpack_values(sub[:k_out], out_widths)
+                      packed, planes)
+    return unpack_values(sub[..., :k_out, :], out_widths, planes)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -296,19 +313,20 @@ def pim_exec_slots_io(in_rows, in_idx, la, lb, lo, out_idx, *,
                       n_cells, one_cell, k_out, in_base, out_base,
                       unroll=SLOT_UNROLL, interpret=True):
     """Slot executor over pre-packed port rows, Pallas backend (arbitrary
-    port widths)."""
-    n_words = in_rows.shape[1]
-    k_in = in_rows.shape[0]
+    port widths; the word layout is inferred from the input rank)."""
+    planes = 1 if in_rows.ndim == 2 else in_rows.shape[0]
+    n_words = in_rows.shape[-1]
+    k_in = in_rows.shape[-2]
     if not k_in:
-        in_rows = jnp.zeros((1, n_words), jnp.uint32)
+        in_rows = jnp.zeros(plane_shape(planes, 1, n_words), jnp.uint32)
     la, lb, lo, has_levels = _nonempty_levels(la, lb, lo)
     kern = functools.partial(
         _slot_scan_kernel, n_cells=n_cells, one_cell=one_cell,
         k_in=k_in, in_base=in_base if k_in else 0, out_base=out_base,
-        k_out=k_out, unroll=unroll, has_levels=has_levels)
+        k_out=k_out, unroll=unroll, has_levels=has_levels, planes=planes)
     sub = _slots_call(kern, k_out, n_words, interpret, la, lb, lo,
-                      in_rows)
-    return sub[:k_out]
+                      in_rows, planes)
+    return sub[..., :k_out, :]
 
 
 def _pim_level_kernel(sched, in_widths, out_names):
@@ -325,21 +343,22 @@ def _pim_level_kernel(sched, in_widths, out_names):
     stacked_out = [s for name in out_names for s in out_srcs[name]]
 
     def kernel(in_ref, out_ref):
-        packed = in_ref[...][:sum(in_widths)]
+        packed = in_ref[...][..., :sum(in_widths), :]
         init_block = build_init_block(packed, n_init, one_cell)
         bands = emit_levels(reads, 0, sched.n_levels, init_block, {})
         sub = read_concat(init_block, bands, stacked_out)
-        if sub.shape[0] < out_ref.shape[0]:     # k_out == 0 pad block
-            pad = jnp.zeros((out_ref.shape[0] - sub.shape[0],
-                             out_ref.shape[1]), jnp.uint32)
-            sub = jnp.concatenate([sub, pad])
+        if sub.shape[-2] < out_ref.shape[-2]:   # k_out == 0 pad block
+            pad_shape = sub.shape[:-2] + (
+                out_ref.shape[-2] - sub.shape[-2], out_ref.shape[-1])
+            sub = jnp.concatenate([sub, jnp.zeros(pad_shape, jnp.uint32)],
+                                  axis=-2)
         out_ref[...] = sub
 
     return kernel
 
 
 def make_slots_static(sched, in_widths, out_widths, out_names,
-                      interpret=True):
+                      interpret=True, planes=1):
     """Hardware-legal levelized Pallas executor factory: returns a jitted
     ``run(in_vals) -> out_vals`` wrapping one ``pallas_call`` whose body is
     the fully static-slice form of ``sched`` (see
@@ -348,28 +367,33 @@ def make_slots_static(sched, in_widths, out_widths, out_names,
     entry exists for hardware lowering and bit-exactness testing, and is
     benchmarked as its own row.  Callers cache the returned function (the
     kernel closure embeds the whole unrolled program; rebuilding it per
-    call would retrace)."""
+    call would retrace).  ``planes`` is the word layout: under rows64 the
+    blocks grow the leading pair axis (still zero dynamic indexing)."""
     kernel = _pim_level_kernel(sched, in_widths, out_names)
     k_out = sum(out_widths)
 
+    def block(k):
+        index_map = (lambda i: (0, i)) if planes == 1 else \
+            (lambda i: (0, 0, i))
+        return pl.BlockSpec(plane_shape(planes, max(k, 1), TILE_W),
+                            index_map)
+
     @jax.jit
     def run(in_vals):
-        n_words = in_vals.shape[1] // 32
-        packed = pack_values(in_vals, in_widths)
-        k_in = packed.shape[0]
+        n_words = in_vals.shape[1] // (32 * planes)
+        packed = pack_values(in_vals, in_widths, planes)
+        k_in = packed.shape[-2]
         if not k_in:
-            packed = jnp.zeros((1, n_words), jnp.uint32)
+            packed = jnp.zeros(plane_shape(planes, 1, n_words), jnp.uint32)
         sub = pl.pallas_call(
             kernel,
             grid=(n_words // TILE_W,),
-            in_specs=[pl.BlockSpec((max(k_in, 1), TILE_W),
-                                   lambda i: (0, i))],
-            out_specs=pl.BlockSpec((max(k_out, 1), TILE_W),
-                                   lambda i: (0, i)),
-            out_shape=jax.ShapeDtypeStruct((max(k_out, 1), n_words),
-                                           jnp.uint32),
+            in_specs=[block(k_in)],
+            out_specs=block(k_out),
+            out_shape=jax.ShapeDtypeStruct(
+                plane_shape(planes, max(k_out, 1), n_words), jnp.uint32),
             interpret=interpret,
         )(packed)
-        return unpack_values(sub[:k_out], out_widths)
+        return unpack_values(sub[..., :k_out, :], out_widths, planes)
 
     return run

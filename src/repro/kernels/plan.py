@@ -1,0 +1,286 @@
+"""The compile->execute pipeline's configuration IR (DESIGN.md §11).
+
+Execution used to be configured by loose ``backend=``/``schedule=`` strings
+threaded ad hoc through five modules, with the packed row axis hard-coded
+as uint32 words.  This module makes those choices first-class compile-time
+objects:
+
+* :class:`WordLayout` -- how rows pack into the trailing word axis of the
+  executor state.  ``rows32`` is the classic layout (32 rows per uint32
+  word, state ``uint32[n_cells, n_words]``).  ``rows64`` packs 64 rows per
+  *word pair*: the state grows a leading plane axis of 2
+  (``uint32[2, n_cells, n_words]``) whose planes hold rows ``64i..64i+31``
+  and ``64i+32..64i+63`` of logical word ``i`` -- the little-endian halves
+  of a uint64 word.  The trailing word axis *halves* for every executor
+  while the schedule's index operands stay untouched (gates vectorize over
+  the plane axis like a batch dim), which is the uint64 packing the ROADMAP
+  wanted without ever enabling ``jax_enable_x64``.
+* :class:`Backend` -- the executor family plus its tunables.  Per-backend
+  knobs that used to be module globals (``SLOT_WIDTH``, ``SLOT_SEG_LEVELS``,
+  chunk rows, tile padding) live on the descriptor, so hardware retuning is
+  a new ``Backend`` value, not an edit to five call sites.
+* :class:`ExecPlan` -- one immutable object capturing everything about *how*
+  a program executes: schedule kind, backend, word layout, device mesh and
+  streaming chunk size.  Every executor entry point consumes a plan;
+  ``plan.key`` is the serving planner's group key (requests differing in
+  any execution dimension never coalesce) and ``plan.compile_key`` is the
+  compiled-program cache's per-plan identity (the LRU and the pin
+  refcounts key on it).
+
+:func:`as_plan` is the boundary normalizer: public entry points still
+accept the convenience strings and convert them to a plan exactly once, so
+no loose string ever travels further than its entry point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# Lane-dim words per Pallas block (multiple of 128).  Defined here (the
+# config layer) so plan validation and padding logic need no kernel import;
+# ``kernels.pim_exec`` re-exports it for compatibility.
+TILE_W = 256
+
+# Schedule compilation modes for the levelized jax backends:
+#   'slots'        -- contiguous-slot schedule + scan executors (DESIGN.md
+#                     §9): band slice writes instead of scatters.  The fast
+#                     path on CPU and the default.
+#   'slots-static' -- slot schedule + straight-line static-slice executors
+#                     (segmented schedule-to-jaxpr chain on 'ref', the
+#                     Mosaic-lowerable unrolled kernel on 'pallas').
+#   'dense'        -- the dense index-matrix executors
+#                     (gather -> NOR -> scatter per level).
+DEFAULT_SCHEDULE = "slots"
+SCHEDULES = ("slots", "slots-static", "dense")
+
+
+@dataclasses.dataclass(frozen=True)
+class WordLayout:
+    """How per-row bits pack into the executor's word state.
+
+    ``planes`` is the leading batch axis of the state: 1 keeps the classic
+    2-D ``uint32[n_cells, n_words]`` state, 2 is the paired-uint32 layout
+    ``uint32[2, n_cells, n_words]`` where word ``i``'s planes are the low
+    and high uint32 halves of one 64-row word.  ``rows_per_word`` rows map
+    onto each trailing-axis position, so chunking, padding and sharding all
+    align at that granularity.
+    """
+    name: str
+    planes: int
+
+    @property
+    def rows_per_word(self) -> int:
+        return 32 * self.planes
+
+    def n_words(self, n_rows: int, pad_to: int = 1) -> int:
+        """Trailing word-axis length covering ``n_rows``, padded up to a
+        multiple of ``pad_to`` (and at least ``pad_to``)."""
+        rpw = self.rows_per_word
+        words = (n_rows + rpw - 1) // rpw
+        return max((words + pad_to - 1) // pad_to * pad_to, pad_to)
+
+    def state_shape(self, n_cells: int, n_words: int) -> tuple:
+        """Executor state shape: 2-D for one plane, planes-leading 3-D."""
+        if self.planes == 1:
+            return (n_cells, n_words)
+        return (self.planes, n_cells, n_words)
+
+    def __str__(self) -> str:
+        return self.name
+
+
+ROWS32 = WordLayout("rows32", 1)
+ROWS64 = WordLayout("rows64", 2)
+LAYOUTS = {"rows32": ROWS32, "rows64": ROWS64}
+DEFAULT_LAYOUT = ROWS32
+
+
+# Canonical tunable defaults.  These seed the Backend descriptors below
+# (the live values every plan reads) and the executor modules' own
+# function defaults (kernels.slots imports SLOT_SEG_LEVELS from here), so
+# a retune edits exactly one number.
+#
+# SLOT_WIDTH: W of the contiguous-slot allocator -- narrower slots mean
+# more scan iterations but smaller carried state; W=6 won the XLA:CPU
+# sweep (BENCH_3).  SLOT_SEG_LEVELS: level-chunk size of the straight-line
+# static compiler (bounds per-segment jaxpr size).  LEVEL_MAX_WIDTH:
+# dense-schedule width cap (levels wider than this split into several
+# rows -- the PR-1 sweet spot).  DEFAULT_CHUNK_ROWS: streaming chunk
+# (rows) -- big enough to amortize per-chunk dispatch, small enough that
+# two in-flight chunks stay cache-friendly.
+SLOT_WIDTH = 6
+SLOT_SEG_LEVELS = 128
+LEVEL_MAX_WIDTH = 8
+DEFAULT_CHUNK_ROWS = 1 << 18
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Executor family descriptor with its per-backend tunables (see the
+    canonical defaults above for what each knob does).  ``pad_to`` is the
+    trailing word-axis alignment the executors require (Pallas tiles at
+    TILE_W; jnp needs none).  Hardware retuning is a new Backend value,
+    not an edit to call sites."""
+    name: str
+    pad_to: int = 1
+    slot_width: int = SLOT_WIDTH
+    seg_levels: int = SLOT_SEG_LEVELS
+    chunk_rows: int = DEFAULT_CHUNK_ROWS
+    level_max_width: int = LEVEL_MAX_WIDTH
+
+    @property
+    def is_jax(self) -> bool:
+        return self.name in ("ref", "pallas")
+
+    def __str__(self) -> str:
+        return self.name
+
+
+BACKENDS = {
+    "ref": Backend("ref"),
+    "pallas": Backend("pallas", pad_to=TILE_W),
+    # the cycle-accurate numpy oracle: levelized schedules/layouts don't
+    # apply; present so one descriptor type covers every entry point
+    "numpy": Backend("numpy"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPlan:
+    """One immutable description of *how* a gate program executes: the
+    schedule compilation mode, the backend descriptor, the packed word
+    layout, the device mesh for row sharding, and the streaming chunk
+    size.  Built once at an entry point (see :func:`as_plan`) and consumed
+    by every layer below -- the dispatcher, the compiled-program cache, the
+    serving planner's group keys and the benchmark harness all read the
+    same object instead of re-deciding from loose strings."""
+    backend: Backend = BACKENDS["ref"]
+    schedule: str = DEFAULT_SCHEDULE
+    layout: WordLayout = ROWS32
+    mesh: Optional[object] = None        # jax.sharding.Mesh or None
+    chunk_rows: Optional[int] = None     # None -> backend.chunk_rows
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {self.schedule!r} "
+                             f"(expected one of {SCHEDULES})")
+        if self.layout.planes > 1 and not self.backend.is_jax:
+            raise ValueError(
+                f"layout {self.layout.name!r} requires a levelized jax "
+                f"backend (got backend={self.backend.name!r})")
+        if self.mesh is not None and not self.backend.is_jax:
+            raise ValueError(
+                "mesh sharding requires a levelized jax backend "
+                f"(got backend={self.backend.name!r})")
+
+    # ------------------------------------------------------------- identity
+
+    @property
+    def effective_chunk_rows(self) -> int:
+        """Streaming chunk size, word-aligned for this layout."""
+        rpw = self.layout.rows_per_word
+        chunk = int(self.chunk_rows if self.chunk_rows is not None
+                    else self.backend.chunk_rows)
+        return max(rpw, (chunk + rpw - 1) // rpw * rpw)
+
+    @property
+    def key(self) -> tuple:
+        """Full execution identity -- the serving planner's group key.
+        Two requests whose plans differ in *any* field (backend incl.
+        every tunable, schedule, layout, chunking, mesh) must never
+        coalesce into one packed state; this tuple is what makes that
+        exact (the whole Backend descriptor is flattened in, so a custom
+        retuned Backend separates too)."""
+        return (dataclasses.astuple(self.backend), self.schedule,
+                self.layout.name, self.effective_chunk_rows,
+                None if self.mesh is None else id(self.mesh))
+
+    @property
+    def compile_key(self) -> tuple:
+        """The plan fields that determine the cache entry's compiled
+        artifact *universe* (levelized schedules, device index buffers,
+        static chains) -- the compiled-program LRU's per-plan key.  Only
+        the allocator/segmentation tunables belong here: backend *name*,
+        word *layout* and *schedule kind* are all excluded on purpose --
+        'ref' and 'pallas' consume identical schedule arrays, the
+        schedule operands are layout-invariant, and one entry lazily
+        holds every schedule kind's artifacts (``_Compiled`` sub-keys by
+        alloc and by ``planes``), so a program served under slots,
+        slots-static and dense shares one entry, one levelize per alloc,
+        and one pin.  Keying on any of those would duplicate entries and
+        device buffers for no artifact change."""
+        return (self.backend.slot_width, self.backend.level_max_width,
+                self.backend.seg_levels)
+
+    # ------------------------------------------------------------- variants
+
+    def with_backend(self, name: str) -> "ExecPlan":
+        """Same plan on a different backend family (tunables reset to the
+        target backend's defaults)."""
+        return dataclasses.replace(self, backend=_backend_of(name))
+
+
+def _backend_of(backend) -> Backend:
+    if isinstance(backend, Backend):
+        return backend
+    try:
+        return BACKENDS[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r} "
+                         f"(expected one of {sorted(BACKENDS)})") from None
+
+
+def _layout_of(layout) -> WordLayout:
+    if isinstance(layout, WordLayout):
+        return layout
+    try:
+        return LAYOUTS[layout]
+    except KeyError:
+        raise ValueError(f"unknown layout {layout!r} "
+                         f"(expected one of {sorted(LAYOUTS)})") from None
+
+
+def as_plan(plan=None, *, backend=None, schedule=None, layout=None,
+            mesh=None, chunk_rows=None,
+            default_backend: str = "ref") -> ExecPlan:
+    """Normalize entry-point arguments into an :class:`ExecPlan`.
+
+    ``plan`` may already be an ExecPlan (returned as-is when no override is
+    given, else rebuilt with the overrides), a backend name string (the
+    historical positional-``backend`` convention), or None.  The keyword
+    strings are the public convenience surface; they are converted here,
+    exactly once, at the boundary -- nothing below an entry point ever
+    sees a loose string again.
+    """
+    if isinstance(plan, ExecPlan):
+        if backend is None and schedule is None and layout is None \
+                and mesh is None and chunk_rows is None:
+            return plan
+        return dataclasses.replace(
+            plan,
+            backend=plan.backend if backend is None else _backend_of(backend),
+            schedule=plan.schedule if schedule is None else schedule,
+            layout=plan.layout if layout is None else _layout_of(layout),
+            mesh=plan.mesh if mesh is None else mesh,
+            chunk_rows=plan.chunk_rows if chunk_rows is None else chunk_rows)
+    if isinstance(plan, str):            # run_program(p, ins, n, "ref")
+        if backend is not None and backend != plan:
+            raise ValueError(
+                f"conflicting backends: positional {plan!r} vs "
+                f"keyword {backend!r}")
+        backend = plan
+    elif plan is not None:
+        raise TypeError(
+            f"plan must be an ExecPlan, a backend name or None, "
+            f"got {type(plan).__name__}")
+    return ExecPlan(
+        backend=_backend_of(default_backend if backend is None else backend),
+        schedule=DEFAULT_SCHEDULE if schedule is None else schedule,
+        layout=_layout_of(DEFAULT_LAYOUT if layout is None else layout),
+        mesh=mesh, chunk_rows=chunk_rows)
+
+
+#: The default plan: ref backend, slot schedule, rows32 layout.  The pin
+#: API and ``is_compiled`` use it when callers don't name a plan.
+DEFAULT_PLAN = ExecPlan()

@@ -54,15 +54,17 @@ def _level_loop(st, la, lb, lo):
     INIT gates were folded into the initial state).  Padding lanes read the
     schedule's first sink cell and write *distinct* sink cells (out == sink
     + lane) -- that per-level output uniqueness is what licenses
-    ``unique_indices=True`` below; real cells are untouched."""
+    ``unique_indices=True`` below; real cells are untouched.  A leading
+    plane axis (the rows64 paired layout) batches through untouched."""
+    from .slots import at_cells, take_cells
     if la.shape[0] == 0:        # gate-free (passthrough) program
         return st
 
     def body(l, s):
-        av = s[la[l]]
-        bv = s[lb[l]]
-        return s.at[lo[l]].set(~(av | bv), mode="promise_in_bounds",
-                               unique_indices=True)
+        av = take_cells(s, la[l])
+        bv = take_cells(s, lb[l])
+        return at_cells(s, lo[l]).set(~(av | bv), mode="promise_in_bounds",
+                                      unique_indices=True)
 
     return jax.lax.fori_loop(0, la.shape[0], body, st)
 
@@ -86,12 +88,17 @@ def pim_exec_ref_level(state, la, lb, lo, out_idx=None):
 def assemble_state(in_rows, in_idx, n_words, *, n_cells, one_cell):
     """Materialize the packed state device-side: zeros, the input port rows
     scattered at ``in_idx``, and the folded INIT1 constant cell.  Shared by
-    every on-device-assembly executor (ref and Pallas, io and fused)."""
-    st = jnp.zeros((n_cells, n_words), jnp.uint32)
-    if in_rows.shape[0]:
-        st = st.at[in_idx].set(in_rows, mode="promise_in_bounds")
+    every on-device-assembly executor (ref and Pallas, io and fused).  The
+    word layout is inferred from ``in_rows``'s rank: 2-D rows32, 3-D
+    planes-leading rows64."""
+    from .slots import at_cells
+    shape = (n_cells, n_words) if in_rows.ndim == 2 else \
+        (in_rows.shape[0], n_cells, n_words)
+    st = jnp.zeros(shape, jnp.uint32)
+    if in_rows.shape[-2]:
+        st = at_cells(st, in_idx).set(in_rows, mode="promise_in_bounds")
     if one_cell is not None:
-        st = st.at[one_cell].set(jnp.uint32(_FULL))
+        st = at_cells(st, one_cell).set(jnp.uint32(_FULL))
     return st
 
 
@@ -99,43 +106,47 @@ def assemble_state(in_rows, in_idx, n_words, *, n_cells, one_cell):
 def pim_exec_ref_level_io(in_rows, in_idx, la, lb, lo, out_idx, *,
                           n_cells, one_cell=None):
     """Levelized executor with on-device state assembly: only the input
-    port rows (uint32[k_in, n_words]) are shipped in, the zero state and the
-    folded INIT1 constant cell are materialized device-side, and only the
-    output port rows come back."""
-    st = assemble_state(in_rows, in_idx, in_rows.shape[1],
+    port rows (uint32[k_in, n_words], or the planes-leading rows64 form)
+    are shipped in, the zero state and the folded INIT1 constant cell are
+    materialized device-side, and only the output port rows come back."""
+    from .slots import take_cells
+    st = assemble_state(in_rows, in_idx, in_rows.shape[-1],
                         n_cells=n_cells, one_cell=one_cell)
-    return _level_loop(st, la, lb, lo)[out_idx]
+    return take_cells(_level_loop(st, la, lb, lo), out_idx)
 
 
-def pack_columns(in_vals, in_widths):
+def pack_columns(in_vals, in_widths, planes=1):
     """In-jit bit transpose, row-major -> column-major: per-row port values
-    (uint32[n_ports, n_words*32]) to stacked port cell rows
-    (uint32[sum(widths), n_words]); ports of <= 32 cells.  Backed by the
-    butterfly 32x32 bit transpose in ``kernels.slots`` (5 masked shift/xor
-    steps per word block), which replaced the (width, n_words, 32) bit
-    expansion -- ~10x less intermediate traffic for 16-bit ports."""
+    (uint32[n_ports, n_words*32*planes]) to stacked port cell rows
+    (uint32[sum(widths), n_words], planes-leading for rows64); ports of
+    <= 32 cells.  Backed by the butterfly 32x32 bit transpose in
+    ``kernels.slots`` (5 masked shift/xor steps per word block), which
+    replaced the (width, n_words, 32) bit expansion -- ~10x less
+    intermediate traffic for 16-bit ports."""
     from .slots import pack_values
-    return pack_values(in_vals, in_widths)
+    return pack_values(in_vals, in_widths, planes)
 
 
-def unpack_columns(sub, out_widths):
-    """In-jit inverse of :func:`pack_columns`: stacked port cell rows
-    (uint32[sum(widths), n_words]) to per-row port values
-    (uint32[n_ports, n_words*32])."""
+def unpack_columns(sub, out_widths, planes=1):
+    """In-jit inverse of :func:`pack_columns`: stacked port cell rows to
+    per-row port values (uint32[n_ports, n_words*32*planes])."""
     from .slots import unpack_values
-    return unpack_values(sub, out_widths)
+    return unpack_values(sub, out_widths, planes)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "n_cells", "one_cell", "in_widths", "out_widths"))
+    "n_cells", "one_cell", "in_widths", "out_widths", "planes"))
 def pim_exec_ref_level_fused(in_vals, in_idx, la, lb, lo, out_idx, *,
-                             n_cells, one_cell, in_widths, out_widths):
+                             n_cells, one_cell, in_widths, out_widths,
+                             planes=1):
     """Fully fused levelized executor for programs whose ports all fit in
     32 cells: bit-transposes the row-major port values on device, assembles
     the state, runs the level loop and transposes the outputs back -- one
-    XLA executable, two (n_ports, n_rows)-sized transfers."""
-    st = assemble_state(pack_columns(in_vals, in_widths), in_idx,
-                        in_vals.shape[1] // 32,
+    XLA executable, two (n_ports, n_rows)-sized transfers.  ``planes``
+    selects the word layout (kernels.plan)."""
+    from .slots import take_cells
+    st = assemble_state(pack_columns(in_vals, in_widths, planes), in_idx,
+                        in_vals.shape[1] // (32 * planes),
                         n_cells=n_cells, one_cell=one_cell)
     final = _level_loop(st, la, lb, lo)
-    return unpack_columns(final[out_idx], out_widths)
+    return unpack_columns(take_cells(final, out_idx), out_widths, planes)

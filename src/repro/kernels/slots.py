@@ -46,17 +46,60 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-_FULL = 0xFFFFFFFF
+# The canonical level-chunk size of the straight-line compiler (bounds
+# per-segment jaxpr size, and therefore XLA compile time) lives on
+# kernels.plan, where the Backend descriptor reads it too; re-exported
+# here as the function default for direct build_static_chain callers.
+from .plan import SLOT_SEG_LEVELS
 
-# Default level-chunk size of the straight-line compiler: bounds per-segment
-# jaxpr size (and therefore XLA compile time, which grows superlinearly) at
-# the cost of one extra dispatch per chunk.
-SLOT_SEG_LEVELS = 128
+_FULL = 0xFFFFFFFF
 
 # Default scan unroll for the slot level loop (bodies per while-loop trip);
 # small unrolls amortize loop overhead without breaking XLA's in-place
 # carry updates.
 SLOT_UNROLL = 2
+
+
+# --------------------------------------------------------------------------
+# layout-polymorphic state access
+# --------------------------------------------------------------------------
+#
+# Executor state is uint32[n_cells, n_words] under the rows32 layout and
+# uint32[planes, n_cells, n_words] under rows64 (kernels.plan.WordLayout):
+# the cell axis is always axis -2, the word axis always trailing, and any
+# leading plane axis is a pure batch dim the gates vectorize over.  These
+# four helpers are the only place executors touch state indexing, which is
+# what lets every executor family run both layouts from one body.
+
+def take_cells(st, idx):
+    """Gather state rows along the cell axis (axis -2)."""
+    return st[idx] if st.ndim == 2 else st[:, idx]
+
+
+def at_cells(st, idx):
+    """``.at`` view addressing the cell axis (for scatter updates)."""
+    return st.at[idx] if st.ndim == 2 else st.at[:, idx]
+
+
+def band_update(st, val, off):
+    """Write a contiguous cell band at (traced) offset ``off``."""
+    starts = (off, 0) if st.ndim == 2 else (0, off, 0)
+    return lax.dynamic_update_slice(st, val, starts)
+
+
+def band_slice(st, off, k):
+    """Read a contiguous cell band of ``k`` rows at (traced) ``off``."""
+    if st.ndim == 2:
+        return lax.dynamic_slice(st, (off, 0), (k, st.shape[1]))
+    return lax.dynamic_slice(st, (0, off, 0),
+                             (st.shape[0], k, st.shape[2]))
+
+
+def plane_shape(planes: int, k: int, n_words: int) -> tuple:
+    """Packed-block shape for ``k`` cell rows under a ``planes``-plane
+    layout: 2-D under rows32, planes-leading 3-D otherwise (the jnp-side
+    twin of ``kernels.plan.WordLayout.state_shape``)."""
+    return (k, n_words) if planes == 1 else (planes, k, n_words)
 
 
 # --------------------------------------------------------------------------
@@ -83,32 +126,45 @@ def transpose32(x):
     return x[..., ::-1]
 
 
-def pack_values(in_vals, widths: Sequence[int]):
+def pack_values(in_vals, widths: Sequence[int], planes: int = 1):
     """Row-major -> column-major bit transpose: per-row port values
-    (uint32[n_ports, n_words*32]) to stacked port cell rows
-    (uint32[sum(widths), n_words]); bit w of row word i is row 32*i+w."""
-    n_words = in_vals.shape[1] // 32
+    (uint32[n_ports, n_words*32*planes]) to stacked port cell rows --
+    (uint32[sum(widths), n_words]) under rows32 (``planes=1``; bit w of
+    row word i is row 32*i+w) or (uint32[planes, sum(widths), n_words])
+    under the paired layout (plane h of word i covers rows
+    ``32*planes*i + 32*h + w``, the little-endian uint64 halves)."""
+    n32 = in_vals.shape[1] // 32          # 32-row groups (uint32 words)
+    n_words = n32 // planes
     rows = []
     for p, wp in enumerate(widths):
-        t = transpose32(in_vals[p].reshape(n_words, 32)).T    # (32, n_words)
-        rows.append(t[:wp])
-    return jnp.concatenate(rows, axis=0) if rows else \
-        jnp.zeros((0, n_words), jnp.uint32)
+        t = transpose32(in_vals[p].reshape(n32, 32)).T        # (32, n32)
+        if planes == 1:
+            rows.append(t[:wp])
+        else:
+            # t[c, planes*i + h] is plane h of logical word i
+            t = jnp.moveaxis(t.reshape(32, n_words, planes), -1, 0)
+            rows.append(t[:, :wp])
+    if rows:
+        return jnp.concatenate(rows, axis=0 if planes == 1 else 1)
+    return jnp.zeros(plane_shape(planes, 0, n_words), jnp.uint32)
 
 
-def unpack_values(sub, widths: Sequence[int]):
-    """Inverse of :func:`pack_values`: stacked port cell rows
-    (uint32[sum(widths), n_words]) to per-row values
-    (uint32[n_ports, n_words*32])."""
-    n_words = sub.shape[1]
+def unpack_values(sub, widths: Sequence[int], planes: int = 1):
+    """Inverse of :func:`pack_values`: stacked port cell rows (2-D rows32
+    or planes-leading 3-D) to per-row values
+    (uint32[n_ports, n_words*32*planes])."""
+    n_words = sub.shape[-1]
     outs = []
     off = 0
     for wp in widths:
-        blk = sub[off:off + wp]
+        blk = sub[..., off:off + wp, :]
         off += wp
         if wp < 32:
+            pad_shape = sub.shape[:-2] + (32 - wp, n_words)
             blk = jnp.concatenate(
-                [blk, jnp.zeros((32 - wp, n_words), jnp.uint32)], axis=0)
+                [blk, jnp.zeros(pad_shape, jnp.uint32)], axis=-2)
+        if planes > 1:                    # (planes, 32, n_words) -> (32, n32)
+            blk = jnp.moveaxis(blk, 0, -1).reshape(32, n_words * planes)
         outs.append(transpose32(blk.T).reshape(-1))
     return jnp.stack(outs)
 
@@ -138,7 +194,9 @@ def _slot_levels(st, la, lb, lo, unroll):
     """Level loop over a slot schedule: per level one vectorized gather of
     both operand sides (stacked into a single (2*width,) index row -- one
     gather op instead of two) and one contiguous band write
-    (``dynamic_update_slice`` at ``lo[l, 0]``) -- scatter-free."""
+    (``dynamic_update_slice`` at ``lo[l, 0]``) -- scatter-free.  Any
+    leading plane axis of ``st`` (the rows64 layout) rides along as a
+    batch dim; the schedule operands are layout-invariant."""
     if la.shape[0] == 0:
         return st
     W = la.shape[1]
@@ -147,50 +205,53 @@ def _slot_levels(st, la, lb, lo, unroll):
 
     def body(s, idx):
         ab, o = idx
-        g = s[ab]
-        return lax.dynamic_update_slice(s, ~(g[:W] | g[W:]), (o, 0)), None
+        g = take_cells(s, ab)
+        return band_update(s, ~(g[..., :W, :] | g[..., W:, :]), o), None
 
     st, _ = lax.scan(body, st, (lab, off), unroll=unroll)
     return st
 
 
-def _assemble_slots(packed, in_idx, n_words, *, n_cells, one_cell, in_base):
+def _assemble_slots(packed, in_idx, n_words, *, n_cells, one_cell, in_base,
+                    planes=1):
     """Zero state + input rows (slice update when the input cells form a
     run, else scatter) + the folded INIT1 constant row."""
-    st = jnp.zeros((n_cells, n_words), jnp.uint32)
-    if packed.shape[0]:
+    st = jnp.zeros(plane_shape(planes, n_cells, n_words), jnp.uint32)
+    if packed.shape[-2]:
         if in_base is not None:
-            st = lax.dynamic_update_slice(st, packed, (in_base, 0))
+            st = band_update(st, packed, in_base)
         else:
-            st = st.at[in_idx].set(packed, mode="promise_in_bounds")
+            st = at_cells(st, in_idx).set(packed, mode="promise_in_bounds")
     if one_cell is not None:
-        st = st.at[one_cell].set(jnp.uint32(_FULL))
+        st = at_cells(st, one_cell).set(jnp.uint32(_FULL))
     return st
 
 
 def _extract(st, out_idx, k_out, out_base):
-    return (lax.dynamic_slice(st, (out_base, 0), (k_out, st.shape[1]))
-            if out_base is not None else st[out_idx])
+    return (band_slice(st, out_base, k_out)
+            if out_base is not None else take_cells(st, out_idx))
 
 
 @functools.partial(jax.jit, static_argnames=(
     "n_cells", "one_cell", "in_widths", "out_widths", "in_base", "out_base",
-    "unroll"))
+    "unroll", "planes"))
 def pim_exec_ref_slots_fused(in_vals, in_idx, la, lb, lo, out_idx, *,
                              n_cells, one_cell, in_widths, out_widths,
                              in_base=None, out_base=None,
-                             unroll=SLOT_UNROLL):
+                             unroll=SLOT_UNROLL, planes=1):
     """Fused slot executor (ports of <= 32 cells): butterfly transposes,
     state assembly, the scan level loop and the output transpose in one XLA
     executable; only (n_ports, n_rows) uint32 cross the boundary.  Shares
     the 6-array levelized signature, so the shard_map plumbing in
-    ``kernels.ops`` applies unchanged."""
-    st = _assemble_slots(pack_values(in_vals, in_widths), in_idx,
-                         in_vals.shape[1] // 32,
-                         n_cells=n_cells, one_cell=one_cell, in_base=in_base)
+    ``kernels.ops`` applies unchanged.  ``planes`` selects the word layout
+    (1 = rows32, 2 = the paired rows64 state)."""
+    st = _assemble_slots(pack_values(in_vals, in_widths, planes), in_idx,
+                         in_vals.shape[1] // (32 * planes),
+                         n_cells=n_cells, one_cell=one_cell, in_base=in_base,
+                         planes=planes)
     st = _slot_levels(st, la, lb, lo, unroll)
     return unpack_values(_extract(st, out_idx, sum(out_widths), out_base),
-                         out_widths)
+                         out_widths, planes)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -199,9 +260,12 @@ def pim_exec_ref_slots_io(in_rows, in_idx, la, lb, lo, out_idx, *,
                           n_cells, one_cell, k_out,
                           in_base=None, out_base=None, unroll=SLOT_UNROLL):
     """Slot executor over pre-packed port rows (arbitrary port widths):
-    ships in uint32[k_in, n_words], returns the output port rows."""
-    st = _assemble_slots(in_rows, in_idx, in_rows.shape[1],
-                         n_cells=n_cells, one_cell=one_cell, in_base=in_base)
+    ships in uint32[k_in, n_words] (or the planes-leading rows64 form --
+    the layout is inferred from the input rank), returns the output port
+    rows in the same layout."""
+    st = _assemble_slots(in_rows, in_idx, in_rows.shape[-1],
+                         n_cells=n_cells, one_cell=one_cell, in_base=in_base,
+                         planes=1 if in_rows.ndim == 2 else in_rows.shape[0])
     st = _slot_levels(st, la, lb, lo, unroll)
     return _extract(st, out_idx, k_out, out_base)
 
@@ -247,8 +311,10 @@ def static_plan(sched):
 
 
 def read_concat(init_block, bands, srcs: List[Source]):
-    """Gather the source rows as a concatenation of static slices, merging
-    consecutive lanes of the same source array into one slice."""
+    """Gather the source rows as a concatenation of static slices along the
+    cell axis, merging consecutive lanes of the same source array into one
+    slice.  Rank-polymorphic: a leading plane axis (rows64) passes
+    through untouched."""
     parts = []
     i = 0
     while i < len(srcs):
@@ -258,11 +324,12 @@ def read_concat(init_block, bands, srcs: List[Source]):
                and srcs[j][1] == srcs[j - 1][1] + 1):
             j += 1
         arr = init_block if kind == "i" else bands[kind]
-        parts.append(lax.slice_in_dim(arr, pos, srcs[j - 1][1] + 1, axis=0))
+        parts.append(lax.slice_in_dim(arr, pos, srcs[j - 1][1] + 1, axis=-2))
         i = j
     if not parts:
-        return jnp.zeros((0, init_block.shape[1]), jnp.uint32)
-    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        shape = init_block.shape[:-2] + (0, init_block.shape[-1])
+        return jnp.zeros(shape, jnp.uint32)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-2)
 
 
 def emit_levels(reads, lo_row: int, hi_row: int, init_block,
@@ -293,49 +360,55 @@ def _band_liveness(reads, out_srcs, D: int):
     return last
 
 
-def _init_tail(n_init: int, k_in: int, one_cell: Optional[int], n_words):
+def _init_tail(n_init: int, k_in: int, one_cell: Optional[int], n_words,
+               planes: int = 1):
     """Constant rows of the initial region past the packed inputs: zeros,
     with the folded INIT1 row at ``one_cell``.  Built from broadcasts so
     the Pallas kernel stays constant-and-elementwise only."""
     n_tail = n_init - k_in
     if n_tail <= 0:
         return None
+    shape = plane_shape(planes, n_tail, n_words)
     if one_cell is None or not (k_in <= one_cell < n_init):
-        return jnp.zeros((n_tail, n_words), jnp.uint32)
+        return jnp.zeros(shape, jnp.uint32)
     rows = jnp.arange(n_tail, dtype=jnp.int32)[:, None]
-    return jnp.where(rows == (one_cell - k_in),
+    tail = jnp.where(rows == (one_cell - k_in),
                      jnp.uint32(_FULL), jnp.uint32(0)) * \
         jnp.ones((1, n_words), jnp.uint32)
+    return tail if planes == 1 else jnp.broadcast_to(tail, shape)
 
 
 def build_init_block(packed, n_init: int, one_cell: Optional[int]):
     """Initial region from the packed input rows: inputs occupy the leading
     run (slot layout), constants and uninitialized cells follow.  Falls
     back to a scatter only when the inputs are not the leading run."""
-    k_in = packed.shape[0]
-    n_words = packed.shape[1]
-    tail = _init_tail(n_init, k_in, one_cell, n_words)
+    planes = 1 if packed.ndim == 2 else packed.shape[0]
+    k_in = packed.shape[-2]
+    n_words = packed.shape[-1]
+    tail = _init_tail(n_init, k_in, one_cell, n_words, planes)
     if tail is None:
-        return packed[:n_init]
-    return jnp.concatenate([packed, tail], axis=0) if k_in else tail
+        return packed[..., :n_init, :]
+    return jnp.concatenate([packed, tail], axis=-2) if k_in else tail
 
 
 def build_static_chain(sched, in_widths, out_widths, out_names,
                        in_cells: Sequence[int],
                        seg_levels: int = SLOT_SEG_LEVELS,
-                       fused: bool = True):
+                       fused: bool = True, planes: int = 1):
     """Compile a slot schedule into a chain of jitted straight-line
     segments (the bounded-compile-time form of the static emission).
 
     Returns ``run(in_arr) -> out`` where ``in_arr`` is the fused row-major
-    value block (uint32[n_ports, n_words*32]) when ``fused`` else
-    pre-packed port rows (uint32[k_in, n_words]); ``out`` mirrors the
-    corresponding slot executor.  ``in_cells`` is the stacked cell list of
-    the ports the caller actually provides (a subset of the schedule's
-    input ports is fine; missing ports stay zero).  Segment boundaries
-    pass only the live bands (a dict pytree of (width, n_words) values) --
-    no monolithic state array exists at any point, so XLA never copies
-    one.
+    value block (uint32[n_ports, n_words*32*planes]) when ``fused`` else
+    pre-packed port rows (uint32[k_in, n_words], planes-leading under
+    rows64); ``out`` mirrors the corresponding slot executor.
+    ``in_cells`` is the stacked cell list of the ports the caller actually
+    provides (a subset of the schedule's input ports is fine; missing
+    ports stay zero).  Segment boundaries pass only the live bands (a dict
+    pytree of (width, n_words) values) -- no monolithic state array
+    exists at any point, so XLA never copies one.  ``planes`` is the word
+    layout (kernels.plan.WordLayout.planes); bands simply grow a leading
+    batch axis.
     """
     reads, out_srcs, n_init = static_plan(sched)
     D = sched.n_levels
@@ -349,17 +422,20 @@ def build_static_chain(sched, in_widths, out_widths, out_names,
         in_idx_arr = jnp.asarray(np.asarray(in_cells, np.int32))
 
     def sched_words(in_arr):
-        return in_arr.shape[1] // 32 if fused else in_arr.shape[1]
+        return in_arr.shape[1] // (32 * planes) if fused \
+            else in_arr.shape[-1]
 
     def assemble(in_arr):
-        packed = pack_values(in_arr, in_widths) if fused else in_arr
+        packed = pack_values(in_arr, in_widths, planes) if fused else in_arr
         if leading_run:
             return build_init_block(packed, n_init, one_cell)
-        init = jnp.zeros((n_init, sched_words(in_arr)), jnp.uint32)
-        if packed.shape[0]:
-            init = init.at[in_idx_arr].set(packed, mode="promise_in_bounds")
+        init = jnp.zeros(plane_shape(planes, n_init, sched_words(in_arr)),
+                         jnp.uint32)
+        if packed.shape[-2]:
+            init = at_cells(init, in_idx_arr).set(
+                packed, mode="promise_in_bounds")
         if one_cell is not None:
-            init = init.at[one_cell].set(jnp.uint32(_FULL))
+            init = at_cells(init, one_cell).set(jnp.uint32(_FULL))
         return init
 
     bounds = list(range(0, D, max(int(seg_levels), 1))) + [D]
@@ -380,7 +456,7 @@ def build_static_chain(sched, in_widths, out_widths, out_names,
     @jax.jit
     def post(init_block, bands):
         sub = read_concat(init_block, bands, stacked_out)
-        return unpack_values(sub, out_widths) if fused else sub
+        return unpack_values(sub, out_widths, planes) if fused else sub
 
     pre = jax.jit(assemble)
 

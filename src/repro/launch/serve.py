@@ -74,8 +74,10 @@ def _pim_prepare_request(req: dict):
     Request: ``{"op": add|sub|mul|div|fp_add|fp_sub|fp_mul|fp_div,
     "x": [...], "y": [...]}`` plus either ``"dtype"`` (uint8..64 /
     float16/float32) or ``"fmt"`` (bf16 etc., bit-pattern payloads),
-    optional ``"width"`` for explicit fixed-point widths and
-    ``"schedule"`` (slots / slots-static / dense).
+    optional ``"width"`` for explicit fixed-point widths, ``"schedule"``
+    (slots / slots-static / dense) and ``"layout"`` (rows32 / rows64 --
+    the packed word layout; all exec-config keys land in the request's
+    ExecPlan, so mixed-config traffic never coalesces wrongly).
     """
     from .. import pim_ufunc as pim
     op = req["op"]
@@ -89,8 +91,9 @@ def _pim_prepare_request(req: dict):
         dtype = _PIM_DTYPES[req.get("dtype", "uint32")]
     if req.get("width") is not None:
         kw["width"] = int(req["width"])
-    if req.get("schedule") is not None:
-        kw["schedule"] = req["schedule"]
+    for key in ("schedule", "layout"):
+        if req.get(key) is not None:
+            kw[key] = req[key]
     x = np.asarray(req["x"], dtype)
     y = np.asarray(req["y"], dtype)
     return pim.prepare(op, x, y, **kw)
@@ -387,20 +390,30 @@ def main(argv=None):
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="with --pim: write the synthetic-load result as a "
                          "benchmarks/run.py-compatible row")
-    from ..kernels.ops import SCHEDULES
+    from ..kernels.plan import LAYOUTS, SCHEDULES
     ap.add_argument("--pim-schedule", default=None, choices=SCHEDULES,
                     help="executor schedule mode (default: the ufunc "
                          "config default, i.e. the contiguous-slot scan "
                          "executors)")
+    ap.add_argument("--pim-layout", default=None, choices=sorted(LAYOUTS),
+                    help="packed word layout: rows32 (uint32 words) or "
+                         "rows64 (the paired 64-row layout; halves the "
+                         "executor word axis) -- lands in every request's "
+                         "ExecPlan")
     args = ap.parse_args(argv)
 
     import contextlib
     ctx = contextlib.nullcontext()
+    overrides = {}
     if args.pim_schedule:
+        overrides["schedule"] = args.pim_schedule
+    if args.pim_layout:
+        overrides["layout"] = args.pim_layout
+    if overrides:
         # scoped override (not configure): the CLI choice must not leak
         # into library defaults when serve is driven programmatically
         from .. import pim_ufunc as pim
-        ctx = pim.options(schedule=args.pim_schedule)
+        ctx = pim.options(**overrides)
     with ctx:
         if args.pim_serve:
             return serve_pim_batched(window_ms=args.pim_window_ms,

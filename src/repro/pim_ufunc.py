@@ -16,7 +16,10 @@ sharding -- the scale path the throughput case study (Fig. 9) models.
 Dispatch: unsigned dtypes infer the bit width; ``width=`` overrides (and is
 required for object/signed arrays).  Floats dispatch on dtype; formats with
 no native numpy dtype (bf16) take ``fmt=`` plus bit-pattern arrays and
-return bit patterns.  Inputs broadcast like numpy ufuncs.
+return bit patterns.  Inputs broadcast like numpy ufuncs.  Execution
+config -- ``backend=``/``schedule=``/``layout=``/``shards=``/
+``chunk_rows=``, or a ready ``plan=`` (``kernels.plan.ExecPlan``) -- is
+normalized into one ExecPlan per call (DESIGN.md §11).
 
 Per the paper, FP operands must be normal-range or zero: NaN/Inf and
 subnormals are rejected up front (``check=False`` skips the scan).
@@ -55,14 +58,20 @@ class Config:
     (partition-parallel) builders instead of bit-serial.  schedule: the
     executor's schedule compilation mode ('slots' contiguous-band scan
     executors, the default; 'slots-static' straight-line static-slice
-    executors; 'dense' index-matrix executors) -- see
-    ``kernels.ops.DEFAULT_SCHEDULE``.
+    executors; 'dense' index-matrix executors).  layout: the packed word
+    layout ('rows32' uint32 words, 'rows64' the paired 64-row layout) --
+    see ``kernels.plan``.
+
+    These string fields are the convenience surface; :func:`_resolve`
+    normalizes them into one ``kernels.plan.ExecPlan`` per call, and only
+    the plan travels below this module.
     """
     backend: str = "ref"
     chunk_rows: int = kops.DEFAULT_CHUNK_ROWS
     shards: Optional[int] = None
     parallel: bool = False
     schedule: str = kops.DEFAULT_SCHEDULE
+    layout: str = "rows32"
 
 
 config = Config()
@@ -101,10 +110,24 @@ def options(**kw):
 
 
 def _resolve(kw):
+    """Normalize ufunc keywords + module defaults into one ExecPlan (the
+    boundary where convenience strings stop existing); returns
+    ``(plan, parallel)``."""
     def opt(name, default):
         v = kw.pop(name, None)
         return default if v is None else v
 
+    if "plan" in kw:
+        plan = kw.pop("plan")
+        for k in ("backend", "schedule", "layout", "chunk_rows", "mesh",
+                  "shards"):
+            if kw.pop(k, None) is not None:
+                raise TypeError(
+                    f"plan= is exclusive with the {k}= convenience keyword")
+        parallel = opt("parallel", config.parallel)
+        if kw:
+            raise TypeError(f"unknown keyword arguments {sorted(kw)}")
+        return kops.as_plan(plan), parallel
     backend = opt("backend", config.backend)
     if backend not in ("ref", "pallas", "numpy"):
         raise ValueError(f"unknown backend {backend!r}")
@@ -114,6 +137,7 @@ def _resolve(kw):
     if schedule not in kops.SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r} "
                          f"(expected one of {kops.SCHEDULES})")
+    layout = opt("layout", config.layout)
     if "mesh" in kw:
         mesh = kw.pop("mesh")
         kw.pop("shards", None)
@@ -124,7 +148,9 @@ def _resolve(kw):
         mesh = kops.row_mesh(opt("shards", config.shards))
     if kw:
         raise TypeError(f"unknown keyword arguments {sorted(kw)}")
-    return backend, chunk_rows, parallel, mesh, schedule
+    plan = kops.as_plan(backend=backend, schedule=schedule, layout=layout,
+                        mesh=mesh, chunk_rows=chunk_rows)
+    return plan, parallel
 
 
 @dataclasses.dataclass
@@ -136,9 +162,11 @@ class Prepared:
     execution: broadcasting, width/format dispatch, operand validation, and
     program lookup.  The handle exposes the pieces a batching layer needs:
     the shared ``program`` (and its content-hash ``key``, the coalescing
-    group key), the row-major ``inputs``, the resolved execution config,
-    and ``finish`` -- the splitter hook that turns this request's slice of
-    a coalesced output back into the user-facing result (reshape, fp bit
+    group key), the row-major ``inputs``, the resolved ``plan``
+    (:class:`~repro.kernels.plan.ExecPlan` -- the full execution config as
+    one object; ``plan.key`` is what the serving planner groups on), and
+    ``finish`` -- the splitter hook that turns this request's slice of a
+    coalesced output back into the user-facing result (reshape, fp bit
     decode, div's ``(q, r)`` pair).  ``run()`` executes standalone and is
     exactly equivalent to the one-shot ufunc call.
     """
@@ -146,11 +174,29 @@ class Prepared:
     program: object
     inputs: Dict[str, np.ndarray]
     n_rows: int
-    backend: str
-    chunk_rows: int
-    mesh: object
-    schedule: str
+    plan: object                 # kernels.plan.ExecPlan
     _finish: Callable
+
+    # convenience views of the plan (the historical string surface)
+    @property
+    def backend(self) -> str:
+        return self.plan.backend.name
+
+    @property
+    def schedule(self) -> str:
+        return self.plan.schedule
+
+    @property
+    def layout(self) -> str:
+        return self.plan.layout.name
+
+    @property
+    def chunk_rows(self) -> int:
+        return self.plan.effective_chunk_rows
+
+    @property
+    def mesh(self):
+        return self.plan.mesh
 
     @property
     def key(self) -> bytes:
@@ -162,9 +208,9 @@ class Prepared:
     def cached(self) -> bool:
         """True when the compiled-program cache already holds this
         program's schedule artifacts (execution pays no compile)."""
-        if self.backend == "numpy":
+        if self.plan.backend.name == "numpy":
             return True                     # the oracle never compiles
-        return kops.is_compiled(self.program, self.schedule)
+        return kops.is_compiled(self.program, self.plan)
 
     def finish(self, outs: Dict[str, np.ndarray]):
         """Decode raw output-port rows (this request's rows only) into the
@@ -175,8 +221,7 @@ class Prepared:
         """Execute standalone through the streaming executor (identical to
         the plain ufunc call)."""
         return self._finish(_run(self.program, self.inputs, self.n_rows,
-                                 self.backend, self.chunk_rows, self.mesh,
-                                 self.schedule))
+                                 self.plan))
 
     def warm(self, rows: int = 1) -> None:
         """Compile without serving: run ``rows`` leading rows (discarded)
@@ -185,9 +230,9 @@ class Prepared:
         if rows < 1:
             return
         head = {n: v[:rows] for n, v in self.inputs.items()}
-        kops.run_program(self.program, head, rows,
-                         self.backend if self.backend != "numpy" else "ref",
-                         schedule=self.schedule)
+        plan = self.plan.with_backend("ref") \
+            if self.plan.backend.name == "numpy" else self.plan
+        kops.run_program(self.program, head, rows, plan)
 
 
 def prepare(op: str, x, y, *, width=None, fmt=None, **kw) -> Prepared:
@@ -207,13 +252,11 @@ def prepare(op: str, x, y, *, width=None, fmt=None, **kw) -> Prepared:
                      f"(expected one of {INT_OPS + FP_OPS})")
 
 
-def _run(prog, inputs, n_rows, backend, chunk_rows, mesh, schedule):
-    if backend == "numpy":
-        return kops.run_program(prog, inputs, n_rows, backend)
+def _run(prog, inputs, n_rows, plan):
+    if plan.backend.name == "numpy":
+        return kops.run_program(prog, inputs, n_rows, plan)
     # streaming falls back to one-shot run_program below chunk_rows itself
-    return kops.run_program_streaming(prog, inputs, n_rows, backend,
-                                      chunk_rows=chunk_rows, mesh=mesh,
-                                      schedule=schedule)
+    return kops.run_program_streaming(prog, inputs, n_rows, plan)
 
 
 # --------------------------------------------------------------------------
@@ -265,7 +308,7 @@ def _vmax(v):
 
 
 def _prepare_int(op, x, y, width, kw) -> Prepared:
-    backend, chunk, parallel, mesh, schedule = _resolve(kw)
+    plan, parallel = _resolve(kw)
     xr, yr, shape, w = _int_operands(op, x, y, width)
     prog = program_for("int-parallel" if parallel else "int-serial", op, w)
     if op == "div":
@@ -279,8 +322,7 @@ def _prepare_int(op, x, y, width, kw) -> Prepared:
     else:
         inputs = {"x": xr, "y": yr}
         finish = lambda outs: outs["z"].reshape(shape)
-    return Prepared(op, prog, inputs, xr.size, backend, chunk, mesh,
-                    schedule, finish)
+    return Prepared(op, prog, inputs, xr.size, plan, finish)
 
 
 def add(x, y, *, width=None, **kw):
@@ -341,7 +383,7 @@ def _check_fp_bits(op, name, bits, fmt, reject_zero=False):
 def _prepare_fp(op, x, y, kw) -> Prepared:
     fmt = kw.pop("fmt", None)
     check = kw.pop("check", True)
-    backend, chunk, parallel, mesh, schedule = _resolve(kw)
+    plan, parallel = _resolve(kw)
     x, y = np.broadcast_arrays(np.asarray(x), np.asarray(y))
     if fmt is None:
         if x.dtype != y.dtype or x.dtype not in _NP_FMT:
@@ -383,8 +425,8 @@ def _prepare_fp(op, x, y, kw) -> Prepared:
     prog = program_for("fp-parallel" if parallel else "fp-serial",
                        op, fmt_name)
     finish = lambda outs: decode(np.asarray(outs["z"], np.uint64))
-    return Prepared(f"fp_{op}", prog, {"x": xb, "y": yb}, xb.size, backend,
-                    chunk, mesh, schedule, finish)
+    return Prepared(f"fp_{op}", prog, {"x": xb, "y": yb}, xb.size, plan,
+                    finish)
 
 
 def fp_add(x, y, *, fmt=None, **kw):

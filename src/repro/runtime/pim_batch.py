@@ -53,11 +53,13 @@ DEFAULT_PIN_CAP = 32
 # --------------------------------------------------------------------------
 
 def group_key(prep: Prepared) -> tuple:
-    """The coalescing key: program content hash plus everything that makes
-    two executions non-mergeable (backend, schedule, mesh, chunking).  Two
+    """The coalescing key: program content hash plus the full execution
+    config -- ``ExecPlan.key`` covers every dimension that makes two
+    executions non-mergeable (backend, schedule, *word layout*, chunking,
+    mesh, per-backend tunables), so requests differing in any of them --
+    e.g. only in word layout -- never coalesce into one packed state.  Two
     requests with equal keys run bit-identically as one packed state."""
-    return (prep.key, prep.backend, prep.schedule, prep.chunk_rows,
-            None if prep.mesh is None else id(prep.mesh))
+    return (prep.key, prep.plan.key)
 
 
 @dataclasses.dataclass
@@ -130,16 +132,17 @@ class PinnedSchedules:
     def __contains__(self, key: bytes) -> bool:
         return key in self._lru
 
-    def touch(self, program) -> Optional[bytes]:
-        """Pin ``program`` (or refresh its recency); returns its content
-        key, or None when pinning is disabled."""
+    def touch(self, program, plan=None) -> Optional[tuple]:
+        """Pin ``program``'s compiled entry under ``plan`` (default: the
+        default plan; or refresh its recency); returns the cache key, or
+        None when pinning is disabled."""
         if not self.cap:
             return None
-        key = kops.content_key(program)
+        key = kops.cache_key(program, plan)
         if key in self._lru:
             self._lru.move_to_end(key)
             return key
-        kops.pin_program(program)
+        kops.pin_program(program, plan)
         self._lru[key] = True
         while len(self._lru) > self.cap:
             old, _ = self._lru.popitem(last=False)
@@ -285,11 +288,9 @@ class BatchRuntime:
         for g in plan:
             p0 = g.preps[0]
             g.cached = p0.cached
-            self.pins.touch(p0.program)
+            self.pins.touch(p0.program, p0.plan)
             specs.append(dict(program=p0.program, inputs=coalesce(g),
-                              n_rows=g.n_rows, backend=p0.backend,
-                              chunk_rows=p0.chunk_rows, mesh=p0.mesh,
-                              schedule=p0.schedule))
+                              n_rows=g.n_rows, plan=p0.plan))
         t0 = time.perf_counter()
         outs = kops.run_program_groups(specs)
         exec_s = time.perf_counter() - t0

@@ -51,11 +51,21 @@ def test_bench_compare_gate(tmp_path):
 
 
 def test_bench_json_smoke(tmp_path):
+    """The 8k-row kernel family emits in --json format, *and* the
+    --compare BENCH_4.json gate runs as part of the tier-1-adjacent suite
+    so word-layout regressions fail loudly here, not just in a manual
+    benchmark run.  The compare threshold is loose (this host-shared CPU
+    jitters; BENCH_5.json records the real figures) -- the hard in-test
+    bar is the *relative* rows64-vs-rows32 assertion below, which load
+    cannot skew."""
     out = tmp_path / "bench.json"
     proc = _run_bench(["--only", "kernel/fp16_add_8k_rows",
-                       "--json", str(out)], timeout=900)
-    assert proc.returncode == 0, proc.stderr[-2000:]
+                       "--json", str(out), "--compare",
+                       os.path.join(REPO, "BENCH_4.json"),
+                       "--threshold", "100"], timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
     assert proc.stdout.startswith("name,us_per_call,derived")
+    assert "perf gate: OK" in proc.stdout
 
     doc = json.loads(out.read_text())
     assert doc["meta"]["suite"] == "aritpim-repro"
@@ -69,3 +79,10 @@ def test_bench_json_smoke(tmp_path):
                if r["name"] == "kernel/fp16_add_8k_rows")
     assert row["levelized"] == 1 and row["levels"] > 0
     assert row["schedule"] == "slots"
+    # the paired-uint32 layout row rides the same family and must stay
+    # within noise of the rows32 anchor on CPU (identical bit volume; the
+    # halved word axis pays off on 64-bit datapaths, not XLA:CPU)
+    r64 = next(r for r in doc["rows"]
+               if r["name"] == "kernel/fp16_add_8k_rows_rows64")
+    assert r64["layout"] == "rows64" and r64["rows_per_s"] > 0
+    assert r64["us_per_call"] < 3 * row["us_per_call"]
