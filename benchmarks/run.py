@@ -165,6 +165,40 @@ def _kernel_rows(only: str = ""):
             "rows_per_s": _rate(n, dt64), "backend": "ref", "levelized": 1,
             "schedule": "slots", "layout": "rows64",
             "vs_rows32": round(dt64 / base_dt(), 3)}))
+    if want_row("kernel/fp16_add_8k_rows_verified"):
+        # verified execution with checking on but no faults injected: the
+        # host XOR check-word fold over the clean readback (DESIGN.md §12).
+        # Acceptance: <15% overhead over the ref row; a plan with
+        # FaultModel/verify unset pays exactly 0% (it never enters the
+        # verified dispatcher -- tests/test_faults.py pins that).
+        # overhead_vs_base is the median of per-pair ratios from
+        # call-by-call interleaving (order alternated to cancel order
+        # bias): this host's 30-40% drift between separate measurement
+        # windows would otherwise swamp the few-percent real cost.
+        pln_v = kops.make_plan(backend="ref", verify=True)
+        pln_b = kops.make_plan(backend="ref")
+
+        def _one(p):
+            t0 = time.perf_counter()
+            kops.run_program(prog, {"x": x, "y": y}, n, plan=p)
+            return time.perf_counter() - t0
+
+        _one(pln_v), _one(pln_b)                      # warm up
+        vts, ratios = [], []
+        for i in range(40):
+            if i % 2:
+                v = _one(pln_v)
+                b = _one(pln_b)
+            else:
+                b = _one(pln_b)
+                v = _one(pln_v)
+            vts.append(v)
+            ratios.append(v / b)
+        dtv = min(vts)
+        rows.append(("kernel/fp16_add_8k_rows_verified", dtv * 1e6, {
+            "rows_per_s": _rate(n, dtv), "backend": "ref", "levelized": 1,
+            "schedule": "slots", "verified": 1,
+            "overhead_vs_base": round(float(np.median(ratios)) - 1.0, 3)}))
 
     # straight-line static-slice emission (the Mosaic-lowerable shape):
     # segmented jaxpr chain on ref, fully unrolled kernel on pallas.  On
@@ -281,6 +315,27 @@ def _serve_rows(only: str = ""):
     dts = _best_of(serial, reps=3)
     dtb = _best_of(batched, reps=3)
     runtime.close()
+
+    # the same mixed traffic under a nonzero injected fault rate with
+    # verified execution (DESIGN.md §12): the cost of serving *correct*
+    # answers off faulty media -- check folds + detect/retry/remap
+    from repro.kernels import ops as kops
+    from repro.runtime.faults import FaultModel
+    frt = pim_batch.BatchRuntime(pin_cap=16)
+    with pim.options(faults=FaultModel(seed=7, p_flip=5e-4), verify=True):
+        fpreps = lambda: [pim.prepare(op, x, y) for op, x, y in traffic]
+
+        def faulty():
+            rs = frt.execute(fpreps())
+            bad = [r for r in rs if r.error is not None]
+            if bad:
+                raise RuntimeError(f"faulty serving failed: {bad[0].error}")
+
+        faulty()                # warm (+ proves every request recovers)
+        dtf = _best_of(faulty, reps=3)
+    st = frt.stats
+    frt.close()
+    kops.drain_health()
     common = {"requests": len(traffic), "programs": 8,
               "rows_per_request": rows_per_req}
     return [
@@ -289,6 +344,13 @@ def _serve_rows(only: str = ""):
         ("serve/mixed_8op_batched", dtb * 1e6,
          dict(common, rows_per_s=_rate(total, dtb),
               speedup_vs_serial=round(dts / dtb, 2))),
+        ("serve/mixed_8op_faulty", dtf * 1e6,
+         dict(common, rows_per_s=_rate(total, dtf),
+              p_flip=5e-4, verified=1,
+              faults_detected=st.faults_detected,
+              faults_corrected=st.faults_corrected,
+              retries=st.retries,
+              overhead_vs_batched=round(dtf / dtb - 1.0, 3))),
     ]
 
 

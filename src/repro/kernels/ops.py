@@ -31,6 +31,7 @@ import collections
 import dataclasses
 import functools
 import hashlib
+import time
 import weakref
 from typing import Callable, Dict, Iterable, Optional, Tuple
 
@@ -41,11 +42,13 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.gates import LevelSchedule, levelize
+from ..runtime.faults import (DeadlineExceeded, FaultError,  # noqa: F401
+                              FaultModel, VerifyPolicy)
 from . import slots as kslots
 from .plan import (BACKENDS, DEFAULT_LAYOUT, DEFAULT_PLAN, DEFAULT_SCHEDULE,
                    LAYOUTS, ROWS32, ROWS64, SCHEDULES, TILE_W, Backend,
                    ExecPlan, WordLayout, as_plan)
-from .pim_exec import (make_slots_static, pim_exec_level_fused,
+from .pim_exec import (check_words, make_slots_static, pim_exec_level_fused,
                        pim_exec_level_padded_io, pim_exec_padded,
                        pim_exec_slots_fused, pim_exec_slots_io)
 from .ref import (pim_exec_ref, pim_exec_ref_level_fused,
@@ -631,12 +634,267 @@ def _sharded_exec(fn, mesh: Mesh, check_rep: bool, data_rank: int = 2,
 
 
 # --------------------------------------------------------------------------
+# fault-tolerant execution: inject -> detect -> retry -> remap (DESIGN §12)
+# --------------------------------------------------------------------------
+#
+# The plan's FaultModel corrupts each chunk's *output readback* (the
+# layout-polymorphic post-level hook: transient per-level flips plus the
+# persistent dead rows / stuck word columns of the physical span the chunk
+# landed on), and its VerifyPolicy turns on detection: a per-word XOR check
+# fold over the clean readback (``pim_exec.check_words`` is the on-device
+# form of the fold real hardware would read out; the simulator folds the
+# clean host copy, which is detection-identical and one jit dispatch
+# cheaper), refolded after injection -- any single corrupted bit per word
+# position mismatches -- plus amortized numpy-oracle spot checks.  On
+# mismatch the chunk retries with exponential backoff (transients re-roll
+# per attempt); persistent failures re-home the chunk onto a spare physical
+# span that the simulated BIST media scan certifies clean.  All of it wraps
+# ``_dispatch_levelized`` from the outside, so every schedule kind x word
+# layout x backend inherits the machinery and the compiled artifacts stay
+# byte-identical (plan.compile_key excludes faults/verify).
+
+#: Cumulative module-level health counters (faults_injected/detected/
+#: corrected, retries, remapped_rows, spot_checks, spot_mismatches);
+#: :func:`drain_health` snapshots-and-resets them (the serving runtime
+#: drains per batch into its Stats).
+HEALTH: "collections.Counter" = collections.Counter()
+
+
+def drain_health() -> dict:
+    """Snapshot and reset :data:`HEALTH`; returns the non-zero counters."""
+    snap = {k: int(v) for k, v in HEALTH.items() if v}
+    HEALTH.clear()
+    return snap
+
+
+class _Corrupt(Exception):
+    """Internal: a chunk's verification failed (check-word mismatch or
+    oracle spot-check miss); drives the retry loop, never escapes it."""
+
+
+def _check_deadline(deadline: Optional[float]) -> None:
+    """Raise :class:`DeadlineExceeded` when the absolute ``time.monotonic``
+    deadline has passed (checked at dispatch and between chunks)."""
+    if deadline is not None and time.monotonic() > deadline:
+        raise DeadlineExceeded("deadline exceeded between chunks")
+
+
+def _state_span(plan: ExecPlan, rows: int) -> int:
+    """Physical rows covered by one chunk's packed state (incl. word/tile
+    padding) -- the span the media scan certifies and the injectors
+    corrupt; mirrors ``_dispatch_levelized``'s word-count computation."""
+    shards = 1 if plan.mesh is None else plan.mesh.devices.size
+    n_words = plan.layout.n_words(rows, plan.backend.pad_to * shards)
+    return n_words * 32 * plan.layout.planes
+
+
+def _chunk_salt(pkey: bytes, start: int) -> int:
+    """Deterministic per-(program, chunk) transient-sampling salt."""
+    return (int.from_bytes(pkey[:8], "little")
+            ^ (start * 0x9E3779B97F4A7C15)) & ((1 << 64) - 1)
+
+
+@dataclasses.dataclass
+class _FaultCtx:
+    """One dispatch attempt's injection + verification context, threaded
+    into ``_dispatch_levelized``; the finalize closures call the
+    ``process_*`` hook matching their output representation."""
+    faults: Optional[FaultModel]
+    verify: Optional[VerifyPolicy]
+    row_base: int
+    salt: int
+    attempt: int
+
+    def _checked(self, clean_chk, data, axis: int, injected: int):
+        if injected:
+            HEALTH["faults_injected"] += injected
+        # with no FaultModel nothing can have mutated the readback, so the
+        # refold-and-compare is a guaranteed no-op: the clean fold above
+        # models the hardware's parity generation cost, the compare only
+        # runs when there is simulated media to distrust
+        if clean_chk is not None and self.faults is not None:
+            if not np.array_equal(np.bitwise_xor.reduce(data, axis=axis),
+                                  clean_chk):
+                HEALTH["faults_detected"] += 1
+                raise _Corrupt("check-word mismatch")
+        return data
+
+    def process_values(self, o: np.ndarray, out_widths, n_levels: int,
+                       clean_chk: Optional[np.ndarray]) -> np.ndarray:
+        """Fused fast path: ``o`` is uint32[n_ports, padded_rows]."""
+        if self.verify is not None and clean_chk is None:
+            clean_chk = np.bitwise_xor.reduce(o, axis=0)  # clean-copy fold
+        injected = 0
+        if self.faults is not None:
+            o, injected = self.faults.inject_values(
+                o, out_widths, row_base=self.row_base, salt=self.salt,
+                attempt=self.attempt, n_levels=n_levels)
+        return self._checked(clean_chk, o, 0, injected)
+
+    def process_packed(self, sub: np.ndarray, n_levels: int,
+                       clean_chk: Optional[np.ndarray]) -> np.ndarray:
+        """Padded-io path: ``sub`` is the packed output block (cell axis
+        -2, rows32 2-D or planes-leading 3-D)."""
+        if self.verify is not None and clean_chk is None:
+            clean_chk = np.bitwise_xor.reduce(sub, axis=sub.ndim - 2)
+        injected = 0
+        if self.faults is not None:
+            sub, injected = self.faults.inject_packed(
+                sub, row_base=self.row_base, salt=self.salt,
+                attempt=self.attempt, n_levels=n_levels)
+        return self._checked(clean_chk, sub, sub.ndim - 2, injected)
+
+
+# Rows verified since the last oracle spot check, shared across calls so
+# the oracle cost amortizes per *row served*, not per call (a hot 8k-row
+# array must not pay an exec_packed per invocation).  Starts saturated so
+# the first verified execution in a process is always spot-checked.
+_spot_debt = 1 << 62
+
+
+class _VerifyRun:
+    """Per-execution (one streaming run / one group) retry + remap state:
+    the logical-start -> spare-span remap table and the spare allocator.
+    The HEALTH counters aggregate across runs; this object holds only what
+    must be consistent *within* one run (a remapped chunk stays remapped
+    for its retries)."""
+
+    def __init__(self, plan: ExecPlan):
+        self.plan = plan
+        self.faults = plan.faults
+        self.policy = plan.verify
+        self.spare_next = None if self.faults is None \
+            else int(self.faults.spare_base)
+        self.remap: Dict[int, int] = {}
+
+    def _alloc(self, span: int) -> int:
+        base = self.spare_next
+        self.spare_next += (span + 63) // 64 * 64
+        return base
+
+    def _clean_spare(self, span: int, limit: int) -> int:
+        base = self._alloc(span)
+        tries = 0
+        while self.faults.span_bad(base, span):
+            tries += 1
+            if tries > limit:
+                raise FaultError(
+                    f"media scan found no clean {span}-row spare span "
+                    f"after {limit} candidates")
+            base = self._alloc(span)
+        return base
+
+    def place(self, start: int, span: int) -> int:
+        """Physical base for the chunk at logical row ``start``: the
+        existing remap target, or -- when the media scan flags the span's
+        persistent faults -- a freshly scanned clean spare."""
+        base = self.remap.get(start, start)
+        if self.faults is None or self.policy is None:
+            return base
+        if self.faults.span_bad(base, span):
+            base = self._clean_spare(span, self.policy.scan_limit)
+            self.remap[start] = base
+            HEALTH["remapped_rows"] += span
+        return base
+
+    def rehome(self, start: int, span: int) -> int:
+        """Force a fresh spare placement (retry policy escalation: the
+        current span keeps failing verification even though the scan
+        called it clean -- treat it as marginal and move off it)."""
+        if self.faults is None:
+            return self.remap.get(start, start)
+        base = self._clean_spare(span, self.policy.scan_limit)
+        self.remap[start] = base
+        HEALTH["remapped_rows"] += span
+        return base
+
+    def maybe_spot(self, program, inputs, n_rows: int, out: dict) -> None:
+        """Amortized numpy-oracle spot check: every ``spot_interval_rows``
+        verified rows, recompute ``spot_rows`` sampled rows on the
+        cycle-accurate oracle and compare bit-exactly (catches what the
+        per-word parity cannot -- e.g. paired flips of one bit position).
+        Raises :class:`_Corrupt` on mismatch so the chunk retries."""
+        global _spot_debt
+        pol = self.policy
+        if pol is None or pol.spot_rows <= 0 or n_rows <= 0:
+            return
+        _spot_debt += n_rows
+        if _spot_debt < pol.spot_interval_rows:
+            return
+        _spot_debt = 0
+        HEALTH["spot_checks"] += 1
+        k = min(pol.spot_rows, n_rows)
+        idx = np.unique(np.linspace(0, n_rows - 1, num=k, dtype=np.int64))
+        sub_in = {n: np.asarray(v)[idx] for n, v in inputs.items()}
+        oplan = dataclasses.replace(
+            self.plan, backend=BACKENDS["numpy"], mesh=None, layout=ROWS32,
+            chunk_rows=None, faults=None, verify=None)
+        want = run_program(program, sub_in, int(idx.size), oplan)
+        for name, w in want.items():
+            if not np.array_equal(np.asarray(out[name])[idx], w):
+                HEALTH["spot_mismatches"] += 1
+                HEALTH["faults_detected"] += 1
+                raise _Corrupt(f"oracle spot check mismatch on {name!r}")
+
+
+def _verified_dispatch(program, inputs: Dict[str, np.ndarray], n_rows: int,
+                       plan: ExecPlan, pad_rows: Optional[int],
+                       vrun: _VerifyRun, start: int) -> Callable:
+    """Dispatch one chunk under the plan's fault model / verify policy;
+    returns a ``finalize`` that runs the detect -> retry -> remap loop.
+
+    The initial attempt dispatches asynchronously exactly like the plain
+    path (pipelining is preserved when nothing is corrupted -- the common
+    case); retries are synchronous re-dispatches inside finalize."""
+    span = _state_span(plan, n_rows if pad_rows is None else pad_rows)
+    base = vrun.place(start, span)
+    salt = _chunk_salt(content_key(program), start)
+
+    def dispatch(attempt: int, row_base: int) -> Callable:
+        fctx = _FaultCtx(plan.faults, plan.verify, row_base, salt, attempt)
+        return _dispatch_levelized(program, inputs, n_rows, plan,
+                                   pad_rows=pad_rows, fctx=fctx)
+
+    first = dispatch(0, base)
+
+    def finalize() -> Dict[str, np.ndarray]:
+        pol = plan.verify
+        attempt, row_base, fin = 0, base, first
+        while True:
+            try:
+                out = fin()
+                vrun.maybe_spot(program, inputs, n_rows, out)
+                break
+            except _Corrupt:
+                attempt += 1
+                if pol is None or attempt > pol.max_retries:
+                    raise FaultError(
+                        f"rows [{start}, {start + n_rows}): verification "
+                        f"still failing after {attempt - 1} retries")
+                HEALTH["retries"] += 1
+                time.sleep(min(pol.backoff_s * (1 << (attempt - 1)), 0.05))
+                if attempt >= pol.remap_after and plan.faults is not None:
+                    row_base = vrun.rehome(start, span)
+                fin = dispatch(attempt, row_base)
+        if attempt:
+            HEALTH["faults_corrected"] += 1
+        return out
+
+    return finalize
+
+
+def _needs_ft(plan: ExecPlan) -> bool:
+    return plan.faults is not None or plan.verify is not None
+
+
+# --------------------------------------------------------------------------
 # execution
 # --------------------------------------------------------------------------
 
 def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                         plan: ExecPlan,
-                        pad_rows: Optional[int] = None) -> Callable:
+                        pad_rows: Optional[int] = None, *,
+                        fctx: Optional[_FaultCtx] = None) -> Callable:
     """Pack ``inputs`` and dispatch one levelized execution under ``plan``;
     returns a zero-arg ``finalize`` that blocks on the device result and
     unpacks it.
@@ -697,6 +955,14 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
 
         def finalize() -> Dict[str, np.ndarray]:
             o = np.asarray(outs)                     # blocks until ready
+            if fctx is not None:
+                # the clean-readback XOR fold happens inside process_*
+                # (pim_exec.check_words is the on-device form of the same
+                # fold for real hardware; in simulation the host fold of
+                # the clean readback is detection-identical and skips a
+                # second jit dispatch -- see DESIGN.md §12)
+                o = fctx.process_values(o, r.out_widths, r.sched.n_levels,
+                                        None)
             return {n: o[p, :n_rows].astype(np.uint64)
                     for p, n in enumerate(r.names)}
         return finalize
@@ -732,7 +998,10 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                 jnp.asarray(in_rows), r.in_idx, r.la, r.lb, r.lo, r.out_idx)
 
     def finalize() -> Dict[str, np.ndarray]:
-        return _unpack_sub(np.asarray(sub),
+        s = np.asarray(sub)
+        if fctx is not None:
+            s = fctx.process_packed(s, r.sched.n_levels, None)
+        return _unpack_sub(s,
                            [(n, len(r.sched.ports[n])) for n in r.names],
                            n_rows)
     return finalize
@@ -766,6 +1035,9 @@ def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
             f"(got backend={plan.backend.name!r}, levelized={levelized})"
             if plan.mesh is not None else
             f"layout {plan.layout.name!r} requires the levelized executors")
+    if not levelized and _needs_ft(plan):
+        raise ValueError("fault injection / verified execution require "
+                         "the levelized executors")
     if plan.backend.name == "numpy":
         if plan.mesh is not None:       # unreachable (plan validates) --
             raise ValueError("mesh sharding requires a jax backend")
@@ -776,6 +1048,9 @@ def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
         return unpack_rows(st.T, program.ports, n_rows,
                            names=output_names(program))
     if levelized:
+        if _needs_ft(plan):
+            return _verified_dispatch(program, inputs, n_rows, plan, None,
+                                      _VerifyRun(plan), 0)()
         return _dispatch_levelized(program, inputs, n_rows, plan)()
     comp = compiled(program, plan)
     ops, a, b, o, n_cells = comp.get_arrays(program)
@@ -796,7 +1071,8 @@ def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
 def run_program_streaming(program, inputs: Dict[str, np.ndarray],
                           n_rows: int, plan=None, *,
                           backend=None, chunk_rows=None, mesh=None,
-                          schedule=None, layout=None
+                          schedule=None, layout=None,
+                          deadline: Optional[float] = None
                           ) -> Dict[str, np.ndarray]:
     """Chunked, pipelined, optionally sharded execution over ``n_rows``.
 
@@ -810,6 +1086,12 @@ def run_program_streaming(program, inputs: Dict[str, np.ndarray],
     Levelized jax backends only ('ref'/'pallas'); the plan's mesh
     additionally shards each chunk's word axis over devices
     (:func:`row_mesh`).
+
+    ``deadline`` is an absolute ``time.monotonic()`` bound checked before
+    dispatch and between chunks (:class:`DeadlineExceeded` on expiry) --
+    the serving layer's per-request deadline hook.  A plan carrying a
+    fault model / verify policy routes every chunk through the
+    detect -> retry -> remap loop (DESIGN.md §12).
     """
     plan = as_plan(plan, backend=backend, chunk_rows=chunk_rows, mesh=mesh,
                    schedule=schedule, layout=layout)
@@ -817,8 +1099,13 @@ def run_program_streaming(program, inputs: Dict[str, np.ndarray],
         raise ValueError("streaming requires a levelized jax backend, "
                          f"got {plan.backend.name!r}")
     chunk = plan.effective_chunk_rows
+    _check_deadline(deadline)
+    vrun = _VerifyRun(plan) if _needs_ft(plan) else None
     if n_rows <= chunk:
-        return run_program(program, inputs, n_rows, plan)
+        if vrun is None:
+            return run_program(program, inputs, n_rows, plan)
+        return _verified_dispatch(program, inputs, n_rows, plan, None,
+                                  vrun, 0)()
     inputs = {n: np.asarray(v) for n, v in inputs.items()}
     for n, v in inputs.items():
         if len(v) != n_rows:
@@ -827,10 +1114,15 @@ def run_program_streaming(program, inputs: Dict[str, np.ndarray],
     parts = []
     pending = None
     for start in range(0, n_rows, chunk):
+        _check_deadline(deadline)
         rows_k = min(chunk, n_rows - start)
         chunk_in = {n: v[start:start + rows_k] for n, v in inputs.items()}
-        fin = _dispatch_levelized(program, chunk_in, rows_k, plan,
-                                  pad_rows=chunk)
+        if vrun is None:
+            fin = _dispatch_levelized(program, chunk_in, rows_k, plan,
+                                      pad_rows=chunk)
+        else:
+            fin = _verified_dispatch(program, chunk_in, rows_k, plan,
+                                     chunk, vrun, start)
         if pending is not None:
             parts.append(pending())     # blocks on k-1 while k executes
         pending = fin
@@ -852,6 +1144,9 @@ def dispatch_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
     if not plan.backend.is_jax:
         raise ValueError("dispatch requires a levelized jax backend, "
                          f"got {plan.backend.name!r}")
+    if _needs_ft(plan):
+        return _verified_dispatch(program, inputs, n_rows, plan, pad_rows,
+                                  _VerifyRun(plan), 0)
     return _dispatch_levelized(program, inputs, n_rows, plan,
                                pad_rows=pad_rows)
 
@@ -871,6 +1166,12 @@ def run_program_groups(groups: Iterable[dict]) -> list:
     into word-aligned fixed-shape chunks inside the same pipeline (so one
     giant group cannot stall its successors' packing).  A numpy-backend
     group is a synchronization point (the oracle is host-synchronous).
+
+    A group may carry a ``deadline`` (absolute ``time.monotonic()``),
+    checked before each of its chunks dispatches; a plan with a fault
+    model / verify policy runs its group's chunks through the verified
+    detect -> retry -> remap loop (one :class:`_VerifyRun` per group, so a
+    remapped chunk stays remapped for its retries).
     """
     groups = list(groups)
     parts: list = [[] for _ in groups]
@@ -886,6 +1187,7 @@ def run_program_groups(groups: Iterable[dict]) -> list:
         plan = as_plan(g.get("plan"), backend=g.get("backend"),
                        schedule=g.get("schedule"), layout=g.get("layout"),
                        mesh=g.get("mesh"), chunk_rows=g.get("chunk_rows"))
+        deadline = g.get("deadline")
         inputs = {n: np.asarray(v) for n, v in g["inputs"].items()}
         for n, v in inputs.items():
             if len(v) != n_rows:
@@ -894,20 +1196,29 @@ def run_program_groups(groups: Iterable[dict]) -> list:
                     f"expected {n_rows}")
         if plan.backend.name == "numpy":
             drain(0)
+            _check_deadline(deadline)
             parts[gi].append(run_program(program, inputs, n_rows, plan))
             continue
+        vrun = _VerifyRun(plan) if _needs_ft(plan) else None
         chunk = plan.effective_chunk_rows
         if n_rows <= chunk:
+            _check_deadline(deadline)
             pending.append((gi, _dispatch_levelized(
-                program, inputs, n_rows, plan)))
+                program, inputs, n_rows, plan) if vrun is None
+                else _verified_dispatch(program, inputs, n_rows, plan,
+                                        None, vrun, 0)))
             drain(1)
             continue
         for start in range(0, n_rows, chunk):
+            _check_deadline(deadline)
             rows_k = min(chunk, n_rows - start)
             chunk_in = {n: v[start:start + rows_k]
                         for n, v in inputs.items()}
             pending.append((gi, _dispatch_levelized(
-                program, chunk_in, rows_k, plan, pad_rows=chunk)))
+                program, chunk_in, rows_k, plan, pad_rows=chunk)
+                if vrun is None
+                else _verified_dispatch(program, chunk_in, rows_k, plan,
+                                        chunk, vrun, start)))
             drain(1)
     drain(0)
     return [ps[0] if len(ps) == 1 else

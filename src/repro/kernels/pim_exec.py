@@ -397,3 +397,22 @@ def make_slots_static(sched, in_widths, out_widths, out_names,
         return unpack_values(sub[..., :k_out, :], out_widths, planes)
 
     return run
+
+
+# --------------------------------------------------------------------------
+# verified execution: device-side check-word generation (DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def check_words(block, axis: int):
+    """Per-word XOR check fold of an output block over its cell (or port)
+    axis -- verified execution's "on-device ECC generation": the fold is
+    computed while the result is still device-resident, *before* the
+    fault-prone readback, so a host-side refold of the transferred data
+    detects any single corrupted bit per word position (two corruptions of
+    the same bit position in different cells cancel -- the classic parity
+    limit; the sampled oracle spot checks in ``kernels.ops`` backstop it).
+    Works on both output representations: fused per-port row values
+    ``(n_ports, rows)`` with ``axis=0`` and packed word blocks
+    ``(..., k, n_words)`` with ``axis=ndim-2``."""
+    return lax.reduce(block, jnp.uint32(0), lax.bitwise_xor, (axis,))

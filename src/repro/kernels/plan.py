@@ -37,6 +37,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from ..runtime.faults import FaultModel, VerifyPolicy
+
 # Lane-dim words per Pallas block (multiple of 128).  Defined here (the
 # config layer) so plan validation and padding logic need no kernel import;
 # ``kernels.pim_exec`` re-exports it for compatibility.
@@ -160,6 +162,14 @@ class ExecPlan:
     layout: WordLayout = ROWS32
     mesh: Optional[object] = None        # jax.sharding.Mesh or None
     chunk_rows: Optional[int] = None     # None -> backend.chunk_rows
+    # Fault-tolerance layer (DESIGN.md §12): a seeded substrate fault model
+    # to inject (None = perfect substrate) and the verified-execution
+    # policy (None = no checking).  They ride the plan because they are
+    # execution semantics: two requests differing in either must never
+    # coalesce into one packed state (plan.key separates them), while the
+    # compiled artifacts are identical (compile_key excludes them).
+    faults: Optional[FaultModel] = None
+    verify: Optional[VerifyPolicy] = None
 
     def __post_init__(self):
         if self.schedule not in SCHEDULES:
@@ -173,6 +183,12 @@ class ExecPlan:
             raise ValueError(
                 "mesh sharding requires a levelized jax backend "
                 f"(got backend={self.backend.name!r})")
+        if (self.faults is not None or self.verify is not None) \
+                and not self.backend.is_jax:
+            raise ValueError(
+                "fault injection / verified execution require a levelized "
+                "jax backend (the numpy oracle is the fault-free "
+                f"reference; got backend={self.backend.name!r})")
 
     # ------------------------------------------------------------- identity
 
@@ -194,7 +210,11 @@ class ExecPlan:
         retuned Backend separates too)."""
         return (dataclasses.astuple(self.backend), self.schedule,
                 self.layout.name, self.effective_chunk_rows,
-                None if self.mesh is None else id(self.mesh))
+                None if self.mesh is None else id(self.mesh),
+                None if self.faults is None
+                else dataclasses.astuple(self.faults),
+                None if self.verify is None
+                else dataclasses.astuple(self.verify))
 
     @property
     def compile_key(self) -> tuple:
@@ -209,7 +229,10 @@ class ExecPlan:
         alloc and by ``planes``), so a program served under slots,
         slots-static and dense shares one entry, one levelize per alloc,
         and one pin.  Keying on any of those would duplicate entries and
-        device buffers for no artifact change."""
+        device buffers for no artifact change.  ``faults``/``verify`` are
+        likewise excluded: fault injection and result checking wrap the
+        executor at dispatch time and share its compiled artifacts
+        bit-for-bit."""
         return (self.backend.slot_width, self.backend.level_max_width,
                 self.backend.seg_levels)
 
@@ -241,8 +264,29 @@ def _layout_of(layout) -> WordLayout:
                          f"(expected one of {sorted(LAYOUTS)})") from None
 
 
+def _verify_of(verify) -> Optional[VerifyPolicy]:
+    """Normalize the ``verify=`` convenience surface: True means "check
+    with the default policy", a VerifyPolicy passes through, False/None
+    disable."""
+    if verify is None or verify is False:
+        return None
+    if verify is True:
+        return VerifyPolicy()
+    if isinstance(verify, VerifyPolicy):
+        return verify
+    raise TypeError(f"verify must be a bool or VerifyPolicy, "
+                    f"got {type(verify).__name__}")
+
+
+def _faults_of(faults) -> Optional[FaultModel]:
+    if faults is None or isinstance(faults, FaultModel):
+        return faults
+    raise TypeError(f"faults must be a FaultModel or None, "
+                    f"got {type(faults).__name__}")
+
+
 def as_plan(plan=None, *, backend=None, schedule=None, layout=None,
-            mesh=None, chunk_rows=None,
+            mesh=None, chunk_rows=None, faults=None, verify=None,
             default_backend: str = "ref") -> ExecPlan:
     """Normalize entry-point arguments into an :class:`ExecPlan`.
 
@@ -251,11 +295,14 @@ def as_plan(plan=None, *, backend=None, schedule=None, layout=None,
     historical positional-``backend`` convention), or None.  The keyword
     strings are the public convenience surface; they are converted here,
     exactly once, at the boundary -- nothing below an entry point ever
-    sees a loose string again.
+    sees a loose string again.  ``faults=`` takes a
+    :class:`~repro.runtime.faults.FaultModel`; ``verify=`` takes True (the
+    default :class:`~repro.runtime.faults.VerifyPolicy`) or a policy.
     """
     if isinstance(plan, ExecPlan):
         if backend is None and schedule is None and layout is None \
-                and mesh is None and chunk_rows is None:
+                and mesh is None and chunk_rows is None \
+                and faults is None and verify is None:
             return plan
         return dataclasses.replace(
             plan,
@@ -263,7 +310,9 @@ def as_plan(plan=None, *, backend=None, schedule=None, layout=None,
             schedule=plan.schedule if schedule is None else schedule,
             layout=plan.layout if layout is None else _layout_of(layout),
             mesh=plan.mesh if mesh is None else mesh,
-            chunk_rows=plan.chunk_rows if chunk_rows is None else chunk_rows)
+            chunk_rows=plan.chunk_rows if chunk_rows is None else chunk_rows,
+            faults=plan.faults if faults is None else _faults_of(faults),
+            verify=plan.verify if verify is None else _verify_of(verify))
     if isinstance(plan, str):            # run_program(p, ins, n, "ref")
         if backend is not None and backend != plan:
             raise ValueError(
@@ -278,7 +327,8 @@ def as_plan(plan=None, *, backend=None, schedule=None, layout=None,
         backend=_backend_of(default_backend if backend is None else backend),
         schedule=DEFAULT_SCHEDULE if schedule is None else schedule,
         layout=_layout_of(DEFAULT_LAYOUT if layout is None else layout),
-        mesh=mesh, chunk_rows=chunk_rows)
+        mesh=mesh, chunk_rows=chunk_rows,
+        faults=_faults_of(faults), verify=_verify_of(verify))
 
 
 #: The default plan: ref backend, slot schedule, rows32 layout.  The pin

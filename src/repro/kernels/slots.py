@@ -102,6 +102,13 @@ def plane_shape(planes: int, k: int, n_words: int) -> tuple:
     return (k, n_words) if planes == 1 else (planes, k, n_words)
 
 
+# Row -> (plane, word, bit) coordinate map of the same layouts -- canonical
+# in runtime.faults (the fault injectors address physical rows with it;
+# re-exported here, next to its block-shape twin, for layout-code callers
+# and the coordinate cross-checks in tests).
+from ..runtime.faults import word_coords  # noqa: E402,F401
+
+
 # --------------------------------------------------------------------------
 # butterfly bit-transpose bridges (in-jit, ports of <= 32 cells)
 # --------------------------------------------------------------------------

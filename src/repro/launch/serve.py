@@ -67,6 +67,17 @@ def _pim_encode(arr) -> list:
 _PIM_REQ_ERRORS = (KeyError, TypeError, ValueError, OverflowError)
 
 
+def _err(code: str, message: str, retriable: bool) -> dict:
+    """Structured wire-format error body (DESIGN.md §12): every failed
+    request gets a machine-readable ``code``, the human message, and
+    whether retrying the same request could succeed.  Codes: ``bad_json``
+    and ``bad_request`` (non-retriable -- the request itself is broken),
+    ``overloaded`` (admission backpressure), ``deadline_exceeded``,
+    ``exec_failed`` (faults exhausted retries), ``internal``."""
+    return {"error": {"code": code, "message": message,
+                      "retriable": retriable}}
+
+
 def _pim_prepare_request(req: dict):
     """Parse + validate one JSON request into a ``pim_ufunc.Prepared``
     program handle (raises on malformed requests).
@@ -116,11 +127,16 @@ def pim_request(req: dict) -> dict:
     when the program structure was not yet compiled (``cached: false``),
     first-call compilation -- levelize, schedule lowering, executor jit,
     measured by a discarded warm-up row -- is reported separately as
-    ``compile_us``, so serving latency numbers stay honest.  Validation
-    failures come back as ``{"error": ...}``.
+    ``compile_us``, so serving latency numbers stay honest.  Failures come
+    back as structured ``{"error": {"code", "message", "retriable"}}``
+    bodies (see :func:`_err`).
     """
+    from ..runtime.pim_batch import classify_error
     try:
         prep = _pim_prepare_request(req)
+    except _PIM_REQ_ERRORS as e:
+        return _err("bad_request", f"{type(e).__name__}: {e}", False)
+    try:
         cached = prep.cached
         resp = {"op": prep.op, "rows": int(prep.n_rows),
                 "cached": bool(cached)}
@@ -132,13 +148,14 @@ def pim_request(req: dict) -> dict:
         out = prep.run()
         resp["us"] = round((time.perf_counter() - t0) * 1e6, 1)
         return _pim_attach_result(resp, prep.op, out)
-    except _PIM_REQ_ERRORS as e:
-        return {"error": f"{type(e).__name__}: {e}"}
+    except Exception as e:                  # noqa: BLE001 -- keep serving
+        return classify_error(e)
 
 
 def serve_pim_stdin(inp=None, outp=None) -> int:
     """JSON-lines loop: one request per input line, one response per output
-    line.  Blank lines are skipped; malformed JSON yields an error line."""
+    line.  Blank lines are skipped; malformed JSON yields a structured
+    ``bad_json`` error line."""
     inp = sys.stdin if inp is None else inp
     outp = sys.stdout if outp is None else outp
     served = 0
@@ -149,7 +166,7 @@ def serve_pim_stdin(inp=None, outp=None) -> int:
         try:
             req = json.loads(line)
         except json.JSONDecodeError as e:
-            resp = {"error": f"JSONDecodeError: {e}"}
+            resp = _err("bad_json", f"JSONDecodeError: {e}", False)
         else:
             resp = pim_request(req)
         print(json.dumps(resp, sort_keys=True), file=outp, flush=True)
@@ -159,7 +176,8 @@ def serve_pim_stdin(inp=None, outp=None) -> int:
 
 def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
                       max_batch_rows: int = 1 << 16, pin_cap: int = 32,
-                      stats: bool = True) -> dict:
+                      max_queue_rows=None, deadline_ms=None,
+                      heartbeat=None, stats: bool = True) -> dict:
     """Batched JSON-lines loop (``--pim-serve``): same request/response
     protocol as :func:`serve_pim_stdin`, but requests admitted within one
     micro-batching window coalesce by compiled-program structure and each
@@ -173,69 +191,122 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
     window), ``exec_us`` (the batch's shared pipelined execution time),
     ``batched`` (requests coalesced into this request's group), and
     ``cached``.  At end of stream a stats summary line goes to stderr.
+
+    Hardening (DESIGN.md §12): ``max_queue_rows`` bounds the admission
+    backlog -- a request past the cap gets a retriable ``overloaded``
+    error instead of growing the queue (the reader never blocks, the
+    executor never deadlocks).  ``deadline_ms`` (per-request override:
+    ``"deadline_ms"`` in the request) expires requests still queued or
+    mid-execution past their budget.  Every failure is a structured
+    ``{"error": {"code", "message", "retriable"}}``; a request that fell
+    out of group execution carries ``"degraded": true``; a batch that saw
+    fault-tolerance activity attaches its drained ``"health"`` counters.
+    ``heartbeat`` names a liveness file beaten once per batch.
     """
     from ..runtime import pim_batch
+    from ..runtime.fault_tolerance import Heartbeat, StragglerMonitor
     inp = sys.stdin if inp is None else inp
     outp = sys.stdout if outp is None else outp
     q = pim_batch.BatchQueue(window_ms=window_ms,
-                             max_batch_rows=max_batch_rows)
+                             max_batch_rows=max_batch_rows,
+                             max_queue_rows=max_queue_rows)
 
     def _admit():
-        for line in inp:
-            line = line.strip()
-            if not line:
-                continue
-            t_admit = time.perf_counter()
-            try:
-                prep = _pim_prepare_request(json.loads(line))
-            except json.JSONDecodeError as e:
-                q.put(({"error": f"JSONDecodeError: {e}"}, None, t_admit))
-            except _PIM_REQ_ERRORS as e:
-                q.put(({"error": f"{type(e).__name__}: {e}"}, None, t_admit))
-            else:
-                q.put((None, prep, t_admit), n_rows=prep.n_rows)
-        q.close()
+        try:
+            for line in inp:
+                line = line.strip()
+                if not line:
+                    continue
+                t_admit = time.perf_counter()
+                try:
+                    req = json.loads(line)
+                except json.JSONDecodeError as e:
+                    q.put((_err("bad_json", f"JSONDecodeError: {e}", False),
+                           None, t_admit, None))
+                    continue
+                try:
+                    prep = _pim_prepare_request(req)
+                    dl_ms = req.get("deadline_ms", deadline_ms) \
+                        if isinstance(req, dict) else deadline_ms
+                    dl = None if dl_ms is None \
+                        else time.monotonic() + float(dl_ms) * 1e-3
+                except _PIM_REQ_ERRORS as e:
+                    q.put((_err("bad_request", f"{type(e).__name__}: {e}",
+                                False), None, t_admit, None))
+                except Exception as e:      # noqa: BLE001 -- keep serving
+                    q.put((_err("internal", f"{type(e).__name__}: {e}",
+                                True), None, t_admit, None))
+                else:
+                    if not q.offer((None, prep, t_admit, dl),
+                                   n_rows=prep.n_rows):
+                        # backpressure: ordered, structured, retriable --
+                        # the rejection itself rides the queue rowless
+                        q.put((_err(
+                            "overloaded",
+                            f"admission queue full ({prep.n_rows} rows "
+                            f"would exceed max_queue_rows="
+                            f"{q.max_queue_rows})", True),
+                            None, t_admit, None))
+        except Exception:   # noqa: BLE001 -- input stream died mid-read:
+            pass            # treat as EOF; admitted requests still serve
+        finally:
+            q.close()
 
     threading.Thread(target=_admit, daemon=True).start()
     runtime = pim_batch.BatchRuntime(pin_cap=pin_cap)
+    mon = StragglerMonitor(window=64, threshold=4.0)
+    hb = Heartbeat(heartbeat, interval_s=0.0) if heartbeat else None
+    if hb:
+        hb.beat(0)                          # liveness from startup
     served = 0
     try:
         while (batch := q.collect()) is not None:
             t_plan = time.perf_counter()
+            now = time.monotonic()
             responses: dict = {}
             live = []
-            for i, (err, prep, t_admit) in enumerate(batch):
+            for i, (err, prep, t_admit, dl) in enumerate(batch):
                 if err is not None:
                     responses[i] = err
+                    if err["error"]["code"] == "overloaded":
+                        runtime.stats.rejected += 1
+                elif dl is not None and now > dl:
+                    responses[i] = _err(
+                        "deadline_exceeded",
+                        f"request expired in queue ({prep.n_rows} rows)",
+                        True)
+                    runtime.stats.expired += 1
                 else:
-                    live.append((i, prep, t_admit))
+                    live.append((i, prep, t_admit, dl))
             try:
-                results = runtime.execute([p for _, p, _ in live])
-            except Exception as e:              # poisoned group: fall back
-                results = None                  # to per-request execution
-                fallback = f"{type(e).__name__}: {e}"
+                results = runtime.execute(
+                    [p for _, p, _, _ in live],
+                    deadlines=[dl for _, _, _, dl in live])
+            except Exception as e:          # noqa: BLE001 -- server bug:
+                body = pim_batch.classify_error(e)  # answer, keep serving
+                results = None
+                for i, prep, t_admit, dl in live:
+                    responses[i] = body
             t_done = time.perf_counter()
             if results is not None:
-                for (i, prep, t_admit), r in zip(live, results):
+                for (i, prep, t_admit, dl), r in zip(live, results):
+                    if r.error is not None:
+                        responses[i] = {"error": r.error}
+                        continue
                     resp = {"op": prep.op, "rows": int(prep.n_rows),
                             "us": round((t_done - t_admit) * 1e6, 1),
                             "queue_us": round((t_plan - t_admit) * 1e6, 1),
                             "exec_us": round(r.exec_us, 1),
                             "batched": r.group_size, "cached": bool(r.cached)}
+                    if r.degraded:
+                        resp["degraded"] = True
+                    if r.health:
+                        resp["health"] = r.health
                     responses[i] = _pim_attach_result(resp, prep.op, r.value)
-            else:
-                for i, prep, t_admit in live:
-                    try:
-                        t0 = time.perf_counter()
-                        out = prep.run()
-                        resp = {"op": prep.op, "rows": int(prep.n_rows),
-                                "us": round((time.perf_counter() - t0) * 1e6,
-                                            1),
-                                "batched": 1, "cached": True,
-                                "fallback": fallback}
-                        responses[i] = _pim_attach_result(resp, prep.op, out)
-                    except Exception as e:
-                        responses[i] = {"error": f"{type(e).__name__}: {e}"}
+            if mon.record(runtime.stats.batches, t_done - t_plan):
+                runtime.stats.stragglers += 1
+            if hb:
+                hb.beat(runtime.stats.batches)
             runtime.stats.errors += sum(
                 1 for r in responses.values() if "error" in r)
             for i in range(len(batch)):
@@ -250,7 +321,12 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
         print(st.summary(pinned=pinned), file=sys.stderr)
     return {"served": served, "batches": st.batches, "groups": st.groups,
             "rows": st.rows, "errors": st.errors, "pinned": pinned,
-            "rows_per_s": st.rows_per_s()}
+            "rows_per_s": st.rows_per_s(), "rejected": st.rejected,
+            "expired": st.expired, "degraded_groups": st.degraded_groups,
+            "faults_detected": st.faults_detected,
+            "faults_corrected": st.faults_corrected,
+            "retries": st.retries, "remapped_rows": st.remapped_rows,
+            "stragglers": st.stragglers}
 
 
 def serve_pim_synthetic(args) -> dict:
@@ -383,6 +459,28 @@ def main(argv=None):
     ap.add_argument("--pim-pin-cap", type=int, default=32,
                     help="LRU-pinned working set of compiled schedules "
                          "(--pim-serve; 0 disables pinning)")
+    ap.add_argument("--pim-max-queue-rows", type=int, default=0,
+                    help="admission backlog cap in rows (--pim-serve); "
+                         "past it requests get a retriable 'overloaded' "
+                         "error (0 = unbounded)")
+    ap.add_argument("--pim-deadline-ms", type=float, default=None,
+                    help="default per-request deadline (--pim-serve); a "
+                         "request's own 'deadline_ms' key overrides")
+    ap.add_argument("--pim-heartbeat", metavar="PATH", default=None,
+                    help="liveness file beaten once per batch "
+                         "(--pim-serve; runtime/fault_tolerance.Heartbeat)")
+    ap.add_argument("--pim-verify", action="store_true",
+                    help="verified execution: per-chunk result checking "
+                         "with retry + row remap (DESIGN.md §12)")
+    ap.add_argument("--pim-fault-flip", type=float, default=0.0,
+                    help="injected per-level transient bit-flip rate "
+                         "(fault-injection harness; DESIGN.md §12)")
+    ap.add_argument("--pim-fault-dead", type=float, default=0.0,
+                    help="injected dead-row rate")
+    ap.add_argument("--pim-fault-stuck", type=float, default=0.0,
+                    help="injected stuck-at word-column rate")
+    ap.add_argument("--pim-fault-seed", type=int, default=0,
+                    help="fault-map seed (deterministic injection)")
     ap.add_argument("--pim-rows", type=int, default=1 << 20)
     ap.add_argument("--pim-requests", type=int, default=4)
     ap.add_argument("--pim-dtype", default="uint32",
@@ -409,6 +507,14 @@ def main(argv=None):
         overrides["schedule"] = args.pim_schedule
     if args.pim_layout:
         overrides["layout"] = args.pim_layout
+    if args.pim_verify:
+        overrides["verify"] = True
+    if args.pim_fault_flip or args.pim_fault_dead or args.pim_fault_stuck:
+        from ..runtime.faults import FaultModel
+        overrides["faults"] = FaultModel(seed=args.pim_fault_seed,
+                                         p_flip=args.pim_fault_flip,
+                                         p_dead_row=args.pim_fault_dead,
+                                         p_stuck=args.pim_fault_stuck)
     if overrides:
         # scoped override (not configure): the CLI choice must not leak
         # into library defaults when serve is driven programmatically
@@ -416,9 +522,13 @@ def main(argv=None):
         ctx = pim.options(**overrides)
     with ctx:
         if args.pim_serve:
-            return serve_pim_batched(window_ms=args.pim_window_ms,
-                                     max_batch_rows=args.pim_max_batch_rows,
-                                     pin_cap=args.pim_pin_cap)
+            return serve_pim_batched(
+                window_ms=args.pim_window_ms,
+                max_batch_rows=args.pim_max_batch_rows,
+                pin_cap=args.pim_pin_cap,
+                max_queue_rows=args.pim_max_queue_rows or None,
+                deadline_ms=args.pim_deadline_ms,
+                heartbeat=args.pim_heartbeat)
         if args.pim_stdin:
             return serve_pim_stdin()
         if args.pim:

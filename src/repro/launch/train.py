@@ -22,7 +22,7 @@ from ..configs import registry
 from ..data.pipeline import DataConfig, DataIterator
 from ..models import model as M
 from ..optim import adamw
-from ..runtime.fault_tolerance import train_loop
+from ..runtime.train_loop import train_loop
 from . import sharding as SH
 from .steps import make_train_step
 

@@ -60,7 +60,10 @@ class Config:
     executors, the default; 'slots-static' straight-line static-slice
     executors; 'dense' index-matrix executors).  layout: the packed word
     layout ('rows32' uint32 words, 'rows64' the paired 64-row layout) --
-    see ``kernels.plan``.
+    see ``kernels.plan``.  faults: a ``runtime.faults.FaultModel`` (or
+    None) injected into jax-backed execution.  verify: verified execution
+    -- True / a ``runtime.faults.VerifyPolicy`` turns on per-chunk result
+    checking with retry + row remap (DESIGN.md §12).
 
     These string fields are the convenience surface; :func:`_resolve`
     normalizes them into one ``kernels.plan.ExecPlan`` per call, and only
@@ -72,6 +75,8 @@ class Config:
     parallel: bool = False
     schedule: str = kops.DEFAULT_SCHEDULE
     layout: str = "rows32"
+    faults: Optional[object] = None      # runtime.faults.FaultModel
+    verify: Optional[object] = None      # bool | runtime.faults.VerifyPolicy
 
 
 config = Config()
@@ -120,7 +125,7 @@ def _resolve(kw):
     if "plan" in kw:
         plan = kw.pop("plan")
         for k in ("backend", "schedule", "layout", "chunk_rows", "mesh",
-                  "shards"):
+                  "shards", "faults", "verify"):
             if kw.pop(k, None) is not None:
                 raise TypeError(
                     f"plan= is exclusive with the {k}= convenience keyword")
@@ -138,6 +143,8 @@ def _resolve(kw):
         raise ValueError(f"unknown schedule {schedule!r} "
                          f"(expected one of {kops.SCHEDULES})")
     layout = opt("layout", config.layout)
+    faults = opt("faults", config.faults)
+    verify = opt("verify", config.verify)
     if "mesh" in kw:
         mesh = kw.pop("mesh")
         kw.pop("shards", None)
@@ -146,10 +153,15 @@ def _resolve(kw):
         mesh = None
     else:
         mesh = kops.row_mesh(opt("shards", config.shards))
+    if backend == "numpy":
+        # the oracle is the fault-free reference; faults/verify are
+        # jax-backend concepts (like shards/mesh) and drop away here
+        faults = verify = None
     if kw:
         raise TypeError(f"unknown keyword arguments {sorted(kw)}")
     plan = kops.as_plan(backend=backend, schedule=schedule, layout=layout,
-                        mesh=mesh, chunk_rows=chunk_rows)
+                        mesh=mesh, chunk_rows=chunk_rows,
+                        faults=faults, verify=verify)
     return plan, parallel
 
 

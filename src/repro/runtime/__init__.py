@@ -4,8 +4,8 @@
 # training-side modules stay importable without pulling in the kernels.
 
 _PIM_BATCH = ("BatchQueue", "BatchRuntime", "Group", "PinnedSchedules",
-              "RequestResult", "Stats", "coalesce", "group_key",
-              "plan_groups")
+              "RequestResult", "Stats", "classify_error", "coalesce",
+              "group_key", "plan_groups")
 
 __all__ = list(_PIM_BATCH) + ["pim_batch"]
 

@@ -1,42 +1,29 @@
-"""Fault-tolerant training runtime.
+"""Liveness primitives shared by the serving loop (DESIGN.md §12).
 
-* :class:`PreemptionGuard` -- converts SIGTERM/SIGINT into a cooperative
-  "checkpoint now, then exit" signal (cloud preemption handling).
-* :class:`StragglerMonitor` -- per-step wall-time EMA + spike detection;
-  in a multi-host deployment each host reports a heartbeat and the policy
-  hook decides (log / re-shard / evict).  Single-process here, same API.
-* :class:`Heartbeat` -- liveness file an external supervisor can watch.
-* :func:`train_loop` -- resume-from-latest, periodic async checkpoints,
-  preemption-safe exit; the actual step function is injected.
+* :class:`Heartbeat` -- liveness file an external supervisor can watch;
+  ``--pim-heartbeat PATH`` makes the batched server beat it once per
+  batch so a dead or wedged server is detectable from outside.
+* :class:`StragglerMonitor` -- wall-time spike detection over a trailing
+  median; the server records per-batch execution time and surfaces the
+  spike count in its stats line.  In a multi-host deployment each host
+  reports a heartbeat and the policy hook decides (log / re-shard /
+  evict).  Single-process here, same API.
+
+The training-side loop that historically lived here (PreemptionGuard +
+train_loop) is quarantined in :mod:`~repro.runtime.train_loop`, which
+imports these two classes back.
 """
 
 from __future__ import annotations
 
 import collections
 import os
-import signal
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Optional
 
 import numpy as np
 
-
-class PreemptionGuard:
-    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
-        self.requested = False
-        self._prev = {}
-        for s in signals:
-            try:
-                self._prev[s] = signal.signal(s, self._handler)
-            except ValueError:            # not in main thread (tests)
-                pass
-
-    def _handler(self, signum, frame):
-        self.requested = True
-
-    def restore(self):
-        for s, h in self._prev.items():
-            signal.signal(s, h)
+__all__ = ["Heartbeat", "StragglerMonitor"]
 
 
 class StragglerMonitor:
@@ -76,48 +63,3 @@ class Heartbeat:
                 f.write(f"{step} {now}")
             os.replace(tmp, self.path)
             self._last = now
-
-
-def train_loop(*, step_fn, state, data_iter, ckpt, total_steps: int,
-               ckpt_every: int = 100, log_every: int = 10,
-               log_fn=print) -> Dict:
-    """Generic fault-tolerant loop.
-
-    step_fn(state, batch) -> (state, metrics);  state must contain 'step'.
-    Resumes from the newest checkpoint if one exists; checkpoints
-    asynchronously; a preemption request forces a final checkpoint.
-    """
-    guard = PreemptionGuard()
-    mon = StragglerMonitor()
-    hb = Heartbeat(os.path.join(ckpt.dir, "HEARTBEAT"), interval_s=5)
-    latest = ckpt.latest_step()
-    if latest is not None:
-        state = ckpt.restore(state, step=latest)
-        data_iter.restore({"step": latest})
-        start = latest
-        log_fn(f"[resume] restored step {latest}")
-    else:
-        start = 0
-    metrics = {}
-    for step in range(start, total_steps):
-        t0 = time.time()
-        batch = next(data_iter)
-        state, metrics = step_fn(state, batch)
-        dt = time.time() - t0
-        mon.record(step, dt)
-        hb.beat(step)
-        if log_every and step % log_every == 0:
-            log_fn(f"[step {step}] "
-                   + " ".join(f"{k}={float(v):.4f}"
-                              for k, v in metrics.items()) + f" dt={dt:.3f}s")
-        if ckpt_every and step and step % ckpt_every == 0:
-            ckpt.save_async(step + 1, state)      # tag = steps completed
-        if guard.requested:
-            log_fn(f"[preempt] checkpointing at step {step} and exiting")
-            ckpt.wait()
-            ckpt.save(step + 1, state)
-            break
-    ckpt.wait()
-    guard.restore()
-    return {"state": state, "metrics": metrics,
-            "stragglers": mon.flagged}

@@ -8,7 +8,11 @@ traffic.  This module sits between the JSON request layer and
 
 * :class:`BatchQueue` -- thread-safe admission with a micro-batching
   window: block for the first request, then keep admitting until the
-  window closes, the row cap fills, or the stream ends.
+  window closes, the row cap fills, or the stream ends.  An optional
+  queue-depth cap turns :meth:`BatchQueue.offer` into backpressure: past
+  the cap a request is rejected (structured, retriable) instead of
+  growing the queue without bound -- the producer never blocks and the
+  consumer never deadlocks (DESIGN.md §12).
 * :func:`plan_groups` -- the planner: group a batch's prepared requests by
   compiled-program content hash + execution config (``Prepared.key`` makes
   structurally identical requests trivially groupable).
@@ -35,6 +39,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import queue
+import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -42,6 +47,7 @@ import numpy as np
 
 from ..kernels import ops as kops
 from ..pim_ufunc import Prepared
+from .faults import DeadlineExceeded, FaultError
 
 DEFAULT_WINDOW_MS = 2.0
 DEFAULT_MAX_BATCH_ROWS = 1 << 16
@@ -170,22 +176,53 @@ class BatchQueue:
     request that crosses the cap is still admitted -- requests are never
     split), or (c) the stream ends.  Returns None once the stream is
     exhausted.  ``window_ms=0`` degenerates to "whatever is already
-    queued", which keeps single-request latency at its floor."""
+    queued", which keeps single-request latency at its floor.
+
+    ``max_queue_rows`` bounds admission: when set, :meth:`offer` rejects a
+    request whose rows would push the queued backlog past the cap --
+    *unless* the queue is empty, so an oversized single request is still
+    servable (it would never fit otherwise).  Rejection is a return value,
+    not an exception, and nothing ever blocks the producer: the server
+    turns a False into a structured retriable "overloaded" response."""
 
     _EOF = object()
 
     def __init__(self, window_ms: float = DEFAULT_WINDOW_MS,
-                 max_batch_rows: int = DEFAULT_MAX_BATCH_ROWS):
+                 max_batch_rows: int = DEFAULT_MAX_BATCH_ROWS,
+                 max_queue_rows: Optional[int] = None):
         if max_batch_rows < 1:
             raise ValueError(
                 f"max_batch_rows must be >= 1, got {max_batch_rows}")
+        if max_queue_rows is not None and max_queue_rows < 1:
+            raise ValueError(
+                f"max_queue_rows must be >= 1 or None, got {max_queue_rows}")
         self.window_s = max(0.0, float(window_ms)) * 1e-3
         self.max_batch_rows = int(max_batch_rows)
+        self.max_queue_rows = None if max_queue_rows is None \
+            else int(max_queue_rows)
         self._q: "queue.SimpleQueue" = queue.SimpleQueue()
         self._eof = False
+        self._lock = threading.Lock()
+        self._pending_rows = 0
 
     def put(self, item, n_rows: int = 0) -> None:
+        with self._lock:
+            self._pending_rows += int(n_rows)
         self._q.put((item, int(n_rows)))
+
+    def offer(self, item, n_rows: int = 0) -> bool:
+        """Admit ``item`` unless the backlog cap would be exceeded; returns
+        False (rejection) instead of blocking.  With no cap, equivalent to
+        :meth:`put`."""
+        n = int(n_rows)
+        with self._lock:
+            if (self.max_queue_rows is not None and n > 0
+                    and self._pending_rows > 0
+                    and self._pending_rows + n > self.max_queue_rows):
+                return False
+            self._pending_rows += n
+        self._q.put((item, n))
+        return True
 
     def close(self) -> None:
         """Signal end of stream (producer side)."""
@@ -199,6 +236,7 @@ class BatchQueue:
         if item is self._EOF:
             self._eof = True
             return None
+        self._drain(rows)
         batch = [item]
         total = rows
         deadline = time.monotonic() + self.window_s
@@ -212,9 +250,39 @@ class BatchQueue:
             if item is self._EOF:
                 self._eof = True
                 break
+            self._drain(rows)
             batch.append(item)
             total += rows
         return batch
+
+    def _drain(self, rows: int) -> None:
+        with self._lock:
+            self._pending_rows = max(0, self._pending_rows - rows)
+
+
+# --------------------------------------------------------------------------
+# error taxonomy (DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+_BAD_REQUEST = (KeyError, TypeError, ValueError, OverflowError)
+
+
+def classify_error(e: BaseException) -> dict:
+    """Map an exception to the structured wire-format error body: a
+    machine-readable ``code``, the human message, and whether a retry of
+    the *same* request could succeed (bad requests never will; transient
+    execution faults, deadline misses, and overload might)."""
+    if isinstance(e, DeadlineExceeded):
+        code, retriable = "deadline_exceeded", True
+    elif isinstance(e, FaultError):
+        code, retriable = "exec_failed", True
+    elif isinstance(e, _BAD_REQUEST):
+        code, retriable = "bad_request", False
+    else:
+        code, retriable = "internal", True
+    return {"error": {"code": code,
+                      "message": f"{type(e).__name__}: {e}",
+                      "retriable": retriable}}
 
 
 # --------------------------------------------------------------------------
@@ -227,13 +295,21 @@ class RequestResult:
     batch's pipelined execution wall time -- groups overlap on the device,
     so per-group times are not separable; the shared figure is the honest
     one.  ``cached`` reports whether the request's program had compiled
-    schedule artifacts *before* this batch ran."""
+    schedule artifacts *before* this batch ran.  ``degraded`` marks a
+    request that fell out of group execution and ran (or failed)
+    standalone; ``error`` is the structured error body (value is None)
+    when even standalone execution failed; ``health`` carries the batch's
+    drained fault-tolerance counters (shared across the batch's
+    results)."""
     value: object
     group_rows: int
     group_size: int
     batch_rows: int
     exec_us: float
     cached: bool
+    degraded: bool = False
+    error: Optional[dict] = None
+    health: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -245,16 +321,38 @@ class Stats:
     rows: int = 0
     errors: int = 0
     exec_s: float = 0.0
+    # fault-tolerance / admission health (DESIGN.md §12)
+    rejected: int = 0            # admission backpressure rejections
+    expired: int = 0             # requests past deadline at dequeue
+    degraded_groups: int = 0     # groups that fell back to per-request
+    retries: int = 0             # chunk retries after detected corruption
+    faults_detected: int = 0
+    faults_corrected: int = 0
+    remapped_rows: int = 0
+    stragglers: int = 0          # batch exec-time spikes (StragglerMonitor)
 
     def rows_per_s(self) -> float:
         return self.rows / self.exec_s if self.exec_s > 0 else float("nan")
+
+    def absorb_health(self, health: Dict[str, int]) -> None:
+        """Fold one batch's drained ``kernels.ops`` HEALTH counters in."""
+        self.retries += health.get("retries", 0)
+        self.faults_detected += health.get("faults_detected", 0)
+        self.faults_corrected += health.get("faults_corrected", 0)
+        self.remapped_rows += health.get("remapped_rows", 0)
 
     def summary(self, pinned: int = 0) -> str:
         gsz = self.requests / self.groups if self.groups else 0.0
         return (f"pim-serve: {self.requests} requests in {self.batches} "
                 f"batches / {self.groups} groups (mean {gsz:.1f} req/group), "
                 f"{self.rows} rows @ {self.rows_per_s():,.0f} rows/s, "
-                f"errors={self.errors}, pinned={pinned}")
+                f"errors={self.errors}, pinned={pinned}, "
+                f"rejected={self.rejected}, expired={self.expired}, "
+                f"degraded_groups={self.degraded_groups}, "
+                f"faults={self.faults_detected}/{self.faults_corrected} "
+                f"(detected/corrected), retries={self.retries}, "
+                f"remapped_rows={self.remapped_rows}, "
+                f"stragglers={self.stragglers}")
 
 
 class BatchRuntime:
@@ -272,31 +370,76 @@ class BatchRuntime:
     def close(self) -> None:
         self.pins.clear()
 
-    def execute(self, preps: Sequence[Prepared]) -> List[RequestResult]:
+    def execute(self, preps: Sequence[Prepared],
+                deadlines: Optional[Sequence[Optional[float]]] = None,
+                ) -> List[RequestResult]:
         """Execute one admission batch; per-request results in input order.
 
         Plans groups, pins their programs into the working set, runs all
         groups through the pipelined group executor, and splits each
         group's output rows back to its members (each request's
         ``finish`` decodes its own slice -- including div's ``(q, r)``
-        pair and fp bit-pattern decode)."""
+        pair and fp bit-pattern decode).
+
+        ``deadlines`` (optional, aligned with ``preps``) are absolute
+        ``time.monotonic()`` values: a group inherits the *tightest* member
+        deadline and the executor checks it between chunks.
+
+        Degradation ladder (DESIGN.md §12): if the pipelined whole-batch
+        run raises, each group re-runs alone; a group that still fails
+        falls back to per-request execution, so one poisoned request (or a
+        row span whose faults exhaust retries) costs its own response --
+        never the batch.  Per-request failures surface as structured
+        ``error`` bodies on their own :class:`RequestResult`."""
         results: List[Optional[RequestResult]] = [None] * len(preps)
         if not preps:
             return []
+        dls = list(deadlines) if deadlines is not None else [None] * len(preps)
         plan = plan_groups(preps)
         specs = []
         for g in plan:
             p0 = g.preps[0]
             g.cached = p0.cached
             self.pins.touch(p0.program, p0.plan)
-            specs.append(dict(program=p0.program, inputs=coalesce(g),
-                              n_rows=g.n_rows, plan=p0.plan))
+            member_dls = [dls[i] for i in g.members if dls[i] is not None]
+            try:
+                inputs = coalesce(g)
+            except Exception:
+                # a malformed member poisons only its own group: degrade the
+                # group to per-request, where the healthy members still run
+                specs.append(None)
+                continue
+            specs.append(dict(program=p0.program, inputs=inputs,
+                              n_rows=g.n_rows, plan=p0.plan,
+                              deadline=min(member_dls) if member_dls
+                              else None))
         t0 = time.perf_counter()
-        outs = kops.run_program_groups(specs)
+        live = [s for s in specs if s is not None]
+        try:
+            live_outs = iter(kops.run_program_groups(live) if live else ())
+            outs = [None if s is None else next(live_outs) for s in specs]
+        except Exception:
+            # retry each group alone: a healthy group must not pay for a
+            # poisoned neighbour sharing its batch
+            outs = []
+            for spec in specs:
+                if spec is None:
+                    outs.append(None)
+                    continue
+                try:
+                    outs.append(kops.run_program_groups([spec])[0])
+                except Exception:
+                    outs.append(None)       # degrade to per-request below
         exec_s = time.perf_counter() - t0
         batch_rows = sum(g.n_rows for g in plan)
         exec_us = exec_s * 1e6
         for g, out in zip(plan, outs):
+            if out is None:
+                self.stats.degraded_groups += 1
+                for i, p in zip(g.members, g.preps):
+                    results[i] = self._run_degraded(p, dls[i], g, batch_rows,
+                                                    exec_us)
+                continue
             off = 0
             for i, p in zip(g.members, g.preps):
                 sub = {k: v[off:off + p.n_rows] for k, v in out.items()}
@@ -305,9 +448,38 @@ class BatchRuntime:
                     value=p.finish(sub), group_rows=g.n_rows,
                     group_size=len(g.preps), batch_rows=batch_rows,
                     exec_us=exec_us, cached=g.cached)
+        health = kops.drain_health()
+        if health:
+            self.stats.absorb_health(health)
+            for r in results:
+                if r is not None:
+                    r.health = dict(health)
         self.stats.requests += len(preps)
         self.stats.batches += 1
         self.stats.groups += len(plan)
         self.stats.rows += batch_rows
         self.stats.exec_s += exec_s
         return results  # type: ignore[return-value]
+
+    def _run_degraded(self, p: Prepared, dl: Optional[float], g: Group,
+                      batch_rows: int, exec_us: float) -> RequestResult:
+        """Standalone execution of one member of a failed group."""
+        try:
+            if dl is not None and time.monotonic() > dl:
+                raise DeadlineExceeded(
+                    f"request expired before degraded execution "
+                    f"({p.n_rows} rows)")
+            if p.plan.backend.name == "numpy":
+                value = p.run()
+            else:
+                value = p.finish(kops.run_program_streaming(
+                    p.program, p.inputs, p.n_rows, p.plan, deadline=dl))
+            return RequestResult(
+                value=value, group_rows=g.n_rows, group_size=len(g.preps),
+                batch_rows=batch_rows, exec_us=exec_us, cached=g.cached,
+                degraded=True)
+        except Exception as e:
+            return RequestResult(
+                value=None, group_rows=g.n_rows, group_size=len(g.preps),
+                batch_rows=batch_rows, exec_us=exec_us, cached=g.cached,
+                degraded=True, error=classify_error(e)["error"])

@@ -1,0 +1,235 @@
+"""Fault injection + verified execution (DESIGN.md §12): deterministic
+fault maps, single-fault recovery bit-exactness across every schedule x
+layout, retry/remap exhaustion, deadlines, and the zero-overhead-when-off
+guarantee."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro import pim_ufunc as pim
+from repro.core.pim_numerics import program_for
+from repro.kernels import ops as kops
+from repro.kernels.plan import LAYOUTS, SCHEDULES
+from repro.runtime.faults import (DeadlineExceeded, FaultError, FaultModel,
+                                  VerifyPolicy, word_coords)
+
+
+def _operands(n=160, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 1 << 16, n).astype(np.uint16)
+    y = rng.integers(0, 1 << 16, n).astype(np.uint16)
+    return x, y, x.astype(np.uint64) + y
+
+
+PROG = program_for("int-serial", "add", 16)
+
+
+# ------------------------------------------------------------- fault maps
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError):
+        FaultModel(p_flip=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(p_dead_row=-0.1)
+    with pytest.raises(ValueError):
+        FaultModel(spare_base=33)           # must be 64-aligned
+    with pytest.raises(ValueError):
+        VerifyPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        VerifyPolicy(remap_after=0)
+
+
+def test_fault_maps_deterministic_and_subrange_consistent():
+    fm = FaultModel(seed=11, p_dead_row=0.03, p_stuck=0.05)
+    assert np.array_equal(fm.dead_rows(0, 4096), fm.dead_rows(0, 4096))
+    whole = fm.dead_rows(0, 4096)
+    lo = fm.dead_rows(0, 1000)
+    hi = fm.dead_rows(1000, 4096)
+    assert np.array_equal(whole, np.concatenate([lo, hi]))
+    w1, f1 = fm.stuck_cols(0, 256)
+    w2, f2 = fm.stuck_cols(0, 256)
+    assert np.array_equal(w1, w2) and np.array_equal(f1, f2)
+    # a different seed moves the map
+    other = FaultModel(seed=12, p_dead_row=0.03, p_stuck=0.05)
+    assert not np.array_equal(whole, other.dead_rows(0, 4096))
+
+
+def test_forced_faults_and_span_bad():
+    fm = FaultModel(seed=0, force_dead_rows=(70, 3), force_stuck=((2, 1),))
+    assert np.array_equal(fm.dead_rows(0, 100), [3, 70])
+    assert fm.span_bad(0, 64) and fm.span_bad(64, 64)
+    assert not fm.span_bad(128, 64)
+    w, fills = fm.stuck_cols(0, 8)
+    assert 2 in w and fills[list(w).index(2)] == 0xFFFFFFFF
+
+
+def test_transient_flips_attempt0_only():
+    fm = FaultModel(seed=0, force_flips=((1, 9),))
+    c0, r0 = fm.sample_flips(5, 0, 3, 4, 64)
+    c1, r1 = fm.sample_flips(5, 1, 3, 4, 64)
+    assert (1 in c0) and (9 in r0)          # forced flip fires on attempt 0
+    assert len(c1) == 0                     # ...and only attempt 0
+    # random flips vary by attempt but are reproducible
+    fm = FaultModel(seed=3, p_flip=0.02)
+    a = fm.sample_flips(5, 1, 8, 4, 64)
+    b = fm.sample_flips(5, 1, 8, 4, 64)
+    assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+
+
+def test_word_coords_roundtrip():
+    rows = np.array([0, 31, 32, 63, 64, 70, 127, 128])
+    for planes in (1, 2):
+        pl, w, bit = word_coords(rows, planes)
+        rpw = 32 * planes
+        assert np.array_equal(w * rpw + pl * 32 + bit, rows)
+
+
+def test_check_words_xor_fold():
+    import jax.numpy as jnp
+    blk = np.random.default_rng(0).integers(
+        0, 1 << 32, (5, 7), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(kops.check_words(jnp.asarray(blk), 0))
+    want = np.bitwise_xor.reduce(blk, axis=0)
+    assert np.array_equal(got, want)
+
+
+# -------------------------------------------------- plan-layer integration
+
+def test_plan_key_includes_faults_but_compile_key_does_not():
+    base = kops.make_plan(backend="ref")
+    faulty = kops.make_plan(backend="ref", faults=FaultModel(seed=1),
+                            verify=True)
+    assert base.key != faulty.key           # serving must never coalesce
+    assert base.compile_key == faulty.compile_key   # same compiled artifact
+
+
+def test_numpy_backend_rejects_faults():
+    with pytest.raises(ValueError):
+        kops.make_plan(backend="numpy", faults=FaultModel(seed=1))
+
+
+def test_ufunc_config_plumbs_faults_and_verify():
+    x, y, want = _operands(40)
+    with pim.options(faults=FaultModel(seed=3, force_flips=((0, 2),)),
+                     verify=True):
+        got = pim.add(x, y)
+    assert np.array_equal(got, want)
+    h = kops.drain_health()
+    assert h["faults_detected"] >= 1 and h["faults_corrected"] >= 1
+    # numpy drops faults/verify (it IS the oracle)
+    got = pim.add(x, y, backend="numpy", verify=True,
+                  faults=FaultModel(seed=1, p_flip=1.0))
+    assert np.array_equal(got, want) and not kops.drain_health()
+
+
+# ------------------------------------------- detect -> retry -> remap
+
+FAULT_KINDS = {
+    "flip": FaultModel(seed=5, force_flips=((1, 9),)),
+    "dead": FaultModel(seed=5, force_dead_rows=(70,)),
+    "stuck": FaultModel(seed=5, force_stuck=((1, 1),)),
+}
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+@pytest.mark.parametrize("kind", sorted(FAULT_KINDS))
+def test_single_fault_recovery_matrix(schedule, layout, kind):
+    """A single injected fault of each kind recovers bit-exactly vs the
+    numpy oracle on every schedule x layout, through the multi-chunk
+    streaming executor."""
+    x, y, want = _operands(seed=hash((schedule, layout, kind)) & 0xFFFF)
+    plan = kops.make_plan(backend="ref", schedule=schedule, layout=layout,
+                          chunk_rows=64, faults=FAULT_KINDS[kind],
+                          verify=VerifyPolicy(backoff_s=1e-5))
+    kops.drain_health()
+    got = kops.run_program_streaming(PROG, {"x": x, "y": y}, len(x), plan)
+    assert np.array_equal(got["z"], want)
+    h = kops.drain_health()
+    assert h.get("faults_detected", 0) + h.get("remapped_rows", 0) > 0
+
+
+def test_randomized_low_rate_faults_recover():
+    x, y, want = _operands(n=300, seed=7)
+    for seed in range(3):
+        plan = kops.make_plan(
+            backend="ref", chunk_rows=128,
+            faults=FaultModel(seed=seed, p_flip=2e-4, p_dead_row=1e-3),
+            verify=VerifyPolicy(backoff_s=1e-5))
+        got = kops.run_program_streaming(PROG, {"x": x, "y": y}, len(x),
+                                         plan)
+        assert np.array_equal(got["z"], want), seed
+    kops.drain_health()
+
+
+def test_unverified_faults_corrupt_observably():
+    x, y, want = _operands()
+    plan = kops.make_plan(backend="ref",
+                          faults=FaultModel(seed=1, force_flips=((0, 7),)))
+    got = kops.run_program(PROG, {"x": x, "y": y}, len(x), plan)
+    assert not np.array_equal(got["z"], want)
+    h = kops.drain_health()
+    assert h["faults_injected"] >= 1 and "faults_detected" not in h
+
+
+def test_retry_exhaustion_raises_fault_error():
+    x, y, _ = _operands(64)
+    plan = kops.make_plan(backend="ref",
+                          faults=FaultModel(seed=2, p_flip=1.0),
+                          verify=VerifyPolicy(max_retries=2, backoff_s=1e-6))
+    with pytest.raises(FaultError):
+        kops.run_program(PROG, {"x": x, "y": y}, len(x), plan)
+    h = kops.drain_health()
+    assert h["retries"] >= 2
+
+
+def test_media_scan_exhaustion_raises_fault_error():
+    x, y, _ = _operands(64)
+    plan = kops.make_plan(backend="ref",
+                          faults=FaultModel(seed=2, p_dead_row=1.0),
+                          verify=VerifyPolicy(scan_limit=4, backoff_s=1e-6))
+    with pytest.raises(FaultError):
+        kops.run_program(PROG, {"x": x, "y": y}, len(x), plan)
+    kops.drain_health()
+
+
+def test_verify_without_faults_is_clean_passthrough():
+    x, y, want = _operands(80)
+    plan = kops.make_plan(backend="ref", verify=True)
+    got = kops.run_program(PROG, {"x": x, "y": y}, len(x), plan)
+    assert np.array_equal(got["z"], want)
+    h = kops.drain_health()
+    assert "faults_detected" not in h and "retries" not in h
+
+
+def test_plain_plan_skips_verified_dispatch(monkeypatch):
+    """FaultModel unset + verify unset must cost nothing: the verified
+    dispatcher is never entered (the 0%-overhead guarantee)."""
+    def boom(*a, **k):
+        raise AssertionError("_verified_dispatch entered on a plain plan")
+    monkeypatch.setattr(kops, "_verified_dispatch", boom)
+    x, y, want = _operands(80)
+    plan = kops.make_plan(backend="ref", chunk_rows=32)
+    got = kops.run_program_streaming(PROG, {"x": x, "y": y}, len(x), plan)
+    assert np.array_equal(got["z"], want)
+
+
+# ----------------------------------------------------------- deadlines
+
+def test_streaming_deadline_raises():
+    x, y, _ = _operands(200)
+    plan = kops.make_plan(backend="ref", chunk_rows=32)
+    with pytest.raises(DeadlineExceeded):
+        kops.run_program_streaming(PROG, {"x": x, "y": y}, len(x), plan,
+                                   deadline=time.monotonic() - 1.0)
+
+
+def test_group_deadline_key():
+    x, y, _ = _operands(64)
+    specs = [dict(program=PROG, inputs={"x": x, "y": y}, n_rows=len(x),
+                  plan=kops.make_plan(backend="ref"),
+                  deadline=time.monotonic() - 1.0)]
+    with pytest.raises(DeadlineExceeded):
+        kops.run_program_groups(specs)

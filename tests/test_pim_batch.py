@@ -324,12 +324,20 @@ _BAD_LINES = ('{"op":"add","dtype":"uint8","x":[1,2],"y":[3,4]}\n'
 
 def _check_protocol_responses(lines):
     assert lines[0]["result"] == [4, 6]
-    assert "JSONDecodeError" in lines[1]["error"]
-    assert "unknown op" in lines[2]["error"]
-    assert "float16/float32" in lines[3]["error"]         # fp op, int dtype
-    assert "infer width" in lines[4]["error"]             # int op, fp dtype
-    assert "zero divisor" in lines[5]["error"]
-    assert "KeyError" in lines[6]["error"]
+    # structured error taxonomy (DESIGN.md §12): {"code","message",
+    # "retriable"}; request-shape failures are never retriable
+    assert lines[1]["error"]["code"] == "bad_json"
+    assert "JSONDecodeError" in lines[1]["error"]["message"]
+    assert lines[1]["error"]["retriable"] is False
+    assert lines[2]["error"]["code"] == "bad_request"
+    assert "unknown op" in lines[2]["error"]["message"]
+    assert lines[2]["error"]["retriable"] is False
+    assert "float16/float32" in lines[3]["error"]["message"]  # fp op, int dt
+    assert "infer width" in lines[4]["error"]["message"]  # int op, fp dtype
+    assert "zero divisor" in lines[5]["error"]["message"]
+    assert "KeyError" in lines[6]["error"]["message"]
+    assert all(lines[i]["error"]["code"] == "bad_request"
+               for i in range(3, 7))
     assert (lines[7]["q"], lines[7]["r"]) == ([3], [2])
 
 
@@ -435,3 +443,187 @@ def test_bench_serve_rows_and_compare_gate_smoke(tmp_path):
     # bar is looser so a loaded CI host cannot flake it
     assert batched["rows_per_s"] > 1.2 * serial["rows_per_s"]
     assert batched["speedup_vs_serial"] >= 1.2
+
+
+# ----------------------------------------- fault tolerance & admission
+# (DESIGN.md §12: backpressure, deadlines, degradation, error taxonomy)
+
+from repro.runtime.faults import FaultModel  # noqa: E402
+
+
+def _drive(lines, **kw):
+    """Run serve_pim_batched over a canned request list; returns (parsed
+    responses in order, the summary dict)."""
+    text = "\n".join(json.dumps(l) if isinstance(l, dict) else l
+                     for l in lines) + "\n"
+    outp = io.StringIO()
+    kw.setdefault("window_ms", 0)
+    info = serve.serve_pim_batched(io.StringIO(text), outp, stats=False,
+                                   **kw)
+    return [json.loads(s) for s in outp.getvalue().splitlines()], info
+
+
+def test_batch_queue_backpressure_offer():
+    q = pb.BatchQueue(window_ms=0, max_queue_rows=16)
+    assert q.offer("a", 8) and q.offer("b", 8)
+    assert not q.offer("c", 8)              # 16 pending + 8 > 16
+    assert q.collect() == ["a", "b"]        # draining frees the backlog
+    assert q.offer("big", 100)              # oversized admits on empty queue
+    q.close()
+    assert q.collect() == ["big"] and q.collect() is None
+
+
+def test_classify_error_taxonomy():
+    from repro.runtime.faults import DeadlineExceeded, FaultError
+    assert pb.classify_error(ValueError("x"))["error"] == {
+        "code": "bad_request", "message": "ValueError: x",
+        "retriable": False}
+    assert pb.classify_error(DeadlineExceeded("x"))["error"]["code"] == \
+        "deadline_exceeded"
+    assert pb.classify_error(FaultError("x"))["error"] == {
+        "code": "exec_failed", "message": "FaultError: x",
+        "retriable": True}
+    assert pb.classify_error(RuntimeError("x"))["error"]["retriable"]
+
+
+def test_serve_backpressure_flood_no_deadlock_no_loss():
+    """Flood far past the admission cap: every request gets exactly one
+    response (nothing lost, nothing deadlocked), rejections are structured
+    retriable 'overloaded' errors, and admitted requests stay correct."""
+    reqs = [{"op": "add", "dtype": "uint16",
+             "x": list(range(8)), "y": list(range(8))} for _ in range(40)]
+    rs, info = _drive(reqs, max_queue_rows=16)
+    assert len(rs) == 40 and info["served"] == 40
+    ok = [r for r in rs if "result" in r]
+    rej = [r for r in rs if "error" in r]
+    assert len(ok) + len(rej) == 40 and len(ok) >= 1 and len(rej) >= 1
+    assert all(r["error"]["code"] == "overloaded" and
+               r["error"]["retriable"] is True for r in rej)
+    assert all(r["result"] == [2 * i for i in range(8)] for r in ok)
+    assert info["rejected"] == len(rej)
+
+
+def test_serve_deadline_default_and_per_request():
+    # server-wide deadline_ms=0: everything expires at dequeue
+    rs, info = _drive([{"op": "add", "dtype": "uint8", "x": [1], "y": [2]}],
+                      deadline_ms=0.0)
+    assert rs[0]["error"]["code"] == "deadline_exceeded"
+    assert rs[0]["error"]["retriable"] is True and info["expired"] == 1
+    # per-request deadline_ms overrides the server default
+    rs, info = _drive([{"op": "add", "dtype": "uint8", "x": [1], "y": [2],
+                        "deadline_ms": 60000}], deadline_ms=0.0)
+    assert rs[0]["result"] == [3] and info["expired"] == 0
+
+
+def test_partial_group_failure_degrades_not_batch():
+    """One poisoned member of a group: the healthy member of the SAME
+    group and every other group still serve bit-exactly; only the
+    poisoned request errors (PR 4's fallback, now chunk-of-blast-radius
+    = one request)."""
+    x = np.arange(50, dtype=np.uint16)
+    y = x[::-1].copy()
+    good = pim.prepare("add", x, y)
+    bad = pim.prepare("add", x, y)
+    bad.inputs["y"] = np.array(["nope"] * 50, dtype=object)  # unpackable
+    other = pim.prepare("mul", x[:8], y[:8])
+    rt = pb.BatchRuntime(pin_cap=4)
+    rs = rt.execute([good, bad, other])
+    assert not rs[2].degraded and np.array_equal(
+        rs[2].value, x[:8].astype(np.uint64) * y[:8])
+    assert rs[0].degraded and rs[0].error is None
+    assert np.array_equal(rs[0].value, x.astype(np.uint64) + y)
+    assert rs[1].degraded and rs[1].error["code"] == "bad_request"
+    assert rt.stats.degraded_groups == 1
+    rt.close()
+
+
+def test_group_exec_failure_degrades_per_request():
+    """A group whose verified execution exhausts retries (hard fault
+    rate) degrades; the other group in the batch is untouched."""
+    x = np.arange(30, dtype=np.uint16)
+    y = (x * 5).astype(np.uint16)
+    with pim.options(faults=FaultModel(seed=2, p_flip=1.0), verify=True):
+        doomed = pim.prepare("add", x[:10], y[:10])
+    rt = pb.BatchRuntime(pin_cap=4)
+    rs = rt.execute([pim.prepare("add", x, y), doomed])
+    assert rs[0].error is None and np.array_equal(
+        rs[0].value, x.astype(np.uint64) + y)
+    assert rs[1].degraded and rs[1].error["code"] == "exec_failed"
+    assert rs[1].error["retriable"] is True
+    rt.close()
+    kops.drain_health()
+
+
+def test_verified_faulty_serving_bit_exact_with_health():
+    with pim.options(faults=FaultModel(seed=4, force_flips=((0, 3),)),
+                     verify=True):
+        rs, info = _drive([{"op": "add", "dtype": "uint16",
+                            "x": [10, 20], "y": [30, 40]}])
+    assert rs[0]["result"] == [40, 60]
+    assert rs[0]["health"]["faults_corrected"] >= 1
+    assert info["faults_corrected"] >= 1 and info["retries"] >= 1
+
+
+def test_reader_thread_error_mid_stream_keeps_serving(monkeypatch):
+    """A reader-side crash on one line becomes a structured 'internal'
+    response; later lines still serve."""
+    real = serve._pim_prepare_request
+
+    def flaky(req):
+        if req.get("op") == "crashme":
+            raise RuntimeError("reader exploded")
+        return real(req)
+
+    monkeypatch.setattr(serve, "_pim_prepare_request", flaky)
+    rs, info = _drive([{"op": "crashme", "x": [1], "y": [1]},
+                       {"op": "add", "dtype": "uint8", "x": [2], "y": [3]}])
+    assert rs[0]["error"]["code"] == "internal"
+    assert rs[0]["error"]["retriable"] is True
+    assert rs[1]["result"] == [5]
+
+
+def test_eof_mid_stream_answers_admitted_requests():
+    """The input stream dying mid-iteration (reader-thread exception)
+    still answers everything admitted before the death -- the queue is
+    closed in the reader's finally, so the main loop drains and exits
+    instead of deadlocking."""
+    class DyingStream:
+        def __iter__(self):
+            yield '{"op":"add","dtype":"uint8","x":[1],"y":[2]}\n'
+            yield '{"op":"mul","dtype":"uint8","x":[3],"y":[4]}\n'
+            raise OSError("stream torn down")
+
+    outp = io.StringIO()
+    info = serve.serve_pim_batched(DyingStream(), outp, window_ms=25,
+                                   stats=False)
+    rs = [json.loads(s) for s in outp.getvalue().splitlines()]
+    assert info["served"] == 2
+    assert rs[0]["result"] == [3] and rs[1]["result"] == [12]
+
+
+def test_serve_heartbeat_and_straggler_counters(tmp_path):
+    hb = tmp_path / "HEARTBEAT"
+    rs, info = _drive([{"op": "add", "dtype": "uint8", "x": [1], "y": [2]}],
+                      heartbeat=str(hb))
+    assert rs[0]["result"] == [3]
+    assert hb.exists() and hb.read_text().split()[0].isdigit()
+    assert info["stragglers"] == 0          # single batch cannot spike
+
+
+def test_serve_faulty_cli_smoke():
+    """--pim-serve subprocess under a nonzero fault rate with verified
+    execution: responses stay bit-exact (the whole point of DESIGN §12),
+    and the stats line carries the health counters."""
+    reqs = ('{"op":"add","dtype":"uint16","x":[100,200],"y":[55,45]}\n'
+            '{"op":"mul","dtype":"uint8","x":[12],"y":[12]}\n')
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--pim-serve",
+         "--pim-window-ms", "25", "--pim-verify",
+         "--pim-fault-flip", "2e-4", "--pim-fault-seed", "7"],
+        input=reqs, cwd=REPO, env=_env(), capture_output=True, text=True,
+        timeout=420)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    lines = [json.loads(l) for l in proc.stdout.splitlines()]
+    assert lines[0]["result"] == [155, 245]
+    assert lines[1]["result"] == [144]
+    assert "pim-serve:" in proc.stderr and "faults=" in proc.stderr

@@ -414,4 +414,6 @@ def test_serve_request_layout_key():
     assert r["result"] == [11, 22]
     bad = serve.pim_request({"op": "add", "dtype": "uint8",
                              "x": [1], "y": [2], "layout": "rows128"})
-    assert "unknown layout" in bad["error"]
+    assert bad["error"]["code"] == "bad_request"
+    assert not bad["error"]["retriable"]
+    assert "unknown layout" in bad["error"]["message"]

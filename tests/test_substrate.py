@@ -16,7 +16,8 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, DataIterator, batch_at
 from repro.optim import adamw
 from repro.runtime.elastic import choose_mesh
-from repro.runtime.fault_tolerance import StragglerMonitor, train_loop
+from repro.runtime.fault_tolerance import StragglerMonitor
+from repro.runtime.train_loop import train_loop
 
 
 def test_adamw_converges_quadratic():

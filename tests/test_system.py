@@ -12,7 +12,7 @@ from repro.configs.registry import ARCHS
 from repro.data.pipeline import DataConfig, DataIterator
 from repro.models import model as M
 from repro.optim import adamw
-from repro.runtime.fault_tolerance import train_loop
+from repro.runtime.train_loop import train_loop
 from repro.launch.steps import make_train_step
 
 

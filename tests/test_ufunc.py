@@ -295,7 +295,8 @@ def test_serve_pim_request_roundtrip():
     assert "error" in r
     r = serve.pim_request({"op": "div", "dtype": "uint8",
                            "x": [1], "y": [0]})
-    assert "zero divisor" in r["error"]
+    assert r["error"]["code"] == "bad_request"
+    assert "zero divisor" in r["error"]["message"]
 
 
 def test_serve_pim_stdin_loop():
