@@ -1026,6 +1026,78 @@ def _alloc_slots(low, n0, va, vb, out_val, kept, glevel, depth, last_use,
         copy_gates=copy_gates)
 
 
+def compose(nodes, outputs) -> Program:
+    """Stitch per-op gate programs into one fused netlist (cross-op fusion).
+
+    ``nodes`` is a sequence of ``(program, bindings)``; ``bindings`` maps
+    every declared in-port of that program to a source:
+
+    * ``("ext", name, width)`` -- an external input port of the composite
+      (allocated on first use; later references share the same cells);
+    * ``("node", idx, port)``  -- out-port ``port`` of an earlier node.
+
+    ``outputs`` maps composite out-port names to ``(node_idx, port_name)``.
+
+    Producer out-cells are wired *directly* onto consumer in-cells in one
+    shared cell space; :func:`levelize`'s SSA value numbering then dissolves
+    the WAW/WAR hazards of the concatenated instruction streams and its DCE
+    removes every intermediate value not reachable from a declared output --
+    fused intermediates never materialize as port unpacks.  When a consumer
+    port is wider than its source, the high bits read a shared constant-0
+    cell (zero extension); when narrower, the source truncates.  A node that
+    writes any of its own input-port cells gets isolation copies (``G.ID``)
+    on that port so the shared producer cells stay intact for other readers.
+    """
+    b = Builder()
+    ext_cells: Dict[str, List[int]] = {}
+    node_ports: List[Dict[str, List[int]]] = []
+    for prog, bindings in nodes:
+        if not prog.in_ports:
+            raise ValueError(
+                "compose() requires programs with declared in_ports")
+        missing = prog.in_ports - set(bindings)
+        if missing:
+            raise ValueError(f"unbound in-ports: {sorted(missing)}")
+        written = {c for ins in prog.instrs for c in ins.outs}
+        cmap: Dict[int, int] = {}
+        for pname in sorted(prog.in_ports):
+            src_spec = bindings[pname]
+            if src_spec[0] == "ext":
+                _, ename, ewidth = src_spec
+                if ename not in ext_cells:
+                    ext_cells[ename] = b.input(ename, ewidth)
+                src = list(ext_cells[ename])
+            elif src_spec[0] == "node":
+                _, nidx, oport = src_spec
+                src = list(node_ports[nidx][oport])
+            else:
+                raise ValueError(f"unknown binding {src_spec!r}")
+            pcells = prog.ports[pname]
+            if len(src) < len(pcells):          # zero-extend
+                src = src + [b.const(0)] * (len(pcells) - len(src))
+            else:                               # truncate
+                src = src[:len(pcells)]
+            if any(c in written for c in pcells):
+                src = [b.id_(s) for s in src]   # isolation copies
+            for c, s in zip(pcells, src):
+                cmap[c] = s
+
+        def m(c, _cmap=cmap):
+            s = _cmap.get(c)
+            if s is None:
+                s = _cmap[c] = b.alloc()
+            return s
+
+        for ins in prog.instrs:
+            b.emit(ins.op, tuple(m(c) for c in ins.ins),
+                   tuple(m(c) for c in ins.outs))
+        node_ports.append({p: [m(c) for c in prog.ports[p]]
+                           for p in prog.ports if p not in prog.in_ports})
+    for oname, (nidx, pname) in sorted(outputs.items()):
+        b.output(oname, node_ports[nidx][pname])
+    return b.finish()
+
+
 def memoize_build(fn):
     """Memoize a ``build_*`` program constructor by its arguments.
 

@@ -15,7 +15,7 @@ from typing import Dict
 
 import numpy as np
 
-from . import bitparallel, bitserial, bitparallel_fp, bitserial_fp
+from . import bitparallel, bitserial, bitparallel_fp, bitserial_fp, gates
 from .floatfmt import FORMATS, FloatFormat
 from ..kernels import ops as kops
 
@@ -58,6 +58,196 @@ def program_for(kind: str, op: str, width_or_fmt):
             "div": lambda f: bitparallel_fp.build_bp_fp_div(f),
         }[op](fmt)
     raise ValueError(kind)
+
+
+@gates.memoize_build
+def build_identity(n: int):
+    """``z <- x``, an ``n``-bit copy program: the degenerate row stage of a
+    reduction over raw values (``pim.reduce_sum`` on a plain array)."""
+    b = gates.Builder()
+    x = b.input("x", n)
+    b.output("z", b.vec_id(x))
+    return b.finish()
+
+
+# Output width of a fused int node at operand width ``W`` (both operands
+# zero-extended to W): the same conventions as the per-op programs.
+_INT_OUT_WIDTH = {"add": lambda w: w + 1, "sub": lambda w: w,
+                  "mul": lambda w: 2 * w}
+
+#: Ops the cross-op composer fuses.  Division (data-dependent iteration
+#: structure, two result ports) and the bit-parallel builders (partition
+#: schedules are per-program artifacts that do not concatenate) fall back
+#: to per-op execution -- see DESIGN.md §13.
+FUSABLE_OPS = frozenset(_INT_OUT_WIDTH)
+
+
+@functools.lru_cache(maxsize=None)
+def fused_program_for(kind: str, graph: tuple, fmt: str = None):
+    """One fused Program for a canonical expression graph (cross-op SSA).
+
+    ``graph`` is a topological tuple of entries: ``("in", name, width)``
+    declares a leaf input port (``width`` is ignored for fp kinds -- every
+    fp value is an ``fmt`` bit pattern), and ``(op, i, j)`` applies a
+    binary op to earlier entries ``i``/``j``.  The last entry is the
+    result, exposed as out-port ``"z"``.
+
+    kind: 'int-serial' (operands zero-extend to the wider width; add grows
+    one bit, mul doubles, sub wraps) or 'fp-serial' (all values are
+    ``fmt`` bit patterns).  The per-op programs are stitched into one
+    netlist by :func:`repro.core.gates.compose`; ``levelize`` then
+    value-numbers and DCEs across the op boundaries, so intermediates
+    never materialize as port unpacks.  Memoized, like :func:`program_for`.
+    """
+    if kind not in ("int-serial", "fp-serial"):
+        raise ValueError(f"unfusable kind {kind!r}")
+    is_fp = kind == "fp-serial"
+    nbits = FORMATS[fmt].nbits if is_fp else None
+    nodes = []
+    info = []       # per graph entry: ("ext", name, width) | ("node", idx,
+    #                 port, width) -- a compose() binding plus its width
+    for e in graph:
+        if e[0] == "in":
+            _, name, width = e
+            info.append(("ext", name, nbits if is_fp else int(width)))
+            continue
+        op, i, j = e
+        if op not in FUSABLE_OPS:
+            raise ValueError(f"op {op!r} does not fuse")
+        bi, bj = info[i], info[j]
+        if is_fp:
+            prog = program_for("fp-serial", op, fmt)
+            w_out = nbits
+        else:
+            w = max(bi[-1], bj[-1])
+            prog = program_for("int-serial", op, w)
+            w_out = _INT_OUT_WIDTH[op](w)
+        nodes.append((prog, {"x": bi[:3], "y": bj[:3]}))
+        info.append(("node", len(nodes) - 1, "z", w_out))
+    last = info[-1]
+    if last[0] == "ext":        # bare leaf: route through an identity copy
+        nodes.append((build_identity(last[2]), {"x": last}))
+        last = ("node", len(nodes) - 1, "z", last[2])
+    return gates.compose(nodes, {"z": (last[1], last[2])})
+
+
+def fused_out_width(kind: str, graph: tuple, fmt: str = None) -> int:
+    """Bit width of the fused graph's ``z`` port (without building it)."""
+    if kind == "fp-serial":
+        return FORMATS[fmt].nbits
+    widths = []
+    for e in graph:
+        if e[0] == "in":
+            widths.append(int(e[2]))
+        else:
+            op, i, j = e
+            widths.append(_INT_OUT_WIDTH[op](max(widths[i], widths[j])))
+    return widths[-1]
+
+
+# ---------------------------------------------------------------------------
+# log-depth in-memory tree reduction across the row axis
+# ---------------------------------------------------------------------------
+
+def tree_reduce_rows(row_program, inputs: Dict[str, np.ndarray],
+                     total_rows: int, group: int, *, kind: str,
+                     fmt: str = None, plan=None, fused: bool = True
+                     ) -> np.ndarray:
+    """Sum ``row_program``'s per-row ``z`` outputs down the row axis in
+    log2(total_rows/group) in-memory adder levels; returns the ``group``
+    reduced row values (uint64, or object ints for wide accumulators).
+
+    Row ``r`` belongs to reduction lane ``r % group`` (callers lay out
+    GEMV operands as ``r = j*group + m``); lane sums accumulate pairwise:
+    level at span R adds rows [0, R/2) to rows [R/2, R).  ``total_rows``
+    must be ``group`` times a power of two and ``group`` either a power of
+    two (< 32) or a multiple of 32 -- exactly the alignments under which a
+    tree level is a word slice (or an in-word bit shift) of the packed
+    block, so intermediate sums never leave the packed domain: one pack on
+    the way in, one unpack of the final ``group`` rows on the way out
+    (``kernels.ops.dispatch_packed``).
+
+    kind/'fmt' select the adder ('int-serial' grows one carry bit per
+    level; 'fp-serial' adds ``fmt`` bit patterns under RNE -- the result
+    is the *tree order* sum, bit-exact vs the same-shaped host tree, not
+    vs a sequential accumulation).  Zero rows are the padding identity:
+    int adds propagate 0 exactly and ``fp_add(x, +0) == x`` / ``fp_mul(
+    +0, +0) == +0`` under RNE, so lanes padded to the power of two read
+    back their true sums.
+
+    ``fused=False`` (or a non-jax backend) runs the same pairing through
+    per-op ``run_program`` round trips -- the bit-identical reference the
+    fused path is benchmarked against.
+    """
+    plan = kops.make_plan(plan=plan)
+    R = int(total_rows)
+    group = int(group)
+    spans = R // group
+    if group <= 0 or R != group * spans or spans & (spans - 1):
+        raise ValueError(
+            f"total_rows ({R}) must be group ({group}) x a power of two")
+    if group >= 32 and group % 32:
+        raise ValueError(f"group {group} must be a power of two or a "
+                         "multiple of 32")
+    if group < 32 and group & (group - 1):
+        raise ValueError(f"group {group} must be a power of two below 32")
+    if kind not in ("int-serial", "fp-serial"):
+        raise ValueError(f"unreducible kind {kind!r}")
+    is_fp = kind == "fp-serial"
+    w = len(row_program.ports["z"])
+
+    def adder(width):
+        return (program_for("fp-serial", "add", fmt) if is_fp
+                else program_for("int-serial", "add", width))
+
+    if not fused or not plan.backend.is_jax or plan.layout.planes != 1 \
+            or plan.faults is not None or plan.verify is not None:
+        # value-domain reference: same pairing, per-op round trips
+        vals = kops.run_program(row_program, inputs, R, plan)["z"]
+        while R > group:
+            half = R // 2
+            out = kops.run_program(adder(w), {"x": vals[:half],
+                                              "y": vals[half:R]},
+                                   half, plan)
+            vals = out["z"]
+            if not is_fp:
+                w += 1
+            R = half
+        return vals[:group]
+
+    if set(kops.output_names(row_program)) != {"z"}:
+        raise ValueError("tree_reduce_rows needs a row program with the "
+                         "single out-port 'z'")
+    block = kops.dispatch_packed(row_program, R, plan, inputs=inputs)()
+    while R > group:
+        half = R // 2
+        if half % 32 == 0:
+            hw = half // 32
+            x, y = block[:, :hw], block[:, hw:2 * hw]
+        else:               # whole span fits one word: lanes shift in-word
+            x, y = block, block >> np.uint32(half)
+        block = kops.dispatch_packed(
+            adder(w), half, plan, in_names=("x", "y"),
+            in_block=np.concatenate([x, y], axis=0))()
+        if not is_fp:
+            w += 1
+        R = half
+    return kops._unpack_sub(block, [("z", w)], group)["z"]
+
+
+def reduce_group(n_out: int) -> int:
+    """The packed-domain lane count for ``n_out`` reduction outputs: the
+    next power of two below 32, a multiple of 32 above (the alignments
+    :func:`tree_reduce_rows` accepts)."""
+    n = int(n_out)
+    if n < 1:
+        raise ValueError(f"n_out must be >= 1, got {n}")
+    if n >= 32:
+        return (n + 31) // 32 * 32
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
 
 
 _NP_FMT = {np.dtype(np.float16): "fp16", np.dtype(np.float32): "fp32"}
@@ -140,23 +330,33 @@ def pim_linear_i8(unit: PIMVectorUnit, x: np.ndarray, w: np.ndarray
                   ) -> np.ndarray:
     """int8 GEMM on the PIM unit: y[m,n] = sum_k x[m,k] w[k,n].
 
-    Lowered as K element-parallel multiply+accumulate sweeps over M*N rows
-    (zero data movement between steps in a real PIM: the accumulator column
-    stays in place).  Inputs int8 as offset-binary uint16; accumulation in
-    uint32 (wide enough for K*2^16).
+    Lowered onto the fused reduction tree (:func:`tree_reduce_rows`): each
+    output (m, n) is a packed-domain lane, the K products land at rows
+    ``j*group + lane``, one element-parallel 16-bit multiply computes all
+    M*N*K products at once, and log2(K) in-memory adder levels fold them --
+    the intermediate sums never leave the packed word domain (the per-op
+    multiply+accumulate round-trip loop this replaces paid the host bridge
+    K times).  Inputs int8 as offset-binary uint16; the 32-bit products
+    grow one carry bit per tree level.
     """
     m, k = x.shape
     k2, n = w.shape
     assert k == k2
     xo = (x.astype(np.int32) + 128).astype(np.uint16)   # offset binary
     wo = (w.astype(np.int32) + 128).astype(np.uint16)
-    acc = np.zeros((m, n), np.uint64)
-    for j in range(k):
-        xi = np.broadcast_to(xo[:, j:j + 1], (m, n)).copy()
-        wj = np.broadcast_to(wo[j:j + 1, :], (m, n)).copy()
-        prod = unit.mul(xi, wj).astype(np.uint64)       # exact 32-bit products
-        acc32 = unit.add(acc.astype(np.uint32), prod.astype(np.uint32))
-        acc = acc32.astype(np.uint64)
+    group = reduce_group(m * n)
+    kp = 1
+    while kp < k:
+        kp <<= 1
+    xa = np.zeros((kp, group), np.uint64)
+    xb = np.zeros((kp, group), np.uint64)
+    xa[:k, :m * n] = np.repeat(xo.T, n, axis=1)         # lane m*n + j -> x[m,k]
+    xb[:k, :m * n] = np.tile(wo, (1, m))
+    acc = tree_reduce_rows(
+        program_for("int-serial", "mul", 16),
+        {"x": xa.ravel(), "y": xb.ravel()}, kp * group, group,
+        kind="int-serial", plan=kops.make_plan(backend=unit.backend))
+    acc = np.asarray(acc[:m * n], np.uint64).reshape(m, n)
     # undo the offset: sum (x+128)(w+128) = xw + 128*sx + 128*sw + K*128^2
     sx = x.astype(np.int64).sum(1, keepdims=True)
     sw = w.astype(np.int64).sum(0, keepdims=True)

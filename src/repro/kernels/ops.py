@@ -94,6 +94,20 @@ def make_plan(**kw) -> ExecPlan:
 
 _COMPILED_CAP = 64
 
+# Fused compound programs (expression chains, GEMV stages) are often orders
+# of magnitude larger than single-op programs, so the cache is bounded by
+# total *schedule weight* -- sum over entries of levels x slot width, a
+# proxy for the device buffers an entry pins -- as well as by entry count.
+# Without the weight bound, one fused GEMV whose entry counts as "1" could
+# silently displace the entire hot set of small programs.
+_COMPILED_WEIGHT_CAP = 8 << 20
+
+# Weight-triggered eviction never shrinks the cache below this many
+# unpinned entries: when a single entry's weight exceeds the whole cap, the
+# most recently used entries (including that entry) stay resident instead
+# of thrashing on every call.
+_COMPILED_MIN_RESIDENT = 4
+
 _key_memo: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 _compiled: "collections.OrderedDict[tuple, _Compiled]" = \
     collections.OrderedDict()
@@ -108,7 +122,9 @@ _pinned: Dict[tuple, int] = {}
 
 
 def _evict_over_cap(protect: Optional[tuple] = None) -> None:
-    """Drop least-recently-used *unpinned* entries down to the cap.
+    """Drop least-recently-used *unpinned* entries while over either cap:
+    entry count (``_COMPILED_CAP``) or total schedule weight
+    (``_COMPILED_WEIGHT_CAP``, sum of per-entry levels x slot width).
 
     ``protect`` exempts one key -- the entry a caller just created or
     touched.  Without it, a cache whose cap is saturated by pinned entries
@@ -116,25 +132,44 @@ def _evict_over_cap(protect: Optional[tuple] = None) -> None:
     would keep building artifacts on an orphaned object that the next
     lookup (or a later ``pin_program``) silently replaces, so the work is
     lost and a pin can land on an empty twin.  (The pinned-vs-cap audit of
-    ISSUE 5; regression-tested in tests/test_plan.py.)"""
-    if len(_compiled) <= _COMPILED_CAP:
-        return
+    ISSUE 5; regression-tested in tests/test_plan.py.)
+
+    Weight-only pressure (count under cap, weight over) stops once at most
+    ``_COMPILED_MIN_RESIDENT`` unpinned entries would remain, so a single
+    oversized fused program can never purge the whole hot set -- and stays
+    resident itself rather than recompiling on every call."""
+    weight = sum(e.weight for e in _compiled.values())
     for key in list(_compiled):
-        if len(_compiled) <= _COMPILED_CAP:
+        over_n = len(_compiled) > _COMPILED_CAP
+        over_w = weight > _COMPILED_WEIGHT_CAP
+        if not (over_n or over_w):
             break
-        if key not in _pinned and key != protect:
-            del _compiled[key]
+        if key in _pinned or key == protect:
+            continue
+        if not over_n:      # weight pressure only: respect the floor
+            unpinned = sum(1 for k in _compiled
+                           if k not in _pinned and k != protect)
+            if unpinned <= _COMPILED_MIN_RESIDENT:
+                break
+        weight -= _compiled[key].weight
+        del _compiled[key]
 
 
-def set_compiled_cache_cap(cap: int) -> int:
-    """Set the compiled-program LRU capacity (entries); returns the old cap.
-    Shrinking evicts least-recently-used unpinned entries immediately;
-    pinned entries always survive, even when the new cap is smaller than
-    the pinned count (the cache then runs over cap until pins release)."""
-    global _COMPILED_CAP
+def set_compiled_cache_cap(cap: int, weight_cap: Optional[int] = None) -> int:
+    """Set the compiled-program LRU capacity (entries) and, optionally, the
+    total schedule-weight cap (levels x slots summed over entries); returns
+    the old entry cap.  Shrinking evicts least-recently-used unpinned
+    entries immediately; pinned entries always survive, even when the new
+    cap is smaller than the pinned count (the cache then runs over cap
+    until pins release)."""
+    global _COMPILED_CAP, _COMPILED_WEIGHT_CAP
     if cap < 1:
         raise ValueError(f"cache cap must be >= 1, got {cap}")
     old, _COMPILED_CAP = _COMPILED_CAP, cap
+    if weight_cap is not None:
+        if weight_cap < 1:
+            raise ValueError(f"weight cap must be >= 1, got {weight_cap}")
+        _COMPILED_WEIGHT_CAP = weight_cap
     _evict_over_cap()
     return old
 
@@ -265,6 +300,14 @@ class _Compiled:
     resolved: Dict[tuple, _Resolved] = dataclasses.field(default_factory=dict)
     static_chain: Dict[tuple, Callable] = dataclasses.field(
         default_factory=dict)
+
+    @property
+    def weight(self) -> int:
+        """Schedule size this entry holds resident: levels x slot width,
+        summed over its levelized allocations -- the proxy the LRU's
+        weight cap (``_COMPILED_WEIGHT_CAP``) bounds."""
+        return sum(int(s.n_levels) * int(s.width)
+                   for s in self.scheds.values())
 
     def get_arrays(self, program):
         if self.arrays is None:
@@ -891,10 +934,27 @@ def _needs_ft(plan: ExecPlan) -> bool:
 # execution
 # --------------------------------------------------------------------------
 
+def _fit_packed(block: np.ndarray, n_words: int) -> np.ndarray:
+    """Fit a pre-packed word block to the dispatch's padded word count:
+    zero-pad the trailing word axis (pad rows are all-zero by the packing
+    contract) or reject a block wider than the padded shape."""
+    have = block.shape[-1]
+    if have == n_words:
+        return block
+    if have > n_words:
+        raise ValueError(
+            f"packed input has {have} words, dispatch shape allows "
+            f"{n_words}")
+    pad = np.zeros(block.shape[:-1] + (n_words - have,), np.uint32)
+    return np.concatenate([block, pad], axis=-1)
+
+
 def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                         plan: ExecPlan,
                         pad_rows: Optional[int] = None, *,
-                        fctx: Optional[_FaultCtx] = None) -> Callable:
+                        fctx: Optional[_FaultCtx] = None,
+                        packed_in: Optional[np.ndarray] = None,
+                        packed_out: bool = False) -> Callable:
     """Pack ``inputs`` and dispatch one levelized execution under ``plan``;
     returns a zero-arg ``finalize`` that blocks on the device result and
     unpacks it.
@@ -903,6 +963,14 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
     packing of the next chunk with device execution of this one -- the
     streaming executor's pipeline.  ``pad_rows`` fixes the padded row count
     (>= n_rows) so every streaming chunk shares one compiled shape.
+
+    ``packed_in``/``packed_out`` keep the data in the packed word domain
+    (the in-memory composition contract behind :func:`dispatch_packed`):
+    ``packed_in`` replaces host packing with a caller-supplied word block
+    whose cell axis stacks the in-ports' cells in sorted-name order
+    (``inputs`` then only names the ports), and ``packed_out`` makes
+    ``finalize`` return the raw packed output block (out-ports stacked in
+    ``output_names`` order) instead of unpacked row values.
     """
     comp = compiled(program, plan)
     in_names = sorted(inputs)
@@ -914,8 +982,11 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
     n_words = layout.n_words(n_rows if pad_rows is None else pad_rows,
                              pad_to)
     is_pallas = backend.name == "pallas"
-    vals = [np.asarray(inputs[n]) for n in in_names]
-    if r.fused_ok and all(v.dtype != object for v in vals):
+    use_fused = r.fused_ok and packed_in is None and not packed_out
+    if use_fused:
+        vals = [np.asarray(inputs[n]) for n in in_names]
+        use_fused = all(v.dtype != object for v in vals)
+    if use_fused:
         # fused fast path: the bit transposes run inside the executor's
         # XLA program; only (n_ports, n_rows) uint32 cross the boundary
         pad_rows_total = n_words * 32 * planes
@@ -966,7 +1037,14 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
             return {n: o[p, :n_rows].astype(np.uint64)
                     for p, n in enumerate(r.names)}
         return finalize
-    if in_names:
+    if packed_in is not None:
+        k_in = sum(len(r.sched.pack_cells(n)) for n in in_names)
+        if packed_in.shape[-2] != k_in:
+            raise ValueError(
+                f"packed input stacks {packed_in.shape[-2]} cells, "
+                f"in-ports {in_names} need {k_in}")
+        in_rows = _fit_packed(packed_in, n_words)
+    elif in_names:
         in_rows = np.concatenate(
             [_pack_port_words(inputs[n], len(r.sched.pack_cells(n)),
                               n_words, layout) for n in in_names], axis=-2)
@@ -997,10 +1075,12 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                                 in_rows.ndim, **static)(
                 jnp.asarray(in_rows), r.in_idx, r.la, r.lb, r.lo, r.out_idx)
 
-    def finalize() -> Dict[str, np.ndarray]:
+    def finalize():
         s = np.asarray(sub)
         if fctx is not None:
             s = fctx.process_packed(s, r.sched.n_levels, None)
+        if packed_out:
+            return s
         return _unpack_sub(s,
                            [(n, len(r.sched.ports[n])) for n in r.names],
                            n_rows)
@@ -1149,6 +1229,49 @@ def dispatch_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
                                   _VerifyRun(plan), 0)
     return _dispatch_levelized(program, inputs, n_rows, plan,
                                pad_rows=pad_rows)
+
+
+def dispatch_packed(program, n_rows: int, plan=None, *,
+                    inputs: Optional[Dict[str, np.ndarray]] = None,
+                    in_block: Optional[np.ndarray] = None,
+                    in_names: Optional[Tuple[str, ...]] = None) -> Callable:
+    """Dispatch one levelized execution that stays in the packed word
+    domain; returns a zero-arg ``finalize`` yielding the packed output
+    block (uint32, out-ports' cells stacked in ``output_names`` order,
+    rows packed 32 per word along the trailing axis).
+
+    Feed it either ``inputs`` (row-value dict, packed once on the way in)
+    or ``in_block`` + ``in_names`` (a block from a previous packed
+    dispatch, cell axis stacking the named in-ports in sorted order) --
+    the primitive behind the in-memory reduction trees of ``pim.dot``/
+    ``pim.gemv``, where intermediate values never unpack between stages.
+
+    rows32 layout and levelized jax backends only; fault injection /
+    verified execution wrap whole row-value dispatches, not packed-domain
+    stages, so plans carrying them are rejected here.
+    """
+    plan = as_plan(plan)
+    if not plan.backend.is_jax:
+        raise ValueError("packed dispatch requires a levelized jax "
+                         f"backend, got {plan.backend.name!r}")
+    if plan.layout.planes != 1:
+        raise ValueError("packed dispatch is rows32-only "
+                         f"(got layout {plan.layout.name!r})")
+    if _needs_ft(plan):
+        raise ValueError("packed dispatch does not support fault "
+                         "injection / verified execution")
+    if (in_block is None) == (inputs is None):
+        raise ValueError("pass exactly one of inputs= or in_block=")
+    if in_block is not None:
+        if not in_names:
+            raise ValueError("in_block requires in_names")
+        names = {n: None for n in in_names}
+        return _dispatch_levelized(
+            program, names, n_rows, plan,
+            packed_in=np.ascontiguousarray(np.asarray(in_block, np.uint32)),
+            packed_out=True)
+    return _dispatch_levelized(program, inputs, n_rows, plan,
+                               packed_out=True)
 
 
 def run_program_groups(groups: Iterable[dict]) -> list:

@@ -89,10 +89,17 @@ def _pim_prepare_request(req: dict):
     (slots / slots-static / dense) and ``"layout"`` (rows32 / rows64 --
     the packed word layout; all exec-config keys land in the request's
     ExecPlan, so mixed-config traffic never coalesces wrongly).
+
+    Compound requests (DESIGN.md §13): ``{"op": "expr", "expr":
+    ["add", ["mul", "a", "b"], "c"], "inputs": {"a": [...], ...}}`` --
+    the nested-list expression (leaves are input names, interior nodes
+    ``[op, lhs, rhs]`` over the fusable ops) lowers through
+    ``pim_ufunc.fuse`` into **one** compiled program; one ``dtype`` /
+    ``fmt`` / ``width`` applies to every leaf.
     """
     from .. import pim_ufunc as pim
     op = req["op"]
-    if op not in _PIM_INT_OPS + _PIM_FP_OPS:
+    if op != "expr" and op not in _PIM_INT_OPS + _PIM_FP_OPS:
         raise ValueError(f"unknown op {op!r}")
     kw = {}
     if req.get("fmt") is not None:
@@ -105,9 +112,44 @@ def _pim_prepare_request(req: dict):
     for key in ("schedule", "layout"):
         if req.get(key) is not None:
             kw[key] = req[key]
+    if op == "expr":
+        return _pim_prepare_expr(req, dtype, kw)
     x = np.asarray(req["x"], dtype)
     y = np.asarray(req["y"], dtype)
     return pim.prepare(op, x, y, **kw)
+
+
+def _pim_prepare_expr(req: dict, dtype, kw: dict):
+    """Lower an ``"expr"`` request into one fused ``Prepared`` handle."""
+    from .. import pim_ufunc as pim
+    inputs = req["inputs"]
+    if not isinstance(inputs, dict) or not inputs:
+        raise ValueError('"expr" requests need a non-empty "inputs" map')
+    width = kw.pop("width", None)
+    fmt = kw.pop("fmt", None)
+    leaves: dict = {}
+
+    def build(node):
+        if isinstance(node, str):
+            leaf = leaves.get(node)
+            if leaf is None:
+                if node not in inputs:
+                    raise KeyError(f'expr leaf {node!r} not in "inputs"')
+                leaf = leaves[node] = pim.lazy(
+                    np.asarray(inputs[node], dtype), width=width, fmt=fmt)
+            return leaf
+        if (not isinstance(node, (list, tuple)) or len(node) != 3
+                or not isinstance(node[0], str)):
+            raise ValueError(
+                f"expr nodes are [op, lhs, rhs] or input names, got "
+                f"{node!r}")
+        nop = node[0]
+        if nop not in pim.LAZY_OPS:
+            raise ValueError(f"op {nop!r} does not fuse "
+                             f"(fusable: {', '.join(pim.LAZY_OPS)})")
+        return getattr(pim, nop)(build(node[1]), build(node[2]))
+
+    return pim.fuse(build(req["expr"]), **kw)
 
 
 def _pim_attach_result(resp: dict, op: str, out) -> dict:
@@ -140,6 +182,8 @@ def pim_request(req: dict) -> dict:
         cached = prep.cached
         resp = {"op": prep.op, "rows": int(prep.n_rows),
                 "cached": bool(cached)}
+        if getattr(prep, "fused_ops", 1) > 1:
+            resp["fused_ops"] = int(prep.fused_ops)
         if not cached and prep.n_rows:
             t0 = time.perf_counter()
             prep.warm()
@@ -298,6 +342,8 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
                             "queue_us": round((t_plan - t_admit) * 1e6, 1),
                             "exec_us": round(r.exec_us, 1),
                             "batched": r.group_size, "cached": bool(r.cached)}
+                    if getattr(prep, "fused_ops", 1) > 1:
+                        resp["fused_ops"] = int(prep.fused_ops)
                     if r.degraded:
                         resp["degraded"] = True
                     if r.health:
@@ -321,6 +367,7 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
         print(st.summary(pinned=pinned), file=sys.stderr)
     return {"served": served, "batches": st.batches, "groups": st.groups,
             "rows": st.rows, "errors": st.errors, "pinned": pinned,
+            "fused_programs": st.fused_programs,
             "rows_per_s": st.rows_per_s(), "rejected": st.rejected,
             "expired": st.expired, "degraded_groups": st.degraded_groups,
             "faults_detected": st.faults_detected,

@@ -321,6 +321,7 @@ class Stats:
     rows: int = 0
     errors: int = 0
     exec_s: float = 0.0
+    fused_programs: int = 0      # requests served by a fused expr program
     # fault-tolerance / admission health (DESIGN.md §12)
     rejected: int = 0            # admission backpressure rejections
     expired: int = 0             # requests past deadline at dequeue
@@ -346,7 +347,8 @@ class Stats:
         return (f"pim-serve: {self.requests} requests in {self.batches} "
                 f"batches / {self.groups} groups (mean {gsz:.1f} req/group), "
                 f"{self.rows} rows @ {self.rows_per_s():,.0f} rows/s, "
-                f"errors={self.errors}, pinned={pinned}, "
+                f"errors={self.errors}, fused={self.fused_programs}, "
+                f"pinned={pinned}, "
                 f"rejected={self.rejected}, expired={self.expired}, "
                 f"degraded_groups={self.degraded_groups}, "
                 f"faults={self.faults_detected}/{self.faults_corrected} "
@@ -455,6 +457,8 @@ class BatchRuntime:
                 if r is not None:
                     r.health = dict(health)
         self.stats.requests += len(preps)
+        self.stats.fused_programs += sum(
+            1 for p in preps if getattr(p, "fused_ops", 1) > 1)
         self.stats.batches += 1
         self.stats.groups += len(plan)
         self.stats.rows += batch_rows

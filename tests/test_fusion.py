@@ -1,0 +1,412 @@
+"""Compound-program fusion (DESIGN.md §13): lazy expression graphs, the
+cross-op composed netlist, the packed-domain reduction trees behind
+pim.dot / pim.gemv, the weight-aware compiled-program LRU, and the
+"expr" serving form.
+
+The load-bearing claims under test: a fused chain is ONE compiled
+program (single dispatch, single pack, single unpack), bit-exact against
+the per-op unfused chain and the host oracle, across every schedule and
+word layout; reductions stay in the packed word domain end to end.
+"""
+
+import io
+import json
+
+import numpy as np
+import pytest
+
+from repro import pim_ufunc as pim
+from repro.core import pim_numerics as pn
+from repro.kernels import ops as kops
+
+SCHEDULES = ("slots", "slots-static", "dense")
+LAYOUTS = ("rows32", "rows64")
+
+
+# ----------------------------------------------------------------- helpers
+
+def _host_int_chain(spec, leaves):
+    """Exact host semantics of an int chain: per node, operands
+    zero-extend to w = max child widths; add -> w+1 bits exact, sub ->
+    mod 2**w, mul -> exact.  Returns (values, width)."""
+    if isinstance(spec, int):
+        return leaves[spec].astype(object), 4
+    op, ls, rs = spec
+    x, wx = _host_int_chain(ls, leaves)
+    y, wy = _host_int_chain(rs, leaves)
+    w = max(wx, wy)
+    if op == "add":
+        return x + y, w + 1
+    if op == "sub":
+        return (x - y) % (1 << w), w
+    return x * y, 2 * w
+
+
+def _lazy_int_chain(spec, leaves):
+    if isinstance(spec, int):
+        return pim.lazy(leaves[spec], width=4)
+    op, ls, rs = spec
+    return getattr(pim, op)(_lazy_int_chain(ls, leaves),
+                            _lazy_int_chain(rs, leaves))
+
+
+def _lazy_fp_chain(spec, leaves, fmt):
+    if isinstance(spec, int):
+        return pim.lazy(leaves[spec]) if fmt is None \
+            else pim.lazy(leaves[spec], fmt=fmt)
+    op, ls, rs = spec
+    return getattr(pim, "fp_" + op)(_lazy_fp_chain(ls, leaves, fmt),
+                                    _lazy_fp_chain(rs, leaves, fmt))
+
+
+def _eager_fp_chain(spec, leaves, fmt, **kw):
+    """The unfused reference: the same chain as per-op eager ufunc calls
+    (one pack/execute/unpack round trip per node)."""
+    if isinstance(spec, int):
+        return leaves[spec]
+    op, ls, rs = spec
+    return getattr(pim, "fp_" + op)(
+        _eager_fp_chain(ls, leaves, fmt, **kw),
+        _eager_fp_chain(rs, leaves, fmt, **kw),
+        **(kw if fmt is None else dict(kw, fmt=fmt)))
+
+
+def _rand_chain(rng, n_ops):
+    """A random left-ish chain spec of ``n_ops`` nodes over n_ops+1
+    leaves, mixing add/sub/mul (at most two muls so int widths stay in
+    uint64 range)."""
+    muls = 0
+    spec = 0
+    for i in range(n_ops):
+        op = rng.choice(["add", "sub", "mul"])
+        if op == "mul":
+            if muls >= 2:
+                op = rng.choice(["add", "sub"])
+            else:
+                muls += 1
+        spec = (op, spec, i + 1) if rng.random() < 0.7 \
+            else (op, i + 1, spec)
+    return spec
+
+
+def _host_fp16_tree_sum(prods, total):
+    """Same-shape host reference for the in-memory fp16 adder tree."""
+    p = np.zeros(total, np.float16)
+    p[:len(prods)] = prods
+    while len(p) > 1:
+        h = len(p) // 2
+        p = (p[:h] + p[h:]).astype(np.float16)
+    return p[0]
+
+
+# ------------------------------------------- chain parity: schedules/layouts
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_fused_chain_parity_all_schedules_layouts(schedule, layout):
+    """One int + one fp16 + one bf16 depth-3 chain, fused, on every
+    schedule x word layout, vs the exact host oracle / eager references
+    computed once on the numpy backend."""
+    rng = np.random.default_rng(7)
+    kw = dict(backend="ref", schedule=schedule, layout=layout)
+    n = 33                                   # exercises rows64 padding
+
+    ints = [rng.integers(0, 16, n).astype(np.uint64) for _ in range(4)]
+    spec = ("add", ("mul", 0, 1), ("sub", 2, 3))
+    want, _ = _host_int_chain(spec, ints)
+    got = _lazy_int_chain(spec, ints).run(**kw)
+    assert [int(v) for v in got] == [int(v) for v in want]
+
+    fps = [rng.standard_normal(n).astype(np.float16) for _ in range(4)]
+    gotf = _lazy_fp_chain(spec, fps, None).run(**kw)
+    wantf = ((fps[0] * fps[1]).astype(np.float16)
+             + (fps[2] - fps[3]).astype(np.float16))
+    assert gotf.dtype == np.float16
+    assert np.array_equal(gotf.view(np.uint16), wantf.view(np.uint16))
+
+    bits = [((rng.integers(100, 140, n) << 7)
+             | rng.integers(0, 128, n)).astype(np.uint64)
+            for _ in range(4)]               # positive normal bf16 patterns
+    gotb = _lazy_fp_chain(spec, bits, "bf16").run(**kw)
+    wantb = _eager_fp_chain(spec, bits, "bf16", backend="numpy")
+    assert np.array_equal(np.asarray(gotb, np.uint64),
+                          np.asarray(wantb, np.uint64))
+
+
+def test_randomized_chains_fused_vs_unfused():
+    """Randomized chains, depth (op count) 2..5, fused result bit-equal
+    to the per-op unfused chain and (int) the exact host oracle."""
+    rng = np.random.default_rng(11)
+    for n_ops in (2, 3, 4, 5):
+        spec = _rand_chain(rng, n_ops)
+        ints = [rng.integers(0, 16, 40).astype(np.uint64)
+                for _ in range(n_ops + 1)]
+        want, _ = _host_int_chain(spec, ints)
+        got = _lazy_int_chain(spec, ints).run(backend="ref")
+        assert [int(v) for v in got] == [int(v) for v in want], spec
+
+        fps = [rng.standard_normal(40).astype(np.float16)
+               for _ in range(n_ops + 1)]
+        gotf = _lazy_fp_chain(spec, fps, None).run(backend="ref")
+        wantf = _eager_fp_chain(spec, fps, None, backend="numpy")
+        assert np.array_equal(gotf.view(np.uint16),
+                              wantf.view(np.uint16)), spec
+
+
+def test_fused_chain_is_one_program_one_pack_one_unpack():
+    """The acceptance claim: a depth-3 fused chain executes as ONE
+    compiled program -- one levelized dispatch, one input pack, one
+    output unpack -- where the unfused chain needs one per op."""
+    rng = np.random.default_rng(3)
+    a, b, c = (rng.integers(0, 256, 65).astype(np.uint64)
+               for _ in range(3))
+    calls = []
+    orig_d = kops._dispatch_levelized
+
+    def count_d(*args, **kw):
+        calls.append(kw.get("packed_in") is None)
+        return orig_d(*args, **kw)
+
+    kops._dispatch_levelized = count_d
+    try:
+        e = (pim.lazy(a, width=8) * pim.lazy(b, width=8)) \
+            + pim.lazy(c, width=8)
+        out = e.run(backend="ref")
+        # one dispatch == one compiled program == one pack + one unpack
+        # (the dispatch packs its value inputs and unpacks its own ports)
+        assert calls == [True]
+        calls.clear()
+        unfused = pim.add(pim.mul(a, b, width=8, backend="ref"), c,
+                          width=16, backend="ref")
+        assert len(calls) == 2              # one dispatch per op
+    finally:
+        kops._dispatch_levelized = orig_d
+    assert np.array_equal(out, a * b + c)
+    assert np.array_equal(unfused, a * b + c)
+
+
+def test_fusion_validation():
+    a = np.arange(4, dtype=np.uint8)
+    la = pim.lazy(a)
+    with pytest.raises(TypeError):
+        pim.div(la, la)                      # division does not fuse
+    with pytest.raises(TypeError):
+        pim.fp_div(pim.lazy(a.astype(np.float16)), np.float16(1))
+    with pytest.raises(TypeError):
+        pim.add(la, pim.lazy(a.astype(np.float16)))   # kind mismatch
+    with pytest.raises(TypeError):
+        pim.fp_add(pim.lazy(np.full(4, 0x3f80, np.uint64), fmt="bf16"),
+                   pim.lazy(a.astype(np.float16)))    # fmt mismatch
+    with pytest.raises(TypeError):
+        pim.add(la, la, backend="ref")       # exec kw on a lazy node
+    with pytest.raises(ValueError):
+        pim.fuse(la + la, parallel=True)     # bit-parallel cannot fuse
+    with pytest.raises(TypeError):
+        pim.fuse(a)                          # not a LazyExpr
+
+
+# --------------------------------------------------------- dot / gemv oracle
+
+@pytest.mark.parametrize("n", [1, 31, 64, 1000])
+def test_dot_int_vs_numpy(n):
+    rng = np.random.default_rng(n)
+    x = rng.integers(0, 256, n).astype(np.uint64)
+    y = rng.integers(0, 256, n).astype(np.uint64)
+    want = int(np.dot(x.astype(object), y.astype(object)))
+    assert int(pim.dot(x, y, width=8, backend="ref")) == want
+
+
+@pytest.mark.parametrize("n", [17, 48])
+def test_dot_fp16_tree_order_nonpow2(n):
+    """Non-power-of-two reduction widths: zero rows pad to the tree and
+    the result is the same-shape host tree sum, bit-exact."""
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal(n).astype(np.float16)
+    y = rng.standard_normal(n).astype(np.float16)
+    got = pim.dot(x, y, backend="ref")
+    total = 1
+    while total < n:
+        total *= 2
+    want = _host_fp16_tree_sum((x * y).astype(np.float16), total)
+    assert got.dtype == np.float16
+    assert got.view(np.uint16) == want.view(np.uint16)
+
+
+def test_dot_fused_equals_unfused_fallback():
+    """fused=False runs the identical pairing through per-op round trips;
+    results must be bit-identical (int and fp16, non-pow2 length)."""
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 256, 37).astype(np.uint64)
+    y = rng.integers(0, 256, 37).astype(np.uint64)
+    assert int(pim.dot(x, y, width=8, backend="ref")) == \
+        int(pim.dot(x, y, width=8, backend="ref", fused=False))
+    xf = rng.standard_normal(37).astype(np.float16)
+    yf = rng.standard_normal(37).astype(np.float16)
+    a = pim.dot(xf, yf, backend="ref")
+    b = pim.dot(xf, yf, backend="ref", fused=False)
+    assert a.view(np.uint16) == b.view(np.uint16)
+
+
+@pytest.mark.parametrize("m", [1, 31, 64, 1000])
+def test_gemv_int_vs_numpy(m):
+    rng = np.random.default_rng(m)
+    k = 17                                   # non-pow2 reduction width
+    a = rng.integers(0, 16, (m, k)).astype(np.uint64)
+    x = rng.integers(0, 16, k).astype(np.uint64)
+    got = pim.gemv(a, x, width=4, backend="ref")
+    want = a @ x
+    assert np.array_equal(np.asarray(got, np.uint64), want)
+
+
+def test_gemv_fp16_vs_host_tree():
+    rng = np.random.default_rng(9)
+    m, k = 5, 12
+    a = rng.standard_normal((m, k)).astype(np.float16)
+    x = rng.standard_normal(k).astype(np.float16)
+    got = pim.gemv(a, x, backend="ref")
+    assert got.dtype == np.float16
+    want = np.array([_host_fp16_tree_sum((a[i] * x).astype(np.float16),
+                                         16) for i in range(m)],
+                    np.float16)
+    assert np.array_equal(got.view(np.uint16), want.view(np.uint16))
+
+
+def test_reduce_sum_of_fused_expression():
+    """The elementwise stage of a reduction can itself be a fused chain:
+    sum((a*b)+c) executes the chain program once, in the tree."""
+    rng = np.random.default_rng(13)
+    a, b, c = (rng.integers(0, 16, 20).astype(np.uint64)
+               for _ in range(3))
+    e = (pim.lazy(a, width=4) * pim.lazy(b, width=4)) \
+        + pim.lazy(c, width=4)
+    got = pim.reduce_sum(e, backend="ref")
+    assert int(got) == int(np.sum(a * b + c))
+
+
+def test_dot_packed_domain_single_pack_unpack():
+    """An 8k-row dot stays in the packed word domain: exactly one
+    value-domain pack (the products' operands) and one single-row unpack
+    (the scalar), with log2(8192) + 1 dispatches in between."""
+    rng = np.random.default_rng(17)
+    x = rng.integers(0, 256, 8000).astype(np.uint64)
+    y = rng.integers(0, 256, 8000).astype(np.uint64)
+    packs, unpacks = [], []
+    orig_d, orig_u = kops._dispatch_levelized, kops._unpack_sub
+
+    def count_d(*args, **kw):
+        packs.append(kw.get("packed_in") is None)
+        return orig_d(*args, **kw)
+
+    def count_u(*args, **kw):
+        unpacks.append(1)
+        return orig_u(*args, **kw)
+
+    kops._dispatch_levelized, kops._unpack_sub = count_d, count_u
+    try:
+        got = pim.dot(x, y, width=8, backend="ref")
+    finally:
+        kops._dispatch_levelized, kops._unpack_sub = orig_d, orig_u
+    assert int(got) == int(np.dot(x.astype(object), y.astype(object)))
+    assert sum(packs) == 1                   # only the product pack
+    assert len(packs) == 1 + 13              # mul + log2(8192) tree levels
+    assert len(unpacks) == 1                 # the final scalar
+
+
+# --------------------------------------------- weight-aware compiled-LRU
+
+def test_compiled_cache_weight_cap_and_min_resident():
+    """Eviction accounts schedule size, not just entry count: a tiny
+    weight cap evicts down to the min-resident floor, pinned entries
+    survive weight pressure, and results stay bit-exact through it."""
+    old_cap = kops.set_compiled_cache_cap(64)
+    old_w = kops._COMPILED_WEIGHT_CAP
+    kops._compiled.clear()
+    pin_key = None
+    try:
+        progs = [pn.program_for("int-serial", "add", w)
+                 for w in range(4, 12)]
+        rng = np.random.default_rng(0)
+        ins = {"x": rng.integers(0, 8, 33).astype(np.uint64),
+               "y": rng.integers(0, 8, 33).astype(np.uint64)}
+        want = [kops.run_program(p, ins, 33, backend="numpy")["z"]
+                for p in progs]
+        kops.run_program(progs[0], ins, 33, backend="ref")
+        assert all(e.weight > 0 for e in kops._compiled.values())
+        pin_key = kops.pin_program(progs[0], kops.make_plan(backend="ref"))
+        kops.set_compiled_cache_cap(64, weight_cap=1)   # max pressure
+        for p, wv in zip(progs, want):
+            got = kops.run_program(p, ins, 33, backend="ref")["z"]
+            assert np.array_equal(got, wv)
+            unpinned = sum(1 for k in kops._compiled
+                           if k not in kops._pinned)
+            # the floor counts entries *besides* the protected fresh one
+            assert unpinned <= kops._COMPILED_MIN_RESIDENT + 1
+        assert pin_key in kops._compiled     # pinned survived the churn
+        with pytest.raises(ValueError):
+            kops.set_compiled_cache_cap(64, weight_cap=0)
+    finally:
+        if pin_key is not None:
+            kops.unpin_program(pin_key)
+        kops.set_compiled_cache_cap(old_cap, weight_cap=old_w)
+
+
+# ------------------------------------------------------------- serving form
+
+def test_serve_expr_request():
+    from repro.launch import serve
+
+    r = serve.pim_request({"op": "expr", "dtype": "uint8",
+                           "expr": ["add", ["mul", "a", "b"], "c"],
+                           "inputs": {"a": [3, 5], "b": [7, 9],
+                                      "c": [1, 2]}})
+    assert r["result"] == [22, 47]
+    assert r["op"] == "expr" and r["fused_ops"] == 2
+    r = serve.pim_request({"op": "expr", "dtype": "uint8",
+                           "expr": ["div", "a", "b"],
+                           "inputs": {"a": [4], "b": [2]}})
+    assert r["error"]["code"] == "bad_request"
+    r = serve.pim_request({"op": "expr", "dtype": "uint8",
+                           "expr": ["add", "a", "missing"],
+                           "inputs": {"a": [1]}})
+    assert r["error"]["code"] == "bad_request"
+
+
+def test_serve_batched_expr_coalescing_and_stats():
+    """Two identical-structure expr requests coalesce into one group; the
+    run's stats count the fused programs."""
+    from repro.launch import serve
+
+    reqs = [{"op": "expr", "dtype": "uint8",
+             "expr": ["add", ["mul", "a", "b"], "c"],
+             "inputs": {"a": [i, 2], "b": [3, 4], "c": [5, 6]}}
+            for i in range(2)]
+    reqs.append({"op": "add", "dtype": "uint8", "x": [1], "y": [1]})
+    inp = io.StringIO("\n".join(json.dumps(r) for r in reqs) + "\n")
+    outp = io.StringIO()
+    ret = serve.serve_pim_batched(inp, outp, window_ms=200.0, stats=False)
+    lines = [json.loads(l) for l in outp.getvalue().splitlines()]
+    assert ret["errors"] == 0 and ret["fused_programs"] == 2
+    for i, l in enumerate(lines[:2]):
+        assert l["result"] == [i * 3 + 5, 2 * 4 + 6]
+        assert l["fused_ops"] == 2
+    assert lines[2]["result"] == [2]
+    if lines[0]["batched"] == 2:             # same window -> one group
+        assert lines[1]["batched"] == 2
+
+
+def test_batch_runtime_counts_fused_programs():
+    from repro.runtime.pim_batch import BatchRuntime
+
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 16, 8).astype(np.uint64)
+    e = pim.lazy(a, width=4) * pim.lazy(a, width=4)
+    fused = pim.fuse(e + pim.lazy(a, width=4), backend="ref")
+    plain = pim.prepare("add", a, a, width=4, backend="ref")
+    rt = BatchRuntime(pin_cap=0)
+    try:
+        res = rt.execute([fused, plain])
+        assert rt.stats.fused_programs == 1
+        assert "fused=1" in rt.stats.summary()
+        assert np.array_equal(res[0].value, a * a + a)
+    finally:
+        rt.close()
