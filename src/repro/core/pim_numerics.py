@@ -151,8 +151,8 @@ def fused_out_width(kind: str, graph: tuple, fmt: str = None) -> int:
 
 def tree_reduce_rows(row_program, inputs: Dict[str, np.ndarray],
                      total_rows: int, group: int, *, kind: str,
-                     fmt: str = None, plan=None, fused: bool = True
-                     ) -> np.ndarray:
+                     fmt: str = None, plan=None, fused: bool = True,
+                     deadline: float = None) -> np.ndarray:
     """Sum ``row_program``'s per-row ``z`` outputs down the row axis in
     log2(total_rows/group) in-memory adder levels; returns the ``group``
     reduced row values (uint64, or object ints for wide accumulators).
@@ -178,6 +178,15 @@ def tree_reduce_rows(row_program, inputs: Dict[str, np.ndarray],
     ``fused=False`` (or a non-jax backend) runs the same pairing through
     per-op ``run_program`` round trips -- the bit-identical reference the
     fused path is benchmarked against.
+
+    A plan carrying a fault model / verify policy runs the packed tree
+    under verified execution: every level is a verify cut-point (one
+    shared ``_VerifyRun`` across the tree, per-level XOR check planes over
+    the whole packed block -- zero pad rows are the additive identity
+    *and* parity-covered, so a corrupted pad is caught too), and a
+    detected corruption retries from the last verified level, never the
+    leaves.  ``deadline`` (absolute ``time.monotonic()``) is checked
+    between levels, so a deep reduction can be cancelled mid-tree.
     """
     plan = kops.make_plan(plan=plan)
     R = int(total_rows)
@@ -200,11 +209,11 @@ def tree_reduce_rows(row_program, inputs: Dict[str, np.ndarray],
         return (program_for("fp-serial", "add", fmt) if is_fp
                 else program_for("int-serial", "add", width))
 
-    if not fused or not plan.backend.is_jax or plan.layout.planes != 1 \
-            or plan.faults is not None or plan.verify is not None:
+    if not fused or not plan.backend.is_jax:
         # value-domain reference: same pairing, per-op round trips
         vals = kops.run_program(row_program, inputs, R, plan)["z"]
         while R > group:
+            kops._check_deadline(deadline)
             half = R // 2
             out = kops.run_program(adder(w), {"x": vals[:half],
                                               "y": vals[half:R]},
@@ -218,17 +227,41 @@ def tree_reduce_rows(row_program, inputs: Dict[str, np.ndarray],
     if set(kops.output_names(row_program)) != {"z"}:
         raise ValueError("tree_reduce_rows needs a row program with the "
                          "single out-port 'z'")
-    block = kops.dispatch_packed(row_program, R, plan, inputs=inputs)()
+    # one shared verify run across the whole tree: every level is a verify
+    # cut-point (the level's input block stays on the host), a remap at any
+    # level sticks for the shrinking spans above it, and the stage ordinal
+    # salts each level's transient stream
+    ft = plan.faults is not None or plan.verify is not None
+    vrun = kops._VerifyRun(plan) if ft else None
+    stage = 0
+    block = kops.dispatch_packed(row_program, R, plan, inputs=inputs,
+                                 vrun=vrun, deadline=deadline)()
+    rpw = 32 * plan.layout.planes
     while R > group:
+        kops._check_deadline(deadline)
         half = R // 2
-        if half % 32 == 0:
-            hw = half // 32
-            x, y = block[:, :hw], block[:, hw:2 * hw]
+        if half % rpw == 0:
+            hw = half // rpw
+            x, y = block[..., :hw], block[..., hw:2 * hw]
+        elif half % 32 == 0:
+            # rows64 split at an odd multiple of 32: the cut lands on the
+            # plane boundary inside word m, so the halves re-seam across
+            # planes (x keeps plane 0 of word m, y starts at plane 1)
+            m = half // 64
+            lo, hi = block[0], block[1]
+            zw = np.zeros_like(lo[:, :1])
+            x = np.stack([lo[:, :m + 1],
+                          np.concatenate([hi[:, :m], zw], axis=1)])
+            y = np.stack([hi[:, m:2 * m + 1],
+                          np.concatenate([lo[:, m + 1:2 * m + 1], zw],
+                                         axis=1)])
         else:               # whole span fits one word: lanes shift in-word
             x, y = block, block >> np.uint32(half)
+        stage += 1
         block = kops.dispatch_packed(
             adder(w), half, plan, in_names=("x", "y"),
-            in_block=np.concatenate([x, y], axis=0))()
+            in_block=np.concatenate([x, y], axis=-2),
+            vrun=vrun, stage=stage, deadline=deadline)()
         if not is_fp:
             w += 1
         R = half

@@ -43,7 +43,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.gates import LevelSchedule, levelize
 from ..runtime.faults import (DeadlineExceeded, FaultError,  # noqa: F401
-                              FaultModel, VerifyPolicy)
+                              FaultModel, VerifyPolicy, note_quarantine,
+                              record_wear)
 from . import slots as kslots
 from .plan import (BACKENDS, DEFAULT_LAYOUT, DEFAULT_PLAN, DEFAULT_SCHEDULE,
                    LAYOUTS, ROWS32, ROWS64, SCHEDULES, TILE_W, Backend,
@@ -677,24 +678,28 @@ def _sharded_exec(fn, mesh: Mesh, check_rep: bool, data_rank: int = 2,
 
 
 # --------------------------------------------------------------------------
-# fault-tolerant execution: inject -> detect -> retry -> remap (DESIGN §12)
+# fault-tolerant execution: inject -> detect -> retry -> remap (DESIGN §12,
+# §14)
 # --------------------------------------------------------------------------
 #
 # The plan's FaultModel corrupts each chunk's *output readback* (the
 # layout-polymorphic post-level hook: transient per-level flips plus the
 # persistent dead rows / stuck word columns of the physical span the chunk
 # landed on), and its VerifyPolicy turns on detection: a per-word XOR check
-# fold over the clean readback (``pim_exec.check_words`` is the on-device
-# form of the fold real hardware would read out; the simulator folds the
-# clean host copy, which is detection-identical and one jit dispatch
-# cheaper), refolded after injection -- any single corrupted bit per word
-# position mismatches -- plus amortized numpy-oracle spot checks.  On
-# mismatch the chunk retries with exponential backoff (transients re-roll
-# per attempt); persistent failures re-home the chunk onto a spare physical
-# span that the simulated BIST media scan certifies clean.  All of it wraps
-# ``_dispatch_levelized`` from the outside, so every schedule kind x word
-# layout x backend inherits the machinery and the compiled artifacts stay
-# byte-identical (plan.compile_key excludes faults/verify).
+# plane emitted *on the device* right behind the executor
+# (``pim_exec.check_words`` -- the parity real hardware would generate in
+# the array), refolded on the host only after injection -- any single
+# corrupted bit per word position mismatches -- plus amortized numpy-oracle
+# spot checks.  On mismatch the chunk retries with exponential backoff
+# (transients re-roll per attempt); persistent failures re-home the chunk
+# onto a spare physical span that the simulated BIST media scan certifies
+# clean (abandoned spans go to runtime.faults' quarantine for the
+# background scrubber; every dispatch attempt books endurance wear there
+# too).  All of it wraps ``_dispatch_levelized`` from the outside -- both
+# the row-value form and the packed-domain stage form behind
+# ``dispatch_packed`` -- so every schedule kind x word layout x backend x
+# output representation inherits the machinery and the compiled artifacts
+# stay byte-identical (plan.compile_key excludes faults/verify).
 
 #: Cumulative module-level health counters (faults_injected/detected/
 #: corrected, retries, remapped_rows, spot_checks, spot_mismatches);
@@ -765,7 +770,8 @@ class _FaultCtx:
     def process_values(self, o: np.ndarray, out_widths, n_levels: int,
                        clean_chk: Optional[np.ndarray]) -> np.ndarray:
         """Fused fast path: ``o`` is uint32[n_ports, padded_rows]."""
-        if self.verify is not None and clean_chk is None:
+        if self.faults is not None and self.verify is not None \
+                and clean_chk is None:
             clean_chk = np.bitwise_xor.reduce(o, axis=0)  # clean-copy fold
         injected = 0
         if self.faults is not None:
@@ -778,7 +784,8 @@ class _FaultCtx:
                        clean_chk: Optional[np.ndarray]) -> np.ndarray:
         """Padded-io path: ``sub`` is the packed output block (cell axis
         -2, rows32 2-D or planes-leading 3-D)."""
-        if self.verify is not None and clean_chk is None:
+        if self.faults is not None and self.verify is not None \
+                and clean_chk is None:
             clean_chk = np.bitwise_xor.reduce(sub, axis=sub.ndim - 2)
         injected = 0
         if self.faults is not None:
@@ -823,7 +830,8 @@ class _VerifyRun:
             if tries > limit:
                 raise FaultError(
                     f"media scan found no clean {span}-row spare span "
-                    f"after {limit} candidates")
+                    f"after {limit} candidates",
+                    span_rows=span, scan_limit=limit)
             base = self._alloc(span)
         return base
 
@@ -835,6 +843,7 @@ class _VerifyRun:
         if self.faults is None or self.policy is None:
             return base
         if self.faults.span_bad(base, span):
+            note_quarantine(base, span)       # scrubber's work queue
             base = self._clean_spare(span, self.policy.scan_limit)
             self.remap[start] = base
             HEALTH["remapped_rows"] += span
@@ -846,6 +855,7 @@ class _VerifyRun:
         called it clean -- treat it as marginal and move off it)."""
         if self.faults is None:
             return self.remap.get(start, start)
+        note_quarantine(self.remap.get(start, start), span)
         base = self._clean_spare(span, self.policy.scan_limit)
         self.remap[start] = base
         HEALTH["remapped_rows"] += span
@@ -891,10 +901,12 @@ def _verified_dispatch(program, inputs: Dict[str, np.ndarray], n_rows: int,
     case); retries are synchronous re-dispatches inside finalize."""
     span = _state_span(plan, n_rows if pad_rows is None else pad_rows)
     base = vrun.place(start, span)
-    salt = _chunk_salt(content_key(program), start)
+    pkey = content_key(program)
+    salt = _chunk_salt(pkey, start)
 
     def dispatch(attempt: int, row_base: int) -> Callable:
         fctx = _FaultCtx(plan.faults, plan.verify, row_base, salt, attempt)
+        record_wear(row_base, span)           # every attempt writes media
         return _dispatch_levelized(program, inputs, n_rows, plan,
                                    pad_rows=pad_rows, fctx=fctx)
 
@@ -913,11 +925,75 @@ def _verified_dispatch(program, inputs: Dict[str, np.ndarray], n_rows: int,
                 if pol is None or attempt > pol.max_retries:
                     raise FaultError(
                         f"rows [{start}, {start + n_rows}): verification "
-                        f"still failing after {attempt - 1} retries")
+                        f"still failing after {attempt - 1} retries",
+                        program_key=pkey[:8].hex(), chunk_start=start,
+                        rows=n_rows, attempts=attempt,
+                        remapped_base=vrun.remap.get(start))
                 HEALTH["retries"] += 1
                 time.sleep(min(pol.backoff_s * (1 << (attempt - 1)), 0.05))
                 if attempt >= pol.remap_after and plan.faults is not None:
                     row_base = vrun.rehome(start, span)
+                fin = dispatch(attempt, row_base)
+        if attempt:
+            HEALTH["faults_corrected"] += 1
+        return out
+
+    return finalize
+
+
+def _verified_dispatch_packed(program, n_rows: int, plan: ExecPlan,
+                              vrun: _VerifyRun, stage: int, *,
+                              inputs=None, packed_in=None, in_names=None,
+                              deadline: Optional[float] = None) -> Callable:
+    """Packed-domain stage under the plan's fault model / verify policy
+    (the reduction-tree analog of :func:`_verified_dispatch`).
+
+    Every packed stage is its own verify cut-point: the per-stage XOR
+    check plane folds over the whole packed block (zero pad rows included
+    -- they are the additive identity, so a corrupted pad still flips the
+    parity and is caught), and because the stage's *input* block lives on
+    the host between stages, a detected corruption re-runs only this
+    stage, not the reduction levels already verified below it.  The whole
+    tree shares one :class:`_VerifyRun` keyed at logical row 0 (each level
+    physically reuses the same span, shrinking as the tree narrows), so a
+    remap sticks for every later level; ``stage`` salts the transient
+    stream so levels of one program don't roll identical flips."""
+    span = _state_span(plan, n_rows)
+    base = vrun.place(0, span)
+    pkey = content_key(program)
+    salt = _chunk_salt(pkey, stage)
+    names = inputs if packed_in is None else {n: None for n in in_names}
+
+    def dispatch(attempt: int, row_base: int) -> Callable:
+        fctx = _FaultCtx(plan.faults, plan.verify, row_base, salt, attempt)
+        record_wear(row_base, span)
+        return _dispatch_levelized(program, names, n_rows, plan, fctx=fctx,
+                                   packed_in=packed_in, packed_out=True)
+
+    first = dispatch(0, base)
+
+    def finalize() -> np.ndarray:
+        pol = plan.verify
+        attempt, row_base, fin = 0, base, first
+        while True:
+            try:
+                out = fin()
+                break
+            except _Corrupt:
+                attempt += 1
+                if pol is None or attempt > pol.max_retries:
+                    raise FaultError(
+                        f"packed stage {stage} ({n_rows} rows): "
+                        f"verification still failing after "
+                        f"{attempt - 1} retries",
+                        program_key=pkey[:8].hex(), stage=stage,
+                        rows=n_rows, attempts=attempt,
+                        remapped_base=vrun.remap.get(0))
+                HEALTH["retries"] += 1
+                _check_deadline(deadline)
+                time.sleep(min(pol.backoff_s * (1 << (attempt - 1)), 0.05))
+                if attempt >= pol.remap_after and plan.faults is not None:
+                    row_base = vrun.rehome(0, span)
                 fin = dispatch(attempt, row_base)
         if attempt:
             HEALTH["faults_corrected"] += 1
@@ -1024,16 +1100,23 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                     jnp.asarray(in_vals), r.in_idx, r.la, r.lb, r.lo,
                     r.out_idx)
 
+        # verified-under-fault plans emit the XOR check plane *on the
+        # device* (pim_exec.check_words), dispatched asynchronously right
+        # behind the executor: the parity generation rides the same device
+        # pass, and the host only refolds after injection, when there is
+        # simulated media to distrust AND a VerifyPolicy to act on a
+        # mismatch -- verify-only and faults-only plans skip the fold
+        # entirely (DESIGN.md §14)
+        chk = check_words(outs, axis=0) if fctx is not None \
+            and fctx.faults is not None and fctx.verify is not None \
+            else None
+
         def finalize() -> Dict[str, np.ndarray]:
             o = np.asarray(outs)                     # blocks until ready
             if fctx is not None:
-                # the clean-readback XOR fold happens inside process_*
-                # (pim_exec.check_words is the on-device form of the same
-                # fold for real hardware; in simulation the host fold of
-                # the clean readback is detection-identical and skips a
-                # second jit dispatch -- see DESIGN.md §12)
                 o = fctx.process_values(o, r.out_widths, r.sched.n_levels,
-                                        None)
+                                        None if chk is None
+                                        else np.asarray(chk))
             return {n: o[p, :n_rows].astype(np.uint64)
                     for p, n in enumerate(r.names)}
         return finalize
@@ -1075,10 +1158,16 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                                 in_rows.ndim, **static)(
                 jnp.asarray(in_rows), r.in_idx, r.la, r.lb, r.lo, r.out_idx)
 
+    # on-device check plane for the packed/padded-io path too: the fold
+    # runs over the cell axis (-2) of the packed output block
+    chk = check_words(sub, axis=sub.ndim - 2) if fctx is not None \
+        and fctx.faults is not None and fctx.verify is not None else None
+
     def finalize():
         s = np.asarray(sub)
         if fctx is not None:
-            s = fctx.process_packed(s, r.sched.n_levels, None)
+            s = fctx.process_packed(s, r.sched.n_levels,
+                                    None if chk is None else np.asarray(chk))
         if packed_out:
             return s
         return _unpack_sub(s,
@@ -1234,11 +1323,14 @@ def dispatch_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
 def dispatch_packed(program, n_rows: int, plan=None, *,
                     inputs: Optional[Dict[str, np.ndarray]] = None,
                     in_block: Optional[np.ndarray] = None,
-                    in_names: Optional[Tuple[str, ...]] = None) -> Callable:
+                    in_names: Optional[Tuple[str, ...]] = None,
+                    vrun: Optional[_VerifyRun] = None, stage: int = 0,
+                    deadline: Optional[float] = None) -> Callable:
     """Dispatch one levelized execution that stays in the packed word
     domain; returns a zero-arg ``finalize`` yielding the packed output
     block (uint32, out-ports' cells stacked in ``output_names`` order,
-    rows packed 32 per word along the trailing axis).
+    rows packed 32 per word along the trailing axis -- rows64 plans keep
+    the planes-leading 3-D state shape).
 
     Feed it either ``inputs`` (row-value dict, packed once on the way in)
     or ``in_block`` + ``in_names`` (a block from a previous packed
@@ -1246,30 +1338,37 @@ def dispatch_packed(program, n_rows: int, plan=None, *,
     the primitive behind the in-memory reduction trees of ``pim.dot``/
     ``pim.gemv``, where intermediate values never unpack between stages.
 
-    rows32 layout and levelized jax backends only; fault injection /
-    verified execution wrap whole row-value dispatches, not packed-domain
-    stages, so plans carrying them are rejected here.
+    Levelized jax backends only.  A plan carrying a fault model / verify
+    policy routes the stage through the packed detect -> retry -> remap
+    loop: pass one shared ``vrun`` across a tree's stages (so a remap
+    sticks for later levels and a failed stage retries from the last
+    verified level, not the leaves) and a distinct ``stage`` ordinal to
+    salt each level's transient stream.  ``deadline`` (absolute
+    ``time.monotonic()``) is checked before dispatch and between retry
+    attempts -- what lets a deep GEMV reduction cancel mid-tree.
     """
     plan = as_plan(plan)
     if not plan.backend.is_jax:
         raise ValueError("packed dispatch requires a levelized jax "
                          f"backend, got {plan.backend.name!r}")
-    if plan.layout.planes != 1:
-        raise ValueError("packed dispatch is rows32-only "
-                         f"(got layout {plan.layout.name!r})")
-    if _needs_ft(plan):
-        raise ValueError("packed dispatch does not support fault "
-                         "injection / verified execution")
     if (in_block is None) == (inputs is None):
         raise ValueError("pass exactly one of inputs= or in_block=")
+    _check_deadline(deadline)
     if in_block is not None:
         if not in_names:
             raise ValueError("in_block requires in_names")
+        block = np.ascontiguousarray(np.asarray(in_block, np.uint32))
+        if _needs_ft(plan):
+            return _verified_dispatch_packed(
+                program, n_rows, plan, vrun or _VerifyRun(plan), stage,
+                packed_in=block, in_names=in_names, deadline=deadline)
         names = {n: None for n in in_names}
-        return _dispatch_levelized(
-            program, names, n_rows, plan,
-            packed_in=np.ascontiguousarray(np.asarray(in_block, np.uint32)),
-            packed_out=True)
+        return _dispatch_levelized(program, names, n_rows, plan,
+                                   packed_in=block, packed_out=True)
+    if _needs_ft(plan):
+        return _verified_dispatch_packed(
+            program, n_rows, plan, vrun or _VerifyRun(plan), stage,
+            inputs=inputs, deadline=deadline)
     return _dispatch_levelized(program, inputs, n_rows, plan,
                                packed_out=True)
 

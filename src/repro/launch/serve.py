@@ -221,7 +221,9 @@ def serve_pim_stdin(inp=None, outp=None) -> int:
 def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
                       max_batch_rows: int = 1 << 16, pin_cap: int = 32,
                       max_queue_rows=None, deadline_ms=None,
-                      heartbeat=None, stats: bool = True) -> dict:
+                      heartbeat=None, stats: bool = True,
+                      breaker="default",
+                      scrub_interval_ms: float = 250.0) -> dict:
     """Batched JSON-lines loop (``--pim-serve``): same request/response
     protocol as :func:`serve_pim_stdin`, but requests admitted within one
     micro-batching window coalesce by compiled-program structure and each
@@ -246,9 +248,23 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
     out of group execution carries ``"degraded": true``; a batch that saw
     fault-tolerance activity attaches its drained ``"health"`` counters.
     ``heartbeat`` names a liveness file beaten once per batch.
+
+    Circuit breakers (DESIGN.md §14): per-program-family breakers in the
+    runtime trip on sustained retriable failures (faults exhausting
+    retries, deadline misses -- including expiry in the queue); tripped
+    families are shed to the numpy oracle (correct, ``degraded+shed``,
+    never dropped) until half-open probes succeed.  ``breaker`` is a
+    ``runtime.pim_batch.BreakerPolicy``, None to disable, or ``"default"``.
+    Trip/probe/close counts land in the stats line and the returned dict.
+    When the active ufunc config injects faults (``pim.options(faults=...)``
+    around this call, e.g. the ``--pim-fault-*`` flags), a background
+    :class:`~repro.runtime.faults.Scrubber` re-scans quarantined spans
+    every ``scrub_interval_ms`` for the lifetime of the loop; its media
+    counters come back under ``"media"``.
     """
     from ..runtime import pim_batch
     from ..runtime.fault_tolerance import Heartbeat, StragglerMonitor
+    from ..runtime.faults import FaultModel, Scrubber, drain_media_health
     inp = sys.stdin if inp is None else inp
     outp = sys.stdout if outp is None else outp
     q = pim_batch.BatchQueue(window_ms=window_ms,
@@ -297,11 +313,19 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
             q.close()
 
     threading.Thread(target=_admit, daemon=True).start()
-    runtime = pim_batch.BatchRuntime(pin_cap=pin_cap)
+    if breaker == "default":
+        runtime = pim_batch.BatchRuntime(pin_cap=pin_cap)
+    else:
+        runtime = pim_batch.BatchRuntime(pin_cap=pin_cap, breaker=breaker)
     mon = StragglerMonitor(window=64, threshold=4.0)
     hb = Heartbeat(heartbeat, interval_s=0.0) if heartbeat else None
     if hb:
         hb.beat(0)                          # liveness from startup
+    from .. import pim_ufunc as pim
+    scrubber = None
+    if isinstance(pim.config.faults, FaultModel) and scrub_interval_ms > 0:
+        scrubber = Scrubber(pim.config.faults,
+                            interval_s=scrub_interval_ms * 1e-3).start()
     served = 0
     try:
         while (batch := q.collect()) is not None:
@@ -320,6 +344,7 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
                         f"request expired in queue ({prep.n_rows} rows)",
                         True)
                     runtime.stats.expired += 1
+                    runtime.record_expired(prep)
                 else:
                     live.append((i, prep, t_admit, dl))
             try:
@@ -346,6 +371,8 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
                         resp["fused_ops"] = int(prep.fused_ops)
                     if r.degraded:
                         resp["degraded"] = True
+                    if r.shed:
+                        resp["shed"] = True
                     if r.health:
                         resp["health"] = r.health
                     responses[i] = _pim_attach_result(resp, prep.op, r.value)
@@ -362,9 +389,17 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
     finally:
         pinned = len(runtime.pins)
         runtime.close()
+        if scrubber is not None:
+            scrubber.stop()
     st = runtime.stats
+    media = drain_media_health()
     if stats:
-        print(st.summary(pinned=pinned), file=sys.stderr)
+        line = st.summary(pinned=pinned)
+        if media:
+            line += (f", media={media.get('scrub_passes', 0)} scrubs/"
+                     f"{media.get('spans_reclaimed', 0)} reclaimed/"
+                     f"{media.get('spans_still_bad', 0)} still-bad")
+        print(line, file=sys.stderr)
     return {"served": served, "batches": st.batches, "groups": st.groups,
             "rows": st.rows, "errors": st.errors, "pinned": pinned,
             "fused_programs": st.fused_programs,
@@ -373,7 +408,12 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
             "faults_detected": st.faults_detected,
             "faults_corrected": st.faults_corrected,
             "retries": st.retries, "remapped_rows": st.remapped_rows,
-            "stragglers": st.stragglers}
+            "stragglers": st.stragglers,
+            "breaker_trips": st.breaker_trips,
+            "breaker_probes": st.breaker_probes,
+            "breaker_closes": st.breaker_closes,
+            "shed_requests": st.shed_requests,
+            "media": media}
 
 
 def serve_pim_synthetic(args) -> dict:
@@ -516,6 +556,21 @@ def main(argv=None):
     ap.add_argument("--pim-heartbeat", metavar="PATH", default=None,
                     help="liveness file beaten once per batch "
                          "(--pim-serve; runtime/fault_tolerance.Heartbeat)")
+    ap.add_argument("--pim-no-breaker", action="store_true",
+                    help="disable the per-program-family circuit breakers "
+                         "(--pim-serve; DESIGN.md §14)")
+    ap.add_argument("--pim-breaker-failures", type=int, default=None,
+                    help="retriable failures in the window that trip a "
+                         "family's breaker (--pim-serve; default 4)")
+    ap.add_argument("--pim-breaker-cooldown-ms", type=float, default=None,
+                    help="open-state cooldown before half-open probes "
+                         "(--pim-serve; default 1000)")
+    ap.add_argument("--pim-breaker-probes", type=int, default=None,
+                    help="half-open probe successes required to close a "
+                         "breaker (--pim-serve; default 2)")
+    ap.add_argument("--pim-scrub-interval-ms", type=float, default=250.0,
+                    help="background quarantined-span scrub period when "
+                         "fault injection is on (--pim-serve; 0 disables)")
     ap.add_argument("--pim-verify", action="store_true",
                     help="verified execution: per-chunk result checking "
                          "with retry + row remap (DESIGN.md §12)")
@@ -567,6 +622,21 @@ def main(argv=None):
         # into library defaults when serve is driven programmatically
         from .. import pim_ufunc as pim
         ctx = pim.options(**overrides)
+    breaker = "default"
+    if args.pim_no_breaker:
+        breaker = None
+    elif (args.pim_breaker_failures is not None
+          or args.pim_breaker_cooldown_ms is not None
+          or args.pim_breaker_probes is not None):
+        from ..runtime.pim_batch import BreakerPolicy
+        dflt = BreakerPolicy()
+        breaker = BreakerPolicy(
+            trip_failures=args.pim_breaker_failures
+            if args.pim_breaker_failures is not None else dflt.trip_failures,
+            cooldown_s=args.pim_breaker_cooldown_ms * 1e-3
+            if args.pim_breaker_cooldown_ms is not None else dflt.cooldown_s,
+            probes=args.pim_breaker_probes
+            if args.pim_breaker_probes is not None else dflt.probes)
     with ctx:
         if args.pim_serve:
             return serve_pim_batched(
@@ -575,7 +645,9 @@ def main(argv=None):
                 pin_cap=args.pim_pin_cap,
                 max_queue_rows=args.pim_max_queue_rows or None,
                 deadline_ms=args.pim_deadline_ms,
-                heartbeat=args.pim_heartbeat)
+                heartbeat=args.pim_heartbeat,
+                breaker=breaker,
+                scrub_interval_ms=args.pim_scrub_interval_ms)
         if args.pim_stdin:
             return serve_pim_stdin()
         if args.pim:

@@ -735,7 +735,7 @@ def _pad_rows(vals: np.ndarray, total: int) -> np.ndarray:
     return out
 
 
-def reduce_sum(x, *, width=None, fmt=None, fused=True, **kw):
+def reduce_sum(x, *, width=None, fmt=None, fused=True, deadline=None, **kw):
     """Sum every element of ``x`` (an array or a lazy expression) with a
     log-depth in-memory adder tree; returns a scalar.
 
@@ -746,7 +746,9 @@ def reduce_sum(x, *, width=None, fmt=None, fused=True, **kw):
     accumulator grows one bit per level); fp sums in *tree order* under
     RNE, bit-exact against the same-shaped host tree.  ``fused=False``
     runs the identical pairing through per-op round trips (the unfused
-    reference)."""
+    reference).  ``deadline`` (absolute ``time.monotonic()``) cancels the
+    reduction between tree levels; a configured fault model / verify
+    policy runs every level under verified execution (DESIGN.md §14)."""
     from .core import pim_numerics as pn
     e = lazy(x, width=width, fmt=fmt)
     plan, parallel = _resolve(kw)
@@ -758,7 +760,7 @@ def reduce_sum(x, *, width=None, fmt=None, fused=True, **kw):
     total = _pow2_at_least(n_rows)
     padded = {n: _pad_rows(v, total) for n, v in inputs.items()}
     out = pn.tree_reduce_rows(prog, padded, total, 1, kind=kind, fmt=efmt,
-                              plan=plan, fused=fused)
+                              plan=plan, fused=fused, deadline=deadline)
     if e.kind == "fp":
         leaves = _graph_of(e)[1]
         dts = {l.dtype for l in leaves}
@@ -770,7 +772,7 @@ def reduce_sum(x, *, width=None, fmt=None, fused=True, **kw):
     return np.asarray(out)[0]
 
 
-def dot(x, y, *, width=None, fmt=None, fused=True, **kw):
+def dot(x, y, *, width=None, fmt=None, fused=True, deadline=None, **kw):
     """In-memory dot product ``sum_k x[k] * y[k]``: one element-parallel
     multiply feeding a log-depth adder tree, intermediates never leaving
     the packed array (DESIGN.md §13).  Operands follow ufunc dispatch
@@ -778,10 +780,10 @@ def dot(x, y, *, width=None, fmt=None, fused=True, **kw):
     patterns).  Fixed point is exact; fp is the tree-order RNE sum."""
     ex = lazy(x, width=width, fmt=fmt)
     ey = lazy(y, width=width, fmt=fmt)
-    return reduce_sum(ex * ey, fused=fused, **kw)
+    return reduce_sum(ex * ey, fused=fused, deadline=deadline, **kw)
 
 
-def gemv(a, x, *, width=None, fmt=None, fused=True, **kw):
+def gemv(a, x, *, width=None, fmt=None, fused=True, deadline=None, **kw):
     """In-memory GEMV ``y[m] = sum_k a[m, k] * x[k]``.
 
     Each output ``m`` is a packed-domain reduction lane: products land at
@@ -823,7 +825,7 @@ def gemv(a, x, *, width=None, fmt=None, fused=True, **kw):
     xb[:k, :m] = np.asarray(xv)[:, None]
     out = pn.tree_reduce_rows(prog, {"i0": xa.ravel(), "i1": xb.ravel()},
                               kp * group, group, kind=kind, fmt=ea.fmt,
-                              plan=plan, fused=fused)
+                              plan=plan, fused=fused, deadline=deadline)
     out = np.asarray(out)[:m]
     if is_fp and ea.dtype is not None and ea.dtype == ex.dtype:
         return np.asarray(out, np.uint64).astype(

@@ -36,18 +36,33 @@ FaultModel off every ExecPlan, so anything imported here would cycle).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional, Tuple
+import threading
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 __all__ = ["FaultModel", "VerifyPolicy", "FaultError", "DeadlineExceeded",
-           "word_coords"]
+           "word_coords", "Scrubber", "record_wear", "note_quarantine",
+           "quarantined_spans", "release_span", "wear_snapshot",
+           "drain_media_health"]
 
 
 class FaultError(RuntimeError):
     """Verified execution exhausted its retry/remap budget (or no clean
-    physical span exists): the result could not be produced bit-exactly."""
+    physical span exists): the result could not be produced bit-exactly.
+
+    ``context`` carries the structured failure coordinates the serving
+    error taxonomy surfaces to operators (``classify_error`` folds it into
+    the response's error payload): the failing program's content-key
+    prefix, the chunk/stage that died, how many attempts were burned and
+    where the remapper last placed it.  Only non-None fields are kept, and
+    a bare ``FaultError("msg")`` stays valid (``context == {}``)."""
+
+    def __init__(self, message: str = "", **context):
+        super().__init__(message)
+        self.context = {k: v for k, v in context.items() if v is not None}
 
 
 class DeadlineExceeded(RuntimeError):
@@ -353,3 +368,140 @@ class VerifyPolicy:
                 or self.scan_limit < 1:
             raise ValueError("max_retries >= 0, remap_after >= 1 and "
                              "scan_limit >= 1 required")
+
+
+# --------------------------------------------------------------------------
+# media lifecycle: wear counters + quarantined-span scrubbing
+# --------------------------------------------------------------------------
+#
+# Verified execution (kernels.ops) reports two media events here: every
+# dispatch attempt *writes* a physical span (wear -- memristive endurance
+# is finite, so operators need per-span write counts), and every remap
+# *abandons* a physical span (quarantine -- the span either holds a real
+# persistent fault or merely looked marginal during a transient storm).
+# The :class:`Scrubber` is the background half: it periodically re-scans
+# quarantined spans with the same simulated BIST used for placement,
+# reclaiming the ones that scan clean and keeping genuinely bad media out
+# of circulation.  Everything is module-level (one physical substrate per
+# process, like ops.HEALTH) and lock-guarded, because the scrubber thread
+# runs concurrently with the serving executor.
+
+_MEDIA_LOCK = threading.Lock()
+
+#: Per physical span (keyed by base row): verified dispatch attempts that
+#: wrote it.  The endurance ledger -- memristive cells wear out, and a
+#: span that absorbs orders of magnitude more writes than its peers is the
+#: next dead row.
+WEAR: "collections.Counter" = collections.Counter()
+
+#: Spans the remapper abandoned, base row -> span rows; the scrubber's
+#: work queue.
+_QUARANTINE: Dict[int, int] = {}
+
+#: Cumulative scrub/wear health counters (scrub_passes, spans_scrubbed,
+#: spans_reclaimed, spans_still_bad, quarantined_spans, wear_writes);
+#: :func:`drain_media_health` snapshots-and-resets (the serving stats
+#: absorb them next to ops.drain_health()).
+MEDIA: "collections.Counter" = collections.Counter()
+
+
+def record_wear(row_base: int, n_rows: int, attempts: int = 1) -> None:
+    """Count ``attempts`` write cycles against the span at ``row_base``."""
+    with _MEDIA_LOCK:
+        WEAR[int(row_base)] += int(attempts)
+        MEDIA["wear_writes"] += int(attempts)
+
+
+def note_quarantine(row_base: int, n_rows: int) -> None:
+    """Hand an abandoned span to the scrubber's work queue."""
+    with _MEDIA_LOCK:
+        prev = _QUARANTINE.get(int(row_base), 0)
+        if int(n_rows) > prev:
+            _QUARANTINE[int(row_base)] = int(n_rows)
+        if not prev:
+            MEDIA["quarantined_spans"] += 1
+
+
+def quarantined_spans() -> Dict[int, int]:
+    """Snapshot of the quarantine queue (base row -> span rows)."""
+    with _MEDIA_LOCK:
+        return dict(_QUARANTINE)
+
+
+def release_span(row_base: int) -> bool:
+    """Drop a span from quarantine (it scanned clean); True if present."""
+    with _MEDIA_LOCK:
+        return _QUARANTINE.pop(int(row_base), None) is not None
+
+
+def wear_snapshot(top: int = 8) -> Dict[int, int]:
+    """The ``top`` most-written spans (base row -> write count)."""
+    with _MEDIA_LOCK:
+        return dict(sorted(WEAR.items(), key=lambda kv: -kv[1])[:top])
+
+
+def drain_media_health() -> dict:
+    """Snapshot and reset :data:`MEDIA`; returns the non-zero counters."""
+    with _MEDIA_LOCK:
+        snap = {k: int(v) for k, v in MEDIA.items() if v}
+        MEDIA.clear()
+        return snap
+
+
+class Scrubber:
+    """Background spare-span scrubber (DESIGN.md §14).
+
+    Re-scans every quarantined span against ``model``'s simulated BIST:
+    spans that scan clean were quarantined by a transient storm (the
+    remapper treats "keeps failing verification" as "marginal media") and
+    are *reclaimed* -- released from quarantine so the physical rows
+    return to the usable pool; spans with persistent faults stay
+    quarantined and are re-checked next pass.  ``scrub_once`` is the
+    synchronous unit of work (tests drive it directly);
+    ``start``/``stop`` run it on a daemon thread at ``interval_s`` --
+    the serving loop's background media hygiene.
+    """
+
+    def __init__(self, model: "FaultModel", *, interval_s: float = 0.25):
+        self.model = model
+        self.interval_s = float(interval_s)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def scrub_once(self) -> dict:
+        """One scrub pass; returns ``{"scrubbed", "reclaimed",
+        "still_bad"}`` counts and updates :data:`MEDIA`."""
+        reclaimed = still_bad = 0
+        for base, rows in quarantined_spans().items():
+            if self.model.span_bad(base, rows):
+                still_bad += 1
+            elif release_span(base):
+                reclaimed += 1
+        with _MEDIA_LOCK:
+            MEDIA["scrub_passes"] += 1
+            MEDIA["spans_scrubbed"] += reclaimed + still_bad
+            MEDIA["spans_reclaimed"] += reclaimed
+            MEDIA["spans_still_bad"] = still_bad   # gauge, not cumulative
+        return {"scrubbed": reclaimed + still_bad,
+                "reclaimed": reclaimed, "still_bad": still_bad}
+
+    def start(self) -> "Scrubber":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(self.interval_s):
+                self.scrub_once()
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="pim-scrubber")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        self._thread = None

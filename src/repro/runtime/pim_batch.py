@@ -271,7 +271,11 @@ def classify_error(e: BaseException) -> dict:
     """Map an exception to the structured wire-format error body: a
     machine-readable ``code``, the human message, and whether a retry of
     the *same* request could succeed (bad requests never will; transient
-    execution faults, deadline misses, and overload might)."""
+    execution faults, deadline misses, and overload might).  A
+    :class:`FaultError` carrying structured context (program-key prefix,
+    chunk/stage, attempts, remap target -- DESIGN.md §14) surfaces it
+    under ``error.fault`` so operators can tell *which* program family is
+    failing, not just that retries happened."""
     if isinstance(e, DeadlineExceeded):
         code, retriable = "deadline_exceeded", True
     elif isinstance(e, FaultError):
@@ -280,9 +284,99 @@ def classify_error(e: BaseException) -> dict:
         code, retriable = "bad_request", False
     else:
         code, retriable = "internal", True
-    return {"error": {"code": code,
-                      "message": f"{type(e).__name__}: {e}",
-                      "retriable": retriable}}
+    body = {"code": code, "message": f"{type(e).__name__}: {e}",
+            "retriable": retriable}
+    ctx = getattr(e, "context", None)
+    if ctx:
+        body["fault"] = dict(ctx)
+    return {"error": body}
+
+
+# --------------------------------------------------------------------------
+# per-program-family circuit breakers (DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BreakerPolicy:
+    """Knobs of the per-(program family) circuit breaker.
+
+    * ``window`` -- recent request outcomes tracked per family.
+    * ``trip_failures`` -- retriable failures (fault / retry-exhaustion /
+      deadline) within the window that trip the breaker open.
+    * ``cooldown_s`` -- how long an open breaker sheds before it goes
+      half-open and lets probes through.
+    * ``probes`` -- half-open probe requests; that many consecutive probe
+      successes close the breaker, any probe failure re-trips it.
+    """
+    window: int = 16
+    trip_failures: int = 4
+    cooldown_s: float = 1.0
+    probes: int = 2
+
+    def __post_init__(self):
+        if self.window < 1 or self.trip_failures < 1 or self.probes < 1 \
+                or self.cooldown_s < 0:
+            raise ValueError("window/trip_failures/probes >= 1 and "
+                             "cooldown_s >= 0 required")
+
+
+class CircuitBreaker:
+    """One program family's breaker state machine:
+    closed -> (sustained failures) -> open -> (cooldown) -> half-open ->
+    (probe successes) -> closed, or (probe failure) -> open again.
+
+    ``admit`` decides how the family's next unit of work runs ("run"
+    normally, "probe" normally-but-watched, or "shed" to the fallback
+    path); ``record`` feeds an outcome back and returns the transition
+    event (``"trip"`` / ``"close"`` / None) for the caller's stats."""
+
+    def __init__(self, policy: BreakerPolicy):
+        self.policy = policy
+        self.state = "closed"
+        self._outcomes: "collections.deque" = collections.deque(
+            maxlen=policy.window)
+        self._opened_at = 0.0
+        self._probe_budget = 0
+        self._probe_successes = 0
+
+    def admit(self, now: float) -> str:
+        if self.state == "open":
+            if now - self._opened_at < self.policy.cooldown_s:
+                return "shed"
+            self.state = "half-open"
+            self._probe_budget = self.policy.probes
+            self._probe_successes = 0
+        if self.state == "half-open":
+            if self._probe_budget > 0:
+                self._probe_budget -= 1
+                return "probe"
+            return "shed"
+        return "run"
+
+    def _trip(self, now: float) -> str:
+        self.state = "open"
+        self._opened_at = now
+        self._outcomes.clear()
+        return "trip"
+
+    def record(self, ok: bool, now: float, probe: bool = False
+               ) -> Optional[str]:
+        if self.state == "half-open" and probe:
+            if not ok:
+                return self._trip(now)
+            self._probe_successes += 1
+            if self._probe_successes >= self.policy.probes:
+                self.state = "closed"
+                self._outcomes.clear()
+                return "close"
+            return None
+        if self.state != "closed":
+            return None        # stale outcome from before the transition
+        self._outcomes.append(bool(ok))
+        if sum(1 for o in self._outcomes if not o) \
+                >= self.policy.trip_failures:
+            return self._trip(now)
+        return None
 
 
 # --------------------------------------------------------------------------
@@ -308,6 +402,7 @@ class RequestResult:
     exec_us: float
     cached: bool
     degraded: bool = False
+    shed: bool = False          # family breaker open -> served on fallback
     error: Optional[dict] = None
     health: Optional[dict] = None
 
@@ -331,6 +426,11 @@ class Stats:
     faults_corrected: int = 0
     remapped_rows: int = 0
     stragglers: int = 0          # batch exec-time spikes (StragglerMonitor)
+    # circuit breakers (DESIGN.md §14)
+    breaker_trips: int = 0       # family breakers tripped open
+    breaker_probes: int = 0      # half-open probe admissions
+    breaker_closes: int = 0      # breakers closed after probe successes
+    shed_requests: int = 0       # requests served on the shed fallback
 
     def rows_per_s(self) -> float:
         return self.rows / self.exec_s if self.exec_s > 0 else float("nan")
@@ -354,7 +454,10 @@ class Stats:
                 f"faults={self.faults_detected}/{self.faults_corrected} "
                 f"(detected/corrected), retries={self.retries}, "
                 f"remapped_rows={self.remapped_rows}, "
-                f"stragglers={self.stragglers}")
+                f"stragglers={self.stragglers}, "
+                f"breaker={self.breaker_trips}/{self.breaker_probes}/"
+                f"{self.breaker_closes} (trips/probes/closes), "
+                f"shed={self.shed_requests}")
 
 
 class BatchRuntime:
@@ -363,14 +466,50 @@ class BatchRuntime:
 
     One instance per server; :meth:`execute` is also directly usable on a
     list of :class:`Prepared` handles (the benchmark and the property tests
-    drive it that way, bypassing the queue)."""
+    drive it that way, bypassing the queue).
 
-    def __init__(self, pin_cap: int = DEFAULT_PIN_CAP):
+    ``breaker`` (a :class:`BreakerPolicy`, default on) arms per-program-
+    family circuit breakers: a family -- keyed by ``Prepared.key``, the
+    program content hash, so recovery traffic for a structure shares its
+    breaker across plans -- whose requests keep failing retriably
+    (faults exhausting retries, deadline misses) trips open and its
+    subsequent requests are *shed*: served standalone on the numpy oracle
+    plan (correct, slower, ``degraded+shed``), never dropped.  After a
+    cooldown, half-open probes run on the primary path; enough successes
+    close the breaker.  ``breaker=None`` disables the layer."""
+
+    _SHED = object()
+
+    def __init__(self, pin_cap: int = DEFAULT_PIN_CAP,
+                 breaker: Optional[BreakerPolicy] = BreakerPolicy()):
         self.pins = PinnedSchedules(pin_cap)
         self.stats = Stats()
+        self.breaker = breaker
+        self.breakers: Dict[bytes, CircuitBreaker] = {}
 
     def close(self) -> None:
         self.pins.clear()
+
+    def _breaker_for(self, prep: Prepared) -> CircuitBreaker:
+        br = self.breakers.get(prep.key)
+        if br is None:
+            br = self.breakers[prep.key] = CircuitBreaker(self.breaker)
+        return br
+
+    def _note_breaker_event(self, event: Optional[str]) -> None:
+        if event == "trip":
+            self.stats.breaker_trips += 1
+        elif event == "close":
+            self.stats.breaker_closes += 1
+
+    def record_expired(self, prep: Prepared) -> None:
+        """Feed one dequeue-time deadline expiry into the request's family
+        breaker: requests of a family that keep dying in the queue are as
+        much a sustained-failure signal as ones that fail on the device."""
+        if self.breaker is None:
+            return
+        self._note_breaker_event(
+            self._breaker_for(prep).record(False, time.monotonic()))
 
     def execute(self, preps: Sequence[Prepared],
                 deadlines: Optional[Sequence[Optional[float]]] = None,
@@ -398,8 +537,20 @@ class BatchRuntime:
             return []
         dls = list(deadlines) if deadlines is not None else [None] * len(preps)
         plan = plan_groups(preps)
-        specs = []
+        now = time.monotonic()
+        modes = []
         for g in plan:
+            mode = "run"
+            if self.breaker is not None:
+                mode = self._breaker_for(g.preps[0]).admit(now)
+                if mode == "probe":
+                    self.stats.breaker_probes += 1
+            modes.append(mode)
+        specs = []
+        for g, mode in zip(plan, modes):
+            if mode == "shed":
+                specs.append(self._SHED)
+                continue
             p0 = g.preps[0]
             g.cached = p0.cached
             self.pins.touch(p0.program, p0.plan)
@@ -416,17 +567,18 @@ class BatchRuntime:
                               deadline=min(member_dls) if member_dls
                               else None))
         t0 = time.perf_counter()
-        live = [s for s in specs if s is not None]
+        live = [s for s in specs if isinstance(s, dict)]
         try:
             live_outs = iter(kops.run_program_groups(live) if live else ())
-            outs = [None if s is None else next(live_outs) for s in specs]
+            outs = [s if s is None or s is self._SHED else next(live_outs)
+                    for s in specs]
         except Exception:
             # retry each group alone: a healthy group must not pay for a
             # poisoned neighbour sharing its batch
             outs = []
             for spec in specs:
-                if spec is None:
-                    outs.append(None)
+                if spec is None or spec is self._SHED:
+                    outs.append(spec)
                     continue
                 try:
                     outs.append(kops.run_program_groups([spec])[0])
@@ -436,6 +588,12 @@ class BatchRuntime:
         batch_rows = sum(g.n_rows for g in plan)
         exec_us = exec_s * 1e6
         for g, out in zip(plan, outs):
+            if out is self._SHED:
+                self.stats.shed_requests += len(g.preps)
+                for i, p in zip(g.members, g.preps):
+                    results[i] = self._run_shed(p, dls[i], g, batch_rows,
+                                                exec_us)
+                continue
             if out is None:
                 self.stats.degraded_groups += 1
                 for i, p in zip(g.members, g.preps):
@@ -450,6 +608,21 @@ class BatchRuntime:
                     value=p.finish(sub), group_rows=g.n_rows,
                     group_size=len(g.preps), batch_rows=batch_rows,
                     exec_us=exec_us, cached=g.cached)
+        if self.breaker is not None:
+            # feed primary-path outcomes back; shed results never count --
+            # they carry no evidence about the primary path's health
+            tr = time.monotonic()
+            for g, mode in zip(plan, modes):
+                if mode == "shed":
+                    continue
+                br = self._breaker_for(g.preps[0])
+                for i in g.members:
+                    r = results[i]
+                    failed = r is None or (
+                        r.error is not None
+                        and r.error.get("retriable", False))
+                    self._note_breaker_event(
+                        br.record(not failed, tr, probe=(mode == "probe")))
         health = kops.drain_health()
         if health:
             self.stats.absorb_health(health)
@@ -487,3 +660,29 @@ class BatchRuntime:
                 value=None, group_rows=g.n_rows, group_size=len(g.preps),
                 batch_rows=batch_rows, exec_us=exec_us, cached=g.cached,
                 degraded=True, error=classify_error(e)["error"])
+
+    def _run_shed(self, p: Prepared, dl: Optional[float], g: Group,
+                  batch_rows: int, exec_us: float) -> RequestResult:
+        """Serve one member of a tripped family on the numpy oracle plan:
+        correct but slow, marked ``degraded+shed`` -- shedding degrades a
+        family's service, it never loses its requests."""
+        try:
+            if dl is not None and time.monotonic() > dl:
+                raise DeadlineExceeded(
+                    f"request expired before shed execution ({p.n_rows} "
+                    f"rows)")
+            oplan = dataclasses.replace(
+                p.plan, backend=kops.BACKENDS["numpy"], mesh=None,
+                layout=kops.ROWS32, chunk_rows=None, faults=None,
+                verify=None)
+            value = p.finish(
+                kops.run_program(p.program, p.inputs, p.n_rows, oplan))
+            return RequestResult(
+                value=value, group_rows=g.n_rows, group_size=len(g.preps),
+                batch_rows=batch_rows, exec_us=exec_us, cached=g.cached,
+                degraded=True, shed=True)
+        except Exception as e:
+            return RequestResult(
+                value=None, group_rows=g.n_rows, group_size=len(g.preps),
+                batch_rows=batch_rows, exec_us=exec_us, cached=g.cached,
+                degraded=True, shed=True, error=classify_error(e)["error"])

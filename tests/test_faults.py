@@ -13,7 +13,27 @@ from repro.core.pim_numerics import program_for
 from repro.kernels import ops as kops
 from repro.kernels.plan import LAYOUTS, SCHEDULES
 from repro.runtime.faults import (DeadlineExceeded, FaultError, FaultModel,
-                                  VerifyPolicy, word_coords)
+                                  Scrubber, VerifyPolicy, drain_media_health,
+                                  note_quarantine, quarantined_spans,
+                                  release_span, wear_snapshot, word_coords)
+
+
+@pytest.fixture(autouse=True)
+def _health_leak_check():
+    """Drained HEALTH is part of every test's contract: a test that leaves
+    counters behind corrupts its neighbours' assertions, so start clean
+    and fail loudly on leaks.  Media state (quarantine queue, MEDIA
+    counters) is likewise reset so scrub tests see only their own spans."""
+    kops.drain_health()
+    drain_media_health()
+    for base in quarantined_spans():
+        release_span(base)
+    yield
+    for base in quarantined_spans():
+        release_span(base)
+    drain_media_health()
+    leaked = kops.drain_health()
+    assert not leaked, f"test leaked undrained HEALTH counters: {leaked}"
 
 
 def _operands(n=160, seed=0):
@@ -214,6 +234,149 @@ def test_plain_plan_skips_verified_dispatch(monkeypatch):
     plan = kops.make_plan(backend="ref", chunk_rows=32)
     got = kops.run_program_streaming(PROG, {"x": x, "y": y}, len(x), plan)
     assert np.array_equal(got["z"], want)
+
+
+# ---------------------------------- packed-domain + fused paths (§14)
+
+PACKED_FAULTS = {
+    "flip": FaultModel(seed=5, force_flips=((0, 2),)),
+    "dead": FaultModel(seed=5, force_dead_rows=(1,)),
+    "stuck": FaultModel(seed=5, force_stuck=((0, 1),)),
+    "rate": FaultModel(seed=9, p_flip=5e-4),
+}
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+@pytest.mark.parametrize("kind", sorted(PACKED_FAULTS))
+def test_packed_tree_and_fused_fault_recovery_matrix(schedule, layout, kind):
+    """The compound paths -- dot, gemv (packed log-depth reduction trees)
+    and a depth-3 fused chain -- recover bit-exactly vs the numpy oracle
+    from every fault kind on every schedule x layout: forced single
+    faults plus the acceptance-rate transient flips (p_flip=5e-4)."""
+    rng = np.random.default_rng(hash((schedule, layout, kind)) & 0xFFFF)
+    fm = PACKED_FAULTS[kind]
+    vp = VerifyPolicy(backoff_s=1e-5)
+    with pim.options(backend="ref", schedule=schedule, layout=layout,
+                     faults=fm, verify=vp):
+        xd = rng.integers(0, 256, 64).astype(np.uint8)
+        yd = rng.integers(0, 256, 64).astype(np.uint8)
+        assert int(pim.dot(xd, yd)) == int(pim.dot(xd, yd, backend="numpy", layout="rows32"))
+        a = rng.integers(0, 1 << 16, (3, 8)).astype(np.uint16)
+        v = rng.integers(0, 1 << 16, 8).astype(np.uint16)
+        got = pim.gemv(a, v)
+        want = pim.gemv(a, v, backend="numpy", layout="rows32")
+        assert np.array_equal(np.asarray(got, object),
+                              np.asarray(want, object))
+        x = rng.integers(0, 256, 48).astype(np.uint8)
+        y = rng.integers(1, 256, 48).astype(np.uint8)
+        z = rng.integers(0, 256, 48).astype(np.uint8)
+        chain = pim.sub(pim.add(pim.mul(pim.lazy(x), pim.lazy(y)),
+                                pim.lazy(z)), pim.lazy(x))
+        got = chain.run()
+        want = chain.run(backend="numpy", layout="rows32")
+        assert np.array_equal(np.asarray(got, object),
+                              np.asarray(want, object))
+    kops.drain_health()
+
+
+def test_gemv_wide_group_rows64_faulty():
+    """A K=96 reduction on the paired rows64 layout walks the plane-aware
+    tree pairings (word slice / plane re-seam / in-word shift) under a
+    forced transient flip and still lands bit-exact."""
+    rng = np.random.default_rng(96)
+    a = rng.integers(0, 1 << 16, (2, 96)).astype(np.uint16)
+    v = rng.integers(0, 1 << 16, 96).astype(np.uint16)
+    with pim.options(backend="ref", layout="rows64",
+                     faults=FaultModel(seed=5, force_flips=((0, 2),)),
+                     verify=VerifyPolicy(backoff_s=1e-5)):
+        got = pim.gemv(a, v)
+        want = pim.gemv(a, v, backend="numpy", layout="rows32")
+    assert np.array_equal(np.asarray(got, object), np.asarray(want, object))
+    h = kops.drain_health()
+    assert h.get("faults_detected", 0) >= 1
+
+
+def test_packed_tree_deadline_between_levels():
+    x = np.arange(64, dtype=np.uint8)
+    with pim.options(backend="ref"):
+        with pytest.raises(DeadlineExceeded):
+            pim.dot(x, x, deadline=time.monotonic() - 1.0)
+
+
+def test_plain_plan_skips_verified_packed_dispatch(monkeypatch):
+    """Packed-domain mirror of the 0%-overhead guarantee: with faults and
+    verify unset, the verified packed dispatcher is never entered."""
+    def boom(*a, **k):
+        raise AssertionError(
+            "_verified_dispatch_packed entered on a plain plan")
+    monkeypatch.setattr(kops, "_verified_dispatch_packed", boom)
+    x = np.arange(64, dtype=np.uint8)
+    y = x[::-1].copy()
+    with pim.options(backend="ref"):
+        got = pim.dot(x, y)
+    assert int(got) == int(np.dot(x.astype(np.int64), y.astype(np.int64)))
+
+
+def test_fault_error_structured_context():
+    """FaultError carries machine-readable context (None values dropped);
+    retry exhaustion populates it with the failing program + attempts."""
+    assert FaultError("x").context == {}
+    e = FaultError("bad", program_key="ab12", attempts=3, chunk_start=None)
+    assert e.context == {"program_key": "ab12", "attempts": 3}
+    x, y, _ = _operands(64)
+    plan = kops.make_plan(
+        backend="ref", faults=FaultModel(seed=2, p_flip=1.0),
+        verify=VerifyPolicy(max_retries=1, backoff_s=1e-6, remap_after=99))
+    with pytest.raises(FaultError) as ei:
+        kops.run_program(PROG, {"x": x, "y": y}, len(x), plan)
+    ctx = ei.value.context
+    assert ctx["attempts"] >= 1 and ctx["rows"] == 64
+    assert "program_key" in ctx
+    kops.drain_health()
+
+
+# ------------------------------- media lifecycle: wear + scrubbing (§14)
+
+def test_wear_and_quarantine_from_verified_run():
+    """A persistent dead row makes verified execution abandon the span:
+    it lands in quarantine, and the spare that replaced it accumulates
+    wear -- both observable through the media health counters."""
+    x, y, want = _operands(64)
+    plan = kops.make_plan(backend="ref", chunk_rows=64,
+                          faults=FaultModel(seed=4, force_dead_rows=(1,)),
+                          verify=VerifyPolicy(backoff_s=1e-5))
+    got = kops.run_program_streaming(PROG, {"x": x, "y": y}, len(x), plan)
+    assert np.array_equal(got["z"], want)
+    kops.drain_health()
+    assert quarantined_spans()
+    assert wear_snapshot()
+    m = drain_media_health()
+    assert m["wear_writes"] >= 1 and m["quarantined_spans"] >= 1
+
+
+def test_scrubber_reclaims_transient_quarantine_keeps_bad():
+    fm = FaultModel(seed=0, force_dead_rows=(70,))
+    note_quarantine(0, 64)          # clean: dead row 70 is in [64, 128)
+    note_quarantine(64, 64)         # persistently bad
+    r = Scrubber(fm).scrub_once()
+    assert r == {"scrubbed": 2, "reclaimed": 1, "still_bad": 1}
+    assert quarantined_spans() == {64: 64}
+    m = drain_media_health()
+    assert m["scrub_passes"] == 1 and m["spans_reclaimed"] == 1
+    assert m["spans_still_bad"] == 1
+
+
+def test_scrubber_thread_runs_and_stops():
+    note_quarantine(128, 64)        # clean under a fault-free model
+    s = Scrubber(FaultModel(seed=0), interval_s=0.01).start()
+    deadline = time.monotonic() + 5.0
+    while quarantined_spans() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    s.stop()
+    assert not quarantined_spans()  # reclaimed in the background
+    assert drain_media_health()["scrub_passes"] >= 1
+    s.stop()                        # idempotent
 
 
 # ----------------------------------------------------------- deadlines

@@ -627,3 +627,168 @@ def test_serve_faulty_cli_smoke():
     assert lines[0]["result"] == [155, 245]
     assert lines[1]["result"] == [144]
     assert "pim-serve:" in proc.stderr and "faults=" in proc.stderr
+
+
+# -------------------------------------- circuit breakers (DESIGN.md §14)
+
+import time  # noqa: E402
+
+from repro.runtime.faults import FaultError, VerifyPolicy  # noqa: E402
+
+
+def test_breaker_policy_validation():
+    for bad in (dict(window=0), dict(trip_failures=0), dict(probes=0),
+                dict(cooldown_s=-1.0)):
+        with pytest.raises(ValueError):
+            pb.BreakerPolicy(**bad)
+
+
+def test_breaker_state_machine():
+    """closed -> trip -> shed -> (cooldown) half-open probes -> close,
+    and a failed probe re-trips; stale non-probe outcomes are ignored."""
+    pol = pb.BreakerPolicy(window=8, trip_failures=3, cooldown_s=0.05,
+                           probes=2)
+    br = pb.CircuitBreaker(pol)
+    t = 0.0
+    assert br.admit(t) == "run"
+    assert br.record(False, t) is None
+    assert br.record(False, t) is None
+    assert br.record(False, t) == "trip" and br.state == "open"
+    assert br.admit(t + 0.01) == "shed"             # still cooling down
+    assert br.record(False, t + 0.02) is None       # stale, ignored
+    assert br.admit(t + 0.06) == "probe"
+    assert br.admit(t + 0.06) == "probe"
+    assert br.admit(t + 0.06) == "shed"             # probe budget spent
+    assert br.record(True, t + 0.07, probe=True) is None
+    assert br.record(True, t + 0.07, probe=True) == "close"
+    assert br.state == "closed"
+    # window slides: 2 old failures + 1 success + 2 fresh failures < 3
+    # failures only if the window dropped the old ones
+    for _ in range(3):
+        br.record(False, t)
+    assert br.state == "open"
+    assert br.admit(t + 0.1) == "probe"
+    assert br.record(False, t + 0.1, probe=True) == "trip"  # probe fails
+    assert br.state == "open"
+
+
+def test_classify_error_fault_context():
+    """FaultError's structured context rides into the wire-format error
+    body under "fault" (absent for a bare FaultError)."""
+    e = FaultError("exhausted", program_key="ab12ef", attempts=3,
+                   remapped_base=None)
+    body = pb.classify_error(e)["error"]
+    assert body["code"] == "exec_failed" and body["retriable"]
+    assert body["fault"] == {"program_key": "ab12ef", "attempts": 3}
+    assert "fault" not in pb.classify_error(FaultError("x"))["error"]
+
+
+def _doomed_prep(x, y, faulty=True):
+    """A Prepared whose primary-path execution always fails (p_flip=1.0
+    with one retry) -- or its healthy same-family counterpart."""
+    doom = FaultModel(seed=3, p_flip=1.0)
+    vp = VerifyPolicy(max_retries=1, remap_after=99, backoff_s=1e-6)
+    with pim.options(backend="ref", faults=doom if faulty else None,
+                     verify=vp if faulty else None):
+        return pim.prepare("add", x, y)
+
+
+def test_breaker_trips_sheds_and_recovers():
+    """Sustained retriable failures trip the family's breaker; tripped
+    traffic is shed to the numpy oracle (correct, degraded, never lost);
+    after the cooldown a probe on the primary path closes it again."""
+    rt = pb.BatchRuntime(breaker=pb.BreakerPolicy(window=8, trip_failures=3,
+                                                  cooldown_s=0.05, probes=1))
+    x = np.arange(64, dtype=np.uint16)
+    y = x[::-1].copy()
+    want = (x.astype(np.uint32) + y) & 0xFFFF
+    for _ in range(3):
+        r = rt.execute([_doomed_prep(x, y)])[0]
+        assert r.error is not None and r.error["code"] == "exec_failed"
+        assert r.error["fault"]["attempts"] >= 1
+    assert rt.stats.breaker_trips == 1
+    fam = _doomed_prep(x, y).key
+    assert rt.breakers[fam].state == "open"
+    # shed phase: same family served on the oracle -- bit-exact, flagged
+    r = rt.execute([_doomed_prep(x, y)])[0]
+    assert r.error is None and r.shed and r.degraded
+    assert np.array_equal(np.asarray(r.value, dtype=np.uint32), want)
+    assert rt.stats.shed_requests == 1
+    # recovery: post-cooldown probe on a healthy plan (same program
+    # family -- the family key is plan-independent) closes the breaker
+    time.sleep(0.06)
+    r = rt.execute([_doomed_prep(x, y, faulty=False)])[0]
+    assert r.error is None and not r.shed
+    assert np.array_equal(np.asarray(r.value, dtype=np.uint32), want)
+    assert rt.stats.breaker_probes == 1 and rt.stats.breaker_closes == 1
+    assert rt.breakers[fam].state == "closed"
+    rt.close()
+    kops.drain_health()
+
+
+def test_record_expired_feeds_breaker():
+    rt = pb.BatchRuntime(breaker=pb.BreakerPolicy(trip_failures=2,
+                                                  cooldown_s=9.0))
+    x = np.arange(8, dtype=np.uint8)
+    p = _doomed_prep(x, x, faulty=False)
+    rt.record_expired(p)
+    rt.record_expired(p)
+    assert rt.stats.breaker_trips == 1
+    assert rt.breakers[p.key].state == "open"
+    # tripped family sheds immediately -- and still answers correctly
+    r = rt.execute([_doomed_prep(x, x, faulty=False)])[0]
+    assert r.shed and r.error is None
+    assert np.array_equal(np.asarray(r.value, dtype=np.uint16),
+                          (x.astype(np.uint16) + x) & 0xFF)
+    rt.close()
+
+
+def test_breaker_disabled_never_sheds():
+    rt = pb.BatchRuntime(breaker=None)
+    x = np.arange(32, dtype=np.uint16)
+    for _ in range(6):
+        r = rt.execute([_doomed_prep(x, x)])[0]
+        assert r.error is not None and not r.shed
+    assert not rt.breakers and rt.stats.shed_requests == 0
+    rt.record_expired(_doomed_prep(x, x, faulty=False))   # no-op
+    assert not rt.breakers
+    rt.close()
+    kops.drain_health()
+
+
+def test_serve_breaker_cli_smoke():
+    """--pim-serve subprocess: a program family whose requests keep dying
+    (deadline expiry in the queue) trips its circuit breaker; traffic then
+    degrades to the shed path without request loss, and after the cooldown
+    a half-open probe on the primary path closes the breaker again."""
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--pim-serve",
+         "--pim-window-ms", "5", "--pim-breaker-failures", "2",
+         "--pim-breaker-cooldown-ms", "400", "--pim-breaker-probes", "1"],
+        cwd=REPO, env=_env(), stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE, text=True, bufsize=1)
+    try:
+        def send(line):
+            proc.stdin.write(line + "\n")
+            proc.stdin.flush()
+            return json.loads(proc.stdout.readline())
+
+        # trip: two dead-on-arrival requests of one family
+        doomed = ('{"op":"add","dtype":"uint8","x":[1],"y":[2],'
+                  '"deadline_ms":0}')
+        for _ in range(2):
+            r = send(doomed)
+            assert r["error"]["code"] == "deadline_exceeded", r
+        # shed: the family is open -> served degraded, still bit-exact
+        r = send('{"op":"add","dtype":"uint8","x":[20],"y":[22]}')
+        assert r["result"] == [42], r
+        assert r.get("shed") and r.get("degraded"), r
+        # recover: past the cooldown, a probe runs the primary path
+        time.sleep(0.9)
+        r = send('{"op":"add","dtype":"uint8","x":[5],"y":[6]}')
+        assert r["result"] == [11] and "shed" not in r, r
+        _, err = proc.communicate(timeout=420)      # EOF + drain stderr
+    finally:
+        proc.kill()
+    assert proc.returncode == 0, err[-2000:]
+    assert "breaker=1/1/1" in err and "shed=1" in err, err[-2000:]
