@@ -29,6 +29,7 @@ import time
 import numpy as np
 
 from repro.core.device_model import PIM_DEFAULT
+from repro.runtime import telemetry
 
 
 def _rate(n: int, dt: float):
@@ -46,6 +47,54 @@ def _best_of(fn, reps: int = 8) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _lat_fields(samples_s) -> dict:
+    """p50/p99 of the per-call wall samples, in microseconds.  Percentiles
+    ride next to the min-of-reps headline so the checked-in BENCH_<n>.json
+    records each row's jitter, not just its floor."""
+    s = np.asarray(samples_s, dtype=float) * 1e6
+    return {"lat_p50_us": round(float(np.percentile(s, 50)), 1),
+            "lat_p99_us": round(float(np.percentile(s, 99)), 1)}
+
+
+def _model_fields(counters: dict, calls: int) -> dict:
+    """Analytical device cost per call from the drained telemetry model
+    counters (DESIGN.md §15): NOR cycles on the memristive device model
+    and the command-energy estimate.  Empty when the measured path never
+    dispatched through the instrumented executors (e.g. pure numpy)."""
+    calls = max(calls, 1)
+    cycles = counters.get("pim.model.cycles", 0) / calls
+    if not cycles:
+        return {}
+    epj = counters.get("pim.model.energy_pj", 0.0) / calls
+    return {"model_cycles": int(round(cycles)),
+            "model_us": round(cycles * PIM_DEFAULT.cycle_ns * 1e-3, 3),
+            "model_energy_nj": round(epj * 1e-3, 4)}
+
+
+def _measured(fn, reps: int = 8):
+    """One benchmark measurement: min-of-reps wall time plus the derived
+    fields every tracked row now carries -- wall p50/p99 and the modeled
+    device cycles/energy drained from the telemetry registry over the
+    same ``reps`` calls."""
+    telemetry.drain_model_counters()            # window starts clean
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    counters = telemetry.drain_model_counters()
+    return min(samples), {**_lat_fields(samples),
+                          **_model_fields(counters, reps)}
+
+
+def _model_of_one(fn) -> dict:
+    """Modeled cost of a single call (for rows whose timing loop mixes
+    two configurations and cannot attribute the drained counters)."""
+    telemetry.drain_model_counters()
+    fn()
+    return _model_fields(telemetry.drain_model_counters(), 1)
 
 
 def _sharded_row_subprocess(row_name):
@@ -103,7 +152,7 @@ def _kernel_rows(only: str = ""):
         kops.run_program(prog, {"x": x, "y": y}, n, **kw)   # warm up
         # min-of-20: this host-shared CPU jitters 30-40% between runs, and
         # the 8k row is the PR-over-PR perf trajectory anchor
-        return _best_of(
+        return _measured(
             lambda: kops.run_program(prog, {"x": x, "y": y}, n, **kw),
             reps=20)
 
@@ -121,7 +170,7 @@ def _kernel_rows(only: str = ""):
         (several rows report their ratio against it)."""
         if not _base:
             _base.append(bench(backend="ref"))
-        return _base[0]
+        return _base[0][0]
 
     if want_row("kernel/fp16_add_8k_rows"):
         # tracked row: the default executor path (contiguous-slot schedule,
@@ -132,39 +181,40 @@ def _kernel_rows(only: str = ""):
             "rows_per_s": _rate(n, dt), "backend": "ref", "levelized": 1,
             "schedule": "slots", "levels": int(sched.n_levels),
             "level_width": int(sched.width), "cells": int(sched.n_cells),
-            "copy_gates": int(sched.copy_gates)}))
+            "copy_gates": int(sched.copy_gates), **_base[0][1]}))
     if want_row("kernel/fp16_add_8k_rows_dense"):
-        dtd = bench(backend="ref", schedule="dense")
+        dtd, exd = bench(backend="ref", schedule="dense")
         rows.append(("kernel/fp16_add_8k_rows_dense", dtd * 1e6, {
             "rows_per_s": _rate(n, dtd), "backend": "ref", "levelized": 1,
             "schedule": "dense",
-            "speedup_slots": round(dtd / base_dt(), 2)}))
+            "speedup_slots": round(dtd / base_dt(), 2), **exd}))
     if want_row("kernel/fp16_add_8k_rows_serial"):
-        dts = bench(backend="ref", levelized=False)
+        dts, exs = bench(backend="ref", levelized=False)
         rows.append(("kernel/fp16_add_8k_rows_serial", dts * 1e6, {
             "rows_per_s": _rate(n, dts), "backend": "ref", "levelized": 0,
-            "speedup_levelized": round(dts / base_dt(), 2)}))
+            "speedup_levelized": round(dts / base_dt(), 2), **exs}))
     if want_row("kernel/fp16_add_8k_rows_pallas"):
-        dtp = bench(backend="pallas", schedule="dense")
+        dtp, exp_ = bench(backend="pallas", schedule="dense")
         rows.append(("kernel/fp16_add_8k_rows_pallas", dtp * 1e6, {
             "rows_per_s": _rate(n, dtp), "backend": "pallas",
-            "levelized": 1, "schedule": "dense"}))
+            "levelized": 1, "schedule": "dense", **exp_}))
     if want_row("kernel/fp16_add_8k_rows_pallas_fused"):
         # the slot-schedule pallas kernel: scatter-free scan body, one
         # fused pallas_call -- the row that must be <= the tracked ref row
-        dtf = bench(backend="pallas", schedule="slots")
+        dtf, exf = bench(backend="pallas", schedule="slots")
         rows.append(("kernel/fp16_add_8k_rows_pallas_fused", dtf * 1e6, {
             "rows_per_s": _rate(n, dtf), "backend": "pallas",
             "levelized": 1, "schedule": "slots",
-            "vs_ref": round(dtf / base_dt(), 3)}))
+            "vs_ref": round(dtf / base_dt(), 3), **exf}))
     if want_row("kernel/fp16_add_8k_rows_rows64"):
         # the paired-uint32 word layout (ExecPlan layout="rows64",
         # DESIGN.md §11): 64 rows per word-pair, halved trailing word axis
-        dt64 = bench(plan=kops.make_plan(backend="ref", layout="rows64"))
+        dt64, ex64 = bench(plan=kops.make_plan(backend="ref",
+                                               layout="rows64"))
         rows.append(("kernel/fp16_add_8k_rows_rows64", dt64 * 1e6, {
             "rows_per_s": _rate(n, dt64), "backend": "ref", "levelized": 1,
             "schedule": "slots", "layout": "rows64",
-            "vs_rows32": round(dt64 / base_dt(), 3)}))
+            "vs_rows32": round(dt64 / base_dt(), 3), **ex64}))
     if want_row("kernel/fp16_add_8k_rows_verified"):
         # verified execution with checking on but no faults injected: the
         # retry/spot-check scaffolding of the verified dispatcher.  The
@@ -201,22 +251,23 @@ def _kernel_rows(only: str = ""):
         rows.append(("kernel/fp16_add_8k_rows_verified", dtv * 1e6, {
             "rows_per_s": _rate(n, dtv), "backend": "ref", "levelized": 1,
             "schedule": "slots", "verified": 1,
-            "overhead_vs_base": round(float(np.median(ratios)) - 1.0, 3)}))
+            "overhead_vs_base": round(float(np.median(ratios)) - 1.0, 3),
+            **_lat_fields(vts), **_model_of_one(lambda: _one(pln_v))}))
 
     # straight-line static-slice emission (the Mosaic-lowerable shape):
     # segmented jaxpr chain on ref, fully unrolled kernel on pallas.  On
     # CPU the unrolled forms pay per-op dispatch/interpret overhead; these
     # rows track that gap honestly (hardware is the target).
     if want_row("kernel/fp16_add_8k_rows_static"):
-        dss = bench(backend="ref", schedule="slots-static")
+        dss, exss = bench(backend="ref", schedule="slots-static")
         rows.append(("kernel/fp16_add_8k_rows_static", dss * 1e6, {
             "rows_per_s": _rate(n, dss), "backend": "ref", "levelized": 1,
-            "schedule": "slots-static"}))
+            "schedule": "slots-static", **exss}))
     if want_row("kernel/fp16_add_8k_rows_pallas_static"):
-        dsp = bench(backend="pallas", schedule="slots-static")
+        dsp, exsp = bench(backend="pallas", schedule="slots-static")
         rows.append(("kernel/fp16_add_8k_rows_pallas_static", dsp * 1e6, {
             "rows_per_s": _rate(n, dsp), "backend": "pallas",
-            "levelized": 1, "schedule": "slots-static"}))
+            "levelized": 1, "schedule": "slots-static", **exsp}))
 
     # ---- compound-program fusion: packed-domain reduction trees
     # (DESIGN.md §13).  speedup_vs_unfused is the tracked claim: the fused
@@ -238,34 +289,38 @@ def _kernel_rows(only: str = ""):
                 f = _best_of(run_fused, reps=1)
             fts.append(f)
             ratios.append(u / f)
-        return min(fts), float(np.median(ratios))
+        return min(fts), float(np.median(ratios)), fts
 
     if want_row("kernel/fp16_dot_8k"):
         from repro import pim_ufunc as pim
         xd = x.copy()
         yd = y.copy()
-        dtd, ratio = _fused_vs_unfused(
-            lambda: pim.dot(xd, yd, fmt="fp16", backend="ref"),
+        run_dot = lambda: pim.dot(xd, yd, fmt="fp16", backend="ref")
+        dtd, ratio, dts_s = _fused_vs_unfused(
+            run_dot,
             lambda: pim.dot(xd, yd, fmt="fp16", backend="ref",
                             fused=False))
         rows.append(("kernel/fp16_dot_8k", dtd * 1e6, {
             "rows_per_s": _rate(n, dtd), "backend": "ref", "levelized": 1,
             "schedule": "slots", "fused": 1, "reduce_rows": n,
-            "speedup_vs_unfused": round(ratio, 2)}))
+            "speedup_vs_unfused": round(ratio, 2),
+            **_lat_fields(dts_s), **_model_of_one(run_dot)}))
     if want_row("kernel/i16_gemv_64x1k"):
         from repro import pim_ufunc as pim
         gm, gk = 64, 1024
         ga = rng.integers(0, 1 << 16, (gm, gk)).astype(np.uint64)
         gx = rng.integers(0, 1 << 16, gk).astype(np.uint64)
-        dtg, gratio = _fused_vs_unfused(
-            lambda: pim.gemv(ga, gx, width=16, backend="ref"),
+        run_gemv = lambda: pim.gemv(ga, gx, width=16, backend="ref")
+        dtg, gratio, gts_s = _fused_vs_unfused(
+            run_gemv,
             lambda: pim.gemv(ga, gx, width=16, backend="ref",
                              fused=False), pairs=5)
         rows.append(("kernel/i16_gemv_64x1k", dtg * 1e6, {
             "rows_per_s": _rate(gm * gk, dtg), "backend": "ref",
             "levelized": 1, "schedule": "slots", "fused": 1,
             "m": gm, "k": gk,
-            "speedup_vs_unfused": round(gratio, 2)}))
+            "speedup_vs_unfused": round(gratio, 2),
+            **_lat_fields(gts_s), **_model_of_one(run_gemv)}))
     if want_row("kernel/i16_gemv_64x1k_verified"):
         # the packed reduction tree under verified execution (DESIGN.md
         # §14): per-level on-device check words + the host compare, no
@@ -299,7 +354,9 @@ def _kernel_rows(only: str = ""):
             "rows_per_s": _rate(gm * gk, dtgv), "backend": "ref",
             "levelized": 1, "schedule": "slots", "fused": 1,
             "verified": 1, "m": gm, "k": gk,
-            "overhead_vs_base": round(float(np.median(ratios)) - 1.0, 3)}))
+            "overhead_vs_base": round(float(np.median(ratios)) - 1.0, 3),
+            **_lat_fields(vts),
+            **_model_of_one(lambda: _one_gemv(True))}))
 
     # ---- scale path: 1 Mi rows, chunked streaming +/- row sharding
     nm = 1 << 20
@@ -313,32 +370,32 @@ def _kernel_rows(only: str = ""):
         run = lambda: kops.run_program_streaming(
             prog, {"x": xm, "y": ym}, nm, stream_plan)
         run()                               # warm up (compiles chunk shape)
-        return _best_of(run, reps=3)
+        return _measured(run, reps=3)
 
     if want_row("kernel/fp16_add_1M_rows_stream"):
-        dt1 = bench_stream(mesh=None)
+        dt1, ex1 = bench_stream(mesh=None)
         rows.append(("kernel/fp16_add_1M_rows_stream", dt1 * 1e6, {
             "rows_per_s": _rate(nm, dt1), "backend": "ref", "levelized": 1,
-            "chunk_rows": chunk, "n_devices": 1}))
+            "chunk_rows": chunk, "n_devices": 1, **ex1}))
 
     def sharded_row(name, layout):
         is_child = os.environ.get("_ARITPIM_SHARDED_BENCH_CHILD") == "1"
         if len(jax.devices()) > 1:          # already multi-device: in-process
             mesh = kops.row_mesh()
-            dt4 = bench_stream(mesh=mesh, layout=layout)
+            dt4, ex4 = bench_stream(mesh=mesh, layout=layout)
             return (name, dt4 * 1e6, {
                 "rows_per_s": _rate(nm, dt4), "backend": "ref",
                 "levelized": 1, "chunk_rows": chunk, "layout": layout,
-                "n_devices": int(mesh.devices.size)})
+                "n_devices": int(mesh.devices.size), **ex4})
         if is_child:
             # the device-split flag did not take (e.g. a non-CPU backend
             # ignores it): record the degenerate single-device measurement
             # rather than recursing into another identical child
-            dt4 = bench_stream(mesh=None, layout=layout)
+            dt4, ex4 = bench_stream(mesh=None, layout=layout)
             return (name, dt4 * 1e6, {
                 "rows_per_s": _rate(nm, dt4), "backend": "ref",
                 "levelized": 1, "chunk_rows": chunk, "layout": layout,
-                "n_devices": 1})
+                "n_devices": 1, **ex4})
         return _sharded_row_subprocess(name)
 
     if want_row("kernel/fp16_add_1M_rows_sharded"):

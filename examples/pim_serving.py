@@ -22,7 +22,7 @@ import time
 import numpy as np
 
 from repro import pim_ufunc as pim
-from repro.runtime import pim_batch
+from repro.runtime import pim_batch, telemetry
 
 rng = np.random.default_rng(0)
 N = 512                                  # rows per request
@@ -58,10 +58,27 @@ runtime.execute(preps)
 for op, x, y in traffic:
     getattr(pim, op)(x, y)
 
+telemetry.drain_model_counters()         # window the analytical cost gauge
 t0 = time.perf_counter()
 results = runtime.execute(preps)
 dt_batched = time.perf_counter() - t0
 print(runtime.stats.summary(pinned=len(runtime.pins)))
+
+# per-batch telemetry (DESIGN.md §15): latency percentiles from the
+# runtime's own registry, and the modeled device cost of what just ran --
+# PIM cycles on the memristive device model next to host wall clock
+exec_h = runtime.metrics.summary("pim.batch.exec_us")
+occ_h = runtime.metrics.summary("pim.batch.occupancy_rows")
+print(f"exec_us  p50={exec_h['p50']:.0f} p99={exec_h['p99']:.0f} "
+      f"(n={exec_h['count']})  "
+      f"occupancy p50={occ_h['p50']:.0f} rows")
+model = telemetry.drain_model_counters()
+cyc = model.get("pim.model.cycles", 0)
+print(f"modeled: {model.get('pim.exec.dispatches', 0)} dispatches, "
+      f"{cyc:,} PIM cycles = "
+      f"{cyc * telemetry.PIM_DEFAULT.cycle_ns * 1e-3:.1f} us on-device, "
+      f"{model.get('pim.model.energy_pj', 0.0) * 1e-6:.2f} uJ modeled "
+      f"energy")
 
 # the serial loop: one program execution per request (--pim-stdin's model)
 t0 = time.perf_counter()

@@ -42,6 +42,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.gates import LevelSchedule, levelize
+from ..runtime import telemetry
 from ..runtime.faults import (DeadlineExceeded, FaultError,  # noqa: F401
                               FaultModel, VerifyPolicy, note_quarantine,
                               record_wear)
@@ -113,6 +114,25 @@ _key_memo: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 _compiled: "collections.OrderedDict[tuple, _Compiled]" = \
     collections.OrderedDict()
 
+# Serial-order modeled costs for paths that never build a compiled entry
+# (the numpy oracle).  Weak-keyed so it does not pin programs, and kept
+# out of ``_compiled`` so oracle runs cannot churn the weighted LRU.
+_serial_model_memo: "weakref.WeakKeyDictionary" = \
+    weakref.WeakKeyDictionary()
+
+
+def _serial_model(program) -> "telemetry.ModeledCost":
+    m = _serial_model_memo.get(program)
+    if m is None:
+        m = telemetry.COST_MODEL.program_cost(program.cost())
+        _serial_model_memo[program] = m
+    return m
+
+#: Compiled-program LRU lifecycle counters (``pim.cache.hits`` /
+#: ``misses`` / ``evictions`` on the global registry) -- what serving's
+#: periodic stats lines derive the cache hit rate from.
+_CACHE = telemetry.REGISTRY.group("pim.cache")
+
 # Pinned entries (cache key -> pin refcount) are exempt from LRU
 # eviction: the batched serving runtime pins its hot working set so mixed
 # traffic that keeps minting cold program structures can never churn a hot
@@ -154,6 +174,7 @@ def _evict_over_cap(protect: Optional[tuple] = None) -> None:
                 break
         weight -= _compiled[key].weight
         del _compiled[key]
+        _CACHE.add("evictions")
 
 
 def set_compiled_cache_cap(cap: int, weight_cap: Optional[int] = None) -> int:
@@ -191,6 +212,7 @@ def pin_program(program, plan: Optional[ExecPlan] = None) -> tuple:
     key = cache_key(program, plan)
     if key not in _compiled:
         _compiled[key] = _Compiled()
+        _CACHE.add("misses")     # a pin-created entry is a cold program
         _evict_over_cap(protect=key)
     _pinned[key] = _pinned.get(key, 0) + 1
     return key
@@ -285,6 +307,7 @@ class _Resolved:
     k_out: int
     fused_ok: bool                   # every port fits a 32-bit transpose
     use_static: bool                 # the straight-line emission applies
+    model: Optional["telemetry.ModeledCost"] = None  # analytical cost gauge
 
 
 @dataclasses.dataclass
@@ -301,6 +324,7 @@ class _Compiled:
     resolved: Dict[tuple, _Resolved] = dataclasses.field(default_factory=dict)
     static_chain: Dict[tuple, Callable] = dataclasses.field(
         default_factory=dict)
+    serial_model: Optional["telemetry.ModeledCost"] = None
 
     @property
     def weight(self) -> int:
@@ -314,6 +338,14 @@ class _Compiled:
         if self.arrays is None:
             self.arrays = program.to_arrays()
         return self.arrays
+
+    def get_serial_model(self, program) -> "telemetry.ModeledCost":
+        """Modeled cost of the *gate-serial* execution order (numpy oracle
+        and un-levelized executors), memoized per cache entry."""
+        if self.serial_model is None:
+            self.serial_model = telemetry.COST_MODEL.program_cost(
+                program.cost())
+        return self.serial_model
 
     def get_schedule(self, program, plan: ExecPlan, kind: Optional[str] = None
                      ) -> LevelSchedule:
@@ -391,7 +423,8 @@ class _Compiled:
             fused_ok=bool(in_names) and
             max(in_widths + out_widths, default=0) <= 32,
             use_static=(plan.schedule == "slots-static" and slots_ok
-                        and plan.mesh is None))
+                        and plan.mesh is None),
+            model=telemetry.COST_MODEL.schedule_cost(sched))
         self.resolved[memo_key] = r
         return r
 
@@ -425,8 +458,10 @@ def compiled(program, plan: Optional[ExecPlan] = None) -> _Compiled:
     entry = _compiled.get(key)
     if entry is None:
         entry = _compiled[key] = _Compiled()
+        _CACHE.add("misses")
     else:
         _compiled.move_to_end(key)
+        _CACHE.add("hits")
     _evict_over_cap(protect=key)
     return entry
 
@@ -701,18 +736,22 @@ def _sharded_exec(fn, mesh: Mesh, check_rep: bool, data_rank: int = 2,
 # output representation inherits the machinery and the compiled artifacts
 # stay byte-identical (plan.compile_key excludes faults/verify).
 
-#: Cumulative module-level health counters (faults_injected/detected/
-#: corrected, retries, remapped_rows, spot_checks, spot_mismatches);
-#: :func:`drain_health` snapshots-and-resets them (the serving runtime
-#: drains per batch into its Stats).
-HEALTH: "collections.Counter" = collections.Counter()
+#: Cumulative health counters (faults_injected/detected/corrected,
+#: retries, remapped_rows, spot_checks, spot_mismatches) -- a
+#: Counter-shaped view over the global telemetry registry's
+#: ``pim.health.*`` names, so executor threads and the media scrubber
+#: increment under one lock (the bare ``Counter`` this used to be lost
+#: concurrent updates: ``c[k] += 1`` is a get-then-set pair).  Hot sites
+#: use the atomic :meth:`~repro.runtime.telemetry.CounterGroup.add`;
+#: :func:`drain_health` snapshots-and-resets (the serving runtime drains
+#: per batch into its Stats).
+HEALTH: "telemetry.CounterGroup" = telemetry.REGISTRY.group("pim.health")
 
 
 def drain_health() -> dict:
-    """Snapshot and reset :data:`HEALTH`; returns the non-zero counters."""
-    snap = {k: int(v) for k, v in HEALTH.items() if v}
-    HEALTH.clear()
-    return snap
+    """Snapshot and reset :data:`HEALTH`; returns the non-zero counters.
+    (Compatibility shim over ``HEALTH.drain()`` -- the historical API.)"""
+    return HEALTH.drain()
 
 
 class _Corrupt(Exception):
@@ -755,7 +794,7 @@ class _FaultCtx:
 
     def _checked(self, clean_chk, data, axis: int, injected: int):
         if injected:
-            HEALTH["faults_injected"] += injected
+            HEALTH.add("faults_injected", injected)
         # with no FaultModel nothing can have mutated the readback, so the
         # refold-and-compare is a guaranteed no-op: the clean fold above
         # models the hardware's parity generation cost, the compare only
@@ -763,7 +802,7 @@ class _FaultCtx:
         if clean_chk is not None and self.faults is not None:
             if not np.array_equal(np.bitwise_xor.reduce(data, axis=axis),
                                   clean_chk):
-                HEALTH["faults_detected"] += 1
+                HEALTH.add("faults_detected")
                 raise _Corrupt("check-word mismatch")
         return data
 
@@ -846,7 +885,7 @@ class _VerifyRun:
             note_quarantine(base, span)       # scrubber's work queue
             base = self._clean_spare(span, self.policy.scan_limit)
             self.remap[start] = base
-            HEALTH["remapped_rows"] += span
+            HEALTH.add("remapped_rows", span)
         return base
 
     def rehome(self, start: int, span: int) -> int:
@@ -858,7 +897,7 @@ class _VerifyRun:
         note_quarantine(self.remap.get(start, start), span)
         base = self._clean_spare(span, self.policy.scan_limit)
         self.remap[start] = base
-        HEALTH["remapped_rows"] += span
+        HEALTH.add("remapped_rows", span)
         return base
 
     def maybe_spot(self, program, inputs, n_rows: int, out: dict) -> None:
@@ -875,7 +914,7 @@ class _VerifyRun:
         if _spot_debt < pol.spot_interval_rows:
             return
         _spot_debt = 0
-        HEALTH["spot_checks"] += 1
+        HEALTH.add("spot_checks")
         k = min(pol.spot_rows, n_rows)
         idx = np.unique(np.linspace(0, n_rows - 1, num=k, dtype=np.int64))
         sub_in = {n: np.asarray(v)[idx] for n, v in inputs.items()}
@@ -885,8 +924,8 @@ class _VerifyRun:
         want = run_program(program, sub_in, int(idx.size), oplan)
         for name, w in want.items():
             if not np.array_equal(np.asarray(out[name])[idx], w):
-                HEALTH["spot_mismatches"] += 1
-                HEALTH["faults_detected"] += 1
+                HEALTH.add("spot_mismatches")
+                HEALTH.add("faults_detected")
                 raise _Corrupt(f"oracle spot check mismatch on {name!r}")
 
 
@@ -929,13 +968,13 @@ def _verified_dispatch(program, inputs: Dict[str, np.ndarray], n_rows: int,
                         program_key=pkey[:8].hex(), chunk_start=start,
                         rows=n_rows, attempts=attempt,
                         remapped_base=vrun.remap.get(start))
-                HEALTH["retries"] += 1
+                HEALTH.add("retries")
                 time.sleep(min(pol.backoff_s * (1 << (attempt - 1)), 0.05))
                 if attempt >= pol.remap_after and plan.faults is not None:
                     row_base = vrun.rehome(start, span)
                 fin = dispatch(attempt, row_base)
         if attempt:
-            HEALTH["faults_corrected"] += 1
+            HEALTH.add("faults_corrected")
         return out
 
     return finalize
@@ -989,14 +1028,14 @@ def _verified_dispatch_packed(program, n_rows: int, plan: ExecPlan,
                         program_key=pkey[:8].hex(), stage=stage,
                         rows=n_rows, attempts=attempt,
                         remapped_base=vrun.remap.get(0))
-                HEALTH["retries"] += 1
+                HEALTH.add("retries")
                 _check_deadline(deadline)
                 time.sleep(min(pol.backoff_s * (1 << (attempt - 1)), 0.05))
                 if attempt >= pol.remap_after and plan.faults is not None:
                     row_base = vrun.rehome(0, span)
                 fin = dispatch(attempt, row_base)
         if attempt:
-            HEALTH["faults_corrected"] += 1
+            HEALTH.add("faults_corrected")
         return out
 
     return finalize
@@ -1051,6 +1090,25 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
     comp = compiled(program, plan)
     in_names = sorted(inputs)
     r = comp.resolve(program, plan, tuple(in_names))
+    # one O(1) registry fold per dispatch: exec counters + the modeled
+    # cycle/energy gauges precomputed at resolve time (DESIGN.md §15) --
+    # the telemetry cost is a handful of dict ops, independent of rows
+    # and schedule size, so the tracked-kernel overhead stays <2%
+    telemetry.record_dispatch(n_rows, r.model)
+    tracer = telemetry.TRACER
+    t_disp = time.perf_counter() if tracer.enabled else 0.0
+
+    def _traced(fin: Callable) -> Callable:
+        if not tracer.enabled:
+            return fin
+        def wrapped():
+            out = fin()
+            tracer.event("exec", t_disp, time.perf_counter(),
+                         cat="pim.exec", rows=n_rows,
+                         levels=int(r.sched.n_levels), kind=r.kind)
+            return out
+        return wrapped
+
     layout, backend, mesh = plan.layout, plan.backend, plan.mesh
     planes = layout.planes
     shards = 1 if mesh is None else mesh.devices.size
@@ -1119,7 +1177,7 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                                         else np.asarray(chk))
             return {n: o[p, :n_rows].astype(np.uint64)
                     for p, n in enumerate(r.names)}
-        return finalize
+        return _traced(finalize)
     if packed_in is not None:
         k_in = sum(len(r.sched.pack_cells(n)) for n in in_names)
         if packed_in.shape[-2] != k_in:
@@ -1173,7 +1231,7 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
         return _unpack_sub(s,
                            [(n, len(r.sched.ports[n])) for n in r.names],
                            n_rows)
-    return finalize
+    return _traced(finalize)
 
 
 def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
@@ -1210,6 +1268,7 @@ def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
     if plan.backend.name == "numpy":
         if plan.mesh is not None:       # unreachable (plan validates) --
             raise ValueError("mesh sharding requires a jax backend")
+        telemetry.record_dispatch(n_rows, _serial_model(program))
         state = pack_rows(inputs, program.ports, n_rows, program.n_cells,
                           pad_to=1)
         st = np.ascontiguousarray(state.T)
@@ -1222,6 +1281,7 @@ def run_program(program, inputs: Dict[str, np.ndarray], n_rows: int,
                                       _VerifyRun(plan), 0)()
         return _dispatch_levelized(program, inputs, n_rows, plan)()
     comp = compiled(program, plan)
+    telemetry.record_dispatch(n_rows, comp.get_serial_model(program))
     ops, a, b, o, n_cells = comp.get_arrays(program)
     state = pack_rows(inputs, program.ports, n_rows, n_cells,
                       pad_to=plan.backend.pad_to)

@@ -223,7 +223,9 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
                       max_queue_rows=None, deadline_ms=None,
                       heartbeat=None, stats: bool = True,
                       breaker="default",
-                      scrub_interval_ms: float = 250.0) -> dict:
+                      scrub_interval_ms: float = 250.0,
+                      stats_interval_ms: float = 0.0,
+                      metrics_file=None, trace_file=None) -> dict:
     """Batched JSON-lines loop (``--pim-serve``): same request/response
     protocol as :func:`serve_pim_stdin`, but requests admitted within one
     micro-batching window coalesce by compiled-program structure and each
@@ -261,8 +263,21 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
     :class:`~repro.runtime.faults.Scrubber` re-scans quarantined spans
     every ``scrub_interval_ms`` for the lifetime of the loop; its media
     counters come back under ``"media"``.
+
+    Telemetry (DESIGN.md §15): ``stats_interval_ms > 0`` emits a periodic
+    ``{"type": "stats", ...}`` JSON line to stderr (at most once per
+    interval, evaluated per batch) with p50/p99 queue-wait and batch-exec
+    latency, batch row occupancy, and the compiled-program cache hit
+    rate.  ``metrics_file`` keeps a Prometheus-style text exposition of
+    the runtime's metrics (plus the process-global health/cache/model
+    counters) refreshed at the same cadence and at shutdown.
+    ``trace_file`` enables the pipeline tracer for the lifetime of the
+    loop and writes the span buffer as Chrome-trace JSON at shutdown.
+    With ``stats=True`` the shutdown stats also emit as one
+    machine-parseable ``{"type": "summary", ...}`` JSON stderr line next
+    to the historical human one.
     """
-    from ..runtime import pim_batch
+    from ..runtime import pim_batch, telemetry
     from ..runtime.fault_tolerance import Heartbeat, StragglerMonitor
     from ..runtime.faults import FaultModel, Scrubber, drain_media_health
     inp = sys.stdin if inp is None else inp
@@ -270,6 +285,11 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
     q = pim_batch.BatchQueue(window_ms=window_ms,
                              max_batch_rows=max_batch_rows,
                              max_queue_rows=max_queue_rows)
+    # Bound before the reader thread starts -- its closure reads `tracer`.
+    tracer = telemetry.TRACER
+    trace_prev = None
+    if trace_file:
+        trace_prev, tracer.enabled = tracer.enabled, True
 
     def _admit():
         try:
@@ -297,6 +317,8 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
                     q.put((_err("internal", f"{type(e).__name__}: {e}",
                                 True), None, t_admit, None))
                 else:
+                    tracer.event("prepare", t_admit, time.perf_counter(),
+                                 cat="pim.serve", rows=int(prep.n_rows))
                     if not q.offer((None, prep, t_admit, dl),
                                    n_rows=prep.n_rows):
                         # backpressure: ordered, structured, retriable --
@@ -317,6 +339,39 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
         runtime = pim_batch.BatchRuntime(pin_cap=pin_cap)
     else:
         runtime = pim_batch.BatchRuntime(pin_cap=pin_cap, breaker=breaker)
+
+    def _rps() -> float:
+        v = runtime.stats.rows_per_s()
+        return round(v, 1) if v == v else 0.0   # NaN-free strict JSON
+
+    def _cache_section() -> dict:
+        reg = telemetry.REGISTRY
+        hits = int(reg.counter("pim.cache.hits"))
+        misses = int(reg.counter("pim.cache.misses"))
+        total = hits + misses
+        return {"hits": hits, "misses": misses,
+                "evictions": int(reg.counter("pim.cache.evictions")),
+                "hit_rate": round(hits / total, 4) if total else 0.0}
+
+    def _hist_section() -> dict:
+        out = {}
+        for short, name in (("queue_us", "pim.serve.queue_us"),
+                            ("request_us", "pim.serve.request_us"),
+                            ("exec_us", "pim.batch.exec_us"),
+                            ("occupancy_rows", "pim.batch.occupancy_rows"),
+                            ("group_size", "pim.batch.group_size")):
+            s = runtime.metrics.summary(name)
+            if s is not None:
+                out[short] = s
+        return out
+
+    def _write_metrics_file() -> None:
+        if not metrics_file:
+            return
+        with open(metrics_file, "w") as f:
+            f.write(telemetry.render_prometheus(telemetry.REGISTRY,
+                                                runtime.metrics))
+
     mon = StragglerMonitor(window=64, threshold=4.0)
     hb = Heartbeat(heartbeat, interval_s=0.0) if heartbeat else None
     if hb:
@@ -327,6 +382,7 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
         scrubber = Scrubber(pim.config.faults,
                             interval_s=scrub_interval_ms * 1e-3).start()
     served = 0
+    last_emit = 0.0             # first qualifying batch always emits
     try:
         while (batch := q.collect()) is not None:
             t_plan = time.perf_counter()
@@ -337,15 +393,17 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
                 if err is not None:
                     responses[i] = err
                     if err["error"]["code"] == "overloaded":
-                        runtime.stats.rejected += 1
+                        runtime.stats.add("rejected")
                 elif dl is not None and now > dl:
                     responses[i] = _err(
                         "deadline_exceeded",
                         f"request expired in queue ({prep.n_rows} rows)",
                         True)
-                    runtime.stats.expired += 1
+                    runtime.stats.add("expired")
                     runtime.record_expired(prep)
                 else:
+                    tracer.event("enqueue", t_admit, t_plan,
+                                 cat="pim.serve", rows=int(prep.n_rows))
                     live.append((i, prep, t_admit, dl))
             try:
                 results = runtime.execute(
@@ -359,6 +417,12 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
             t_done = time.perf_counter()
             if results is not None:
                 for (i, prep, t_admit, dl), r in zip(live, results):
+                    # per-request latency histograms: queue wait (admit ->
+                    # batch start) and end-to-end (admit -> response) --
+                    # the p50/p99 the periodic stats lines summarize
+                    runtime.metrics.observe_many({
+                        "pim.serve.queue_us": (t_plan - t_admit) * 1e6,
+                        "pim.serve.request_us": (t_done - t_admit) * 1e6})
                     if r.error is not None:
                         responses[i] = {"error": r.error}
                         continue
@@ -377,20 +441,37 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
                         resp["health"] = r.health
                     responses[i] = _pim_attach_result(resp, prep.op, r.value)
             if mon.record(runtime.stats.batches, t_done - t_plan):
-                runtime.stats.stragglers += 1
+                runtime.stats.add("stragglers")
             if hb:
                 hb.beat(runtime.stats.batches)
-            runtime.stats.errors += sum(
-                1 for r in responses.values() if "error" in r)
+            runtime.stats.add("errors", sum(
+                1 for r in responses.values() if "error" in r))
             for i in range(len(batch)):
                 print(json.dumps(responses[i], sort_keys=True), file=outp,
                       flush=True)
             served += len(batch)
+            if stats_interval_ms > 0 and \
+                    (t_done - last_emit) * 1e3 >= stats_interval_ms:
+                last_emit = t_done
+                st = runtime.stats
+                print(json.dumps(
+                    {"type": "stats", "served": served,
+                     "requests": st.requests, "batches": st.batches,
+                     "groups": st.groups, "rows": st.rows,
+                     "errors": st.errors, "shed": st.shed_requests,
+                     "rows_per_s": _rps(),
+                     "latency": _hist_section(),
+                     "cache": _cache_section()},
+                    sort_keys=True), file=sys.stderr, flush=True)
+                _write_metrics_file()
     finally:
         pinned = len(runtime.pins)
         runtime.close()
         if scrubber is not None:
             scrubber.stop()
+        if trace_file:
+            tracer.write_chrome_trace(trace_file)
+            tracer.enabled = trace_prev
     st = runtime.stats
     media = drain_media_health()
     if stats:
@@ -400,6 +481,14 @@ def serve_pim_batched(inp=None, outp=None, *, window_ms: float = 2.0,
                      f"{media.get('spans_reclaimed', 0)} reclaimed/"
                      f"{media.get('spans_still_bad', 0)} still-bad")
         print(line, file=sys.stderr)
+        # the machine-parseable twin of the human line: every Stats field
+        # plus the histogram summaries and the media/cache sections
+        print(json.dumps(
+            {"type": "summary", "served": served, "pinned": pinned,
+             **st.as_dict(), "rows_per_s": _rps(),
+             "latency": _hist_section(), "cache": _cache_section(),
+             "media": media}, sort_keys=True), file=sys.stderr, flush=True)
+    _write_metrics_file()
     return {"served": served, "batches": st.batches, "groups": st.groups,
             "rows": st.rows, "errors": st.errors, "pinned": pinned,
             "fused_programs": st.fused_programs,
@@ -571,6 +660,19 @@ def main(argv=None):
     ap.add_argument("--pim-scrub-interval-ms", type=float, default=250.0,
                     help="background quarantined-span scrub period when "
                          "fault injection is on (--pim-serve; 0 disables)")
+    ap.add_argument("--pim-stats-interval-ms", type=float, default=0.0,
+                    help="emit a periodic {\"type\": \"stats\"} JSON line "
+                         "to stderr with p50/p99 queue+exec latency, batch "
+                         "occupancy and cache hit rate (--pim-serve; "
+                         "0 disables)")
+    ap.add_argument("--pim-metrics-file", metavar="PATH", default=None,
+                    help="keep a Prometheus-style text exposition of the "
+                         "serving metrics refreshed at the stats cadence "
+                         "and at shutdown (--pim-serve)")
+    ap.add_argument("--pim-trace-file", metavar="PATH", default=None,
+                    help="enable pipeline trace spans and write them as "
+                         "Chrome-trace/Perfetto JSON at shutdown "
+                         "(--pim-serve)")
     ap.add_argument("--pim-verify", action="store_true",
                     help="verified execution: per-chunk result checking "
                          "with retry + row remap (DESIGN.md §12)")
@@ -647,7 +749,10 @@ def main(argv=None):
                 deadline_ms=args.pim_deadline_ms,
                 heartbeat=args.pim_heartbeat,
                 breaker=breaker,
-                scrub_interval_ms=args.pim_scrub_interval_ms)
+                scrub_interval_ms=args.pim_scrub_interval_ms,
+                stats_interval_ms=args.pim_stats_interval_ms,
+                metrics_file=args.pim_metrics_file,
+                trace_file=args.pim_trace_file)
         if args.pim_stdin:
             return serve_pim_stdin()
         if args.pim:

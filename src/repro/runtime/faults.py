@@ -30,8 +30,10 @@ scan :meth:`FaultModel.span_bad` -- how the remapper steers chunks onto
 clean spare rows); transients are only observable *after*, which is what
 the check-word + spot-check machinery in ``kernels.ops`` is for.
 
-This module imports nothing from the package (``kernels.plan`` hangs a
-FaultModel off every ExecPlan, so anything imported here would cycle).
+This module imports only ``runtime.telemetry`` (itself stdlib +
+``core.device_model`` only) from the package: ``kernels.plan`` hangs a
+FaultModel off every ExecPlan, so anything heavier imported here would
+cycle.
 """
 
 from __future__ import annotations
@@ -42,6 +44,8 @@ import threading
 from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from . import telemetry
 
 __all__ = ["FaultModel", "VerifyPolicy", "FaultError", "DeadlineExceeded",
            "word_coords", "Scrubber", "record_wear", "note_quarantine",
@@ -399,17 +403,20 @@ WEAR: "collections.Counter" = collections.Counter()
 _QUARANTINE: Dict[int, int] = {}
 
 #: Cumulative scrub/wear health counters (scrub_passes, spans_scrubbed,
-#: spans_reclaimed, spans_still_bad, quarantined_spans, wear_writes);
+#: spans_reclaimed, spans_still_bad, quarantined_spans, wear_writes) --
+#: a Counter-shaped view over the global telemetry registry's
+#: ``pim.media.*`` names, guarded by the registry's lock (``_MEDIA_LOCK``
+#: keeps guarding the WEAR/_QUARANTINE structures above);
 #: :func:`drain_media_health` snapshots-and-resets (the serving stats
 #: absorb them next to ops.drain_health()).
-MEDIA: "collections.Counter" = collections.Counter()
+MEDIA: "telemetry.CounterGroup" = telemetry.REGISTRY.group("pim.media")
 
 
 def record_wear(row_base: int, n_rows: int, attempts: int = 1) -> None:
     """Count ``attempts`` write cycles against the span at ``row_base``."""
     with _MEDIA_LOCK:
         WEAR[int(row_base)] += int(attempts)
-        MEDIA["wear_writes"] += int(attempts)
+    MEDIA.add("wear_writes", int(attempts))
 
 
 def note_quarantine(row_base: int, n_rows: int) -> None:
@@ -418,8 +425,8 @@ def note_quarantine(row_base: int, n_rows: int) -> None:
         prev = _QUARANTINE.get(int(row_base), 0)
         if int(n_rows) > prev:
             _QUARANTINE[int(row_base)] = int(n_rows)
-        if not prev:
-            MEDIA["quarantined_spans"] += 1
+    if not prev:
+        MEDIA.add("quarantined_spans")
 
 
 def quarantined_spans() -> Dict[int, int]:
@@ -441,11 +448,9 @@ def wear_snapshot(top: int = 8) -> Dict[int, int]:
 
 
 def drain_media_health() -> dict:
-    """Snapshot and reset :data:`MEDIA`; returns the non-zero counters."""
-    with _MEDIA_LOCK:
-        snap = {k: int(v) for k, v in MEDIA.items() if v}
-        MEDIA.clear()
-        return snap
+    """Snapshot and reset :data:`MEDIA`; returns the non-zero counters.
+    (Compatibility shim over ``MEDIA.drain()`` -- the historical API.)"""
+    return MEDIA.drain()
 
 
 class Scrubber:
@@ -477,11 +482,10 @@ class Scrubber:
                 still_bad += 1
             elif release_span(base):
                 reclaimed += 1
-        with _MEDIA_LOCK:
-            MEDIA["scrub_passes"] += 1
-            MEDIA["spans_scrubbed"] += reclaimed + still_bad
-            MEDIA["spans_reclaimed"] += reclaimed
-            MEDIA["spans_still_bad"] = still_bad   # gauge, not cumulative
+        MEDIA.add("scrub_passes")
+        MEDIA.add("spans_scrubbed", reclaimed + still_bad)
+        MEDIA.add("spans_reclaimed", reclaimed)
+        MEDIA["spans_still_bad"] = still_bad   # gauge, not cumulative
         return {"scrubbed": reclaimed + still_bad,
                 "reclaimed": reclaimed, "still_bad": still_bad}
 

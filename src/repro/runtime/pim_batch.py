@@ -47,6 +47,7 @@ import numpy as np
 
 from ..kernels import ops as kops
 from ..pim_ufunc import Prepared
+from . import telemetry
 from .faults import DeadlineExceeded, FaultError
 
 DEFAULT_WINDOW_MS = 2.0
@@ -407,40 +408,75 @@ class RequestResult:
     health: Optional[dict] = None
 
 
-@dataclasses.dataclass
 class Stats:
-    """Cumulative serving counters (one line at server shutdown)."""
-    requests: int = 0
-    batches: int = 0
-    groups: int = 0
-    rows: int = 0
-    errors: int = 0
-    exec_s: float = 0.0
-    fused_programs: int = 0      # requests served by a fused expr program
-    # fault-tolerance / admission health (DESIGN.md §12)
-    rejected: int = 0            # admission backpressure rejections
-    expired: int = 0             # requests past deadline at dequeue
-    degraded_groups: int = 0     # groups that fell back to per-request
-    retries: int = 0             # chunk retries after detected corruption
-    faults_detected: int = 0
-    faults_corrected: int = 0
-    remapped_rows: int = 0
-    stragglers: int = 0          # batch exec-time spikes (StragglerMonitor)
-    # circuit breakers (DESIGN.md §14)
-    breaker_trips: int = 0       # family breakers tripped open
-    breaker_probes: int = 0      # half-open probe admissions
-    breaker_closes: int = 0      # breakers closed after probe successes
-    shed_requests: int = 0       # requests served on the shed fallback
+    """Cumulative serving counters (one line at server shutdown).
+
+    Registry-backed (DESIGN.md §15): every field lives as a
+    ``pim.serve.<field>`` counter on the runtime's per-instance
+    :class:`~repro.runtime.telemetry.MetricsRegistry`, so the serving
+    reader thread (``rejected``/``expired``) and the execute loop mutate
+    under one lock and the Prometheus exposition sees the same numbers
+    the shutdown summary prints.  The historical dataclass attribute API
+    is preserved -- ``stats.requests`` reads, ``stats.requests += 1``
+    writes -- but cross-thread increments should use the atomic
+    :meth:`add` (``+=`` expands to a get-then-set pair)."""
+
+    _FIELDS = dict(
+        requests=0, batches=0, groups=0, rows=0, errors=0, exec_s=0.0,
+        fused_programs=0,        # requests served by a fused expr program
+        # fault-tolerance / admission health (DESIGN.md §12)
+        rejected=0,              # admission backpressure rejections
+        expired=0,               # requests past deadline at dequeue
+        degraded_groups=0,       # groups that fell back to per-request
+        retries=0,               # chunk retries after detected corruption
+        faults_detected=0,
+        faults_corrected=0,
+        remapped_rows=0,
+        stragglers=0,            # batch exec-time spikes (StragglerMonitor)
+        # circuit breakers (DESIGN.md §14)
+        breaker_trips=0,         # family breakers tripped open
+        breaker_probes=0,        # half-open probe admissions
+        breaker_closes=0,        # breakers closed after probe successes
+        shed_requests=0)         # requests served on the shed fallback
+
+    PREFIX = "pim.serve."
+
+    def __init__(self, registry: Optional[telemetry.MetricsRegistry] = None):
+        object.__setattr__(self, "registry",
+                           registry if registry is not None
+                           else telemetry.MetricsRegistry())
+
+    def __getattr__(self, name):        # only called on non-instance attrs
+        if name not in Stats._FIELDS:
+            raise AttributeError(name)
+        default = Stats._FIELDS[name]
+        v = self.registry.counter(Stats.PREFIX + name, default)
+        return v if isinstance(default, float) else int(v)
+
+    def __setattr__(self, name, value):
+        if name in Stats._FIELDS:
+            self.registry.set_counter(Stats.PREFIX + name, value)
+        else:
+            object.__setattr__(self, name, value)
+
+    def add(self, name: str, n=1) -> None:
+        """Atomic increment of one field (thread-safe, unlike ``+=``)."""
+        self.registry.inc(Stats.PREFIX + name, n)
+
+    def as_dict(self) -> Dict[str, float]:
+        """All fields as a plain dict (the JSON summary line's core)."""
+        return {name: getattr(self, name) for name in Stats._FIELDS}
 
     def rows_per_s(self) -> float:
         return self.rows / self.exec_s if self.exec_s > 0 else float("nan")
 
     def absorb_health(self, health: Dict[str, int]) -> None:
-        """Fold one batch's drained ``kernels.ops`` HEALTH counters in."""
-        self.retries += health.get("retries", 0)
-        self.faults_detected += health.get("faults_detected", 0)
-        self.faults_corrected += health.get("faults_corrected", 0)
-        self.remapped_rows += health.get("remapped_rows", 0)
+        """Fold one batch's drained ``kernels.ops`` HEALTH counters in
+        (one lock acquisition)."""
+        self.registry.add_many({
+            Stats.PREFIX + k: health.get(k, 0)
+            for k in ("retries", "faults_detected", "faults_corrected",
+                      "remapped_rows")})
 
     def summary(self, pinned: int = 0) -> str:
         gsz = self.requests / self.groups if self.groups else 0.0
@@ -481,9 +517,17 @@ class BatchRuntime:
     _SHED = object()
 
     def __init__(self, pin_cap: int = DEFAULT_PIN_CAP,
-                 breaker: Optional[BreakerPolicy] = BreakerPolicy()):
+                 breaker: Optional[BreakerPolicy] = BreakerPolicy(),
+                 metrics: Optional[telemetry.MetricsRegistry] = None):
+        # per-instance registry: Stats counters plus the batch histograms
+        # (pim.batch.exec_us / occupancy_rows / group_size) land here, so
+        # concurrent runtimes (tests!) never share windows; the serving
+        # layer adds its queue/request latency histograms to the same
+        # registry and renders all of it in one Prometheus exposition
+        self.metrics = metrics if metrics is not None \
+            else telemetry.MetricsRegistry()
         self.pins = PinnedSchedules(pin_cap)
-        self.stats = Stats()
+        self.stats = Stats(self.metrics)
         self.breaker = breaker
         self.breakers: Dict[bytes, CircuitBreaker] = {}
 
@@ -498,9 +542,11 @@ class BatchRuntime:
 
     def _note_breaker_event(self, event: Optional[str]) -> None:
         if event == "trip":
-            self.stats.breaker_trips += 1
+            self.stats.add("breaker_trips")
+            telemetry.TRACER.instant("breaker.trip", cat="pim.serve")
         elif event == "close":
-            self.stats.breaker_closes += 1
+            self.stats.add("breaker_closes")
+            telemetry.TRACER.instant("breaker.close", cat="pim.serve")
 
     def record_expired(self, prep: Prepared) -> None:
         """Feed one dequeue-time deadline expiry into the request's family
@@ -535,6 +581,8 @@ class BatchRuntime:
         results: List[Optional[RequestResult]] = [None] * len(preps)
         if not preps:
             return []
+        tracer = telemetry.TRACER
+        t_coal = time.perf_counter()
         dls = list(deadlines) if deadlines is not None else [None] * len(preps)
         plan = plan_groups(preps)
         now = time.monotonic()
@@ -544,7 +592,7 @@ class BatchRuntime:
             if self.breaker is not None:
                 mode = self._breaker_for(g.preps[0]).admit(now)
                 if mode == "probe":
-                    self.stats.breaker_probes += 1
+                    self.stats.add("breaker_probes")
             modes.append(mode)
         specs = []
         for g, mode in zip(plan, modes):
@@ -567,6 +615,8 @@ class BatchRuntime:
                               deadline=min(member_dls) if member_dls
                               else None))
         t0 = time.perf_counter()
+        tracer.event("coalesce", t_coal, t0, cat="pim.serve",
+                     requests=len(preps), groups=len(plan))
         live = [s for s in specs if isinstance(s, dict)]
         try:
             live_outs = iter(kops.run_program_groups(live) if live else ())
@@ -587,15 +637,25 @@ class BatchRuntime:
         exec_s = time.perf_counter() - t0
         batch_rows = sum(g.n_rows for g in plan)
         exec_us = exec_s * 1e6
+        tracer.event("exec", t0, t0 + exec_s, cat="pim.serve",
+                     rows=batch_rows, groups=len(live))
+        # per-batch latency/occupancy histograms (DESIGN.md §15): exec
+        # wall time, row occupancy, and per-group member counts -- what
+        # the serving layer's periodic stats lines summarize as p50/p99
+        self.metrics.observe_many({"pim.batch.exec_us": exec_us,
+                                   "pim.batch.occupancy_rows": batch_rows})
+        for g in plan:
+            self.metrics.observe("pim.batch.group_size", len(g.preps))
+        t_split = time.perf_counter()
         for g, out in zip(plan, outs):
             if out is self._SHED:
-                self.stats.shed_requests += len(g.preps)
+                self.stats.add("shed_requests", len(g.preps))
                 for i, p in zip(g.members, g.preps):
                     results[i] = self._run_shed(p, dls[i], g, batch_rows,
                                                 exec_us)
                 continue
             if out is None:
-                self.stats.degraded_groups += 1
+                self.stats.add("degraded_groups")
                 for i, p in zip(g.members, g.preps):
                     results[i] = self._run_degraded(p, dls[i], g, batch_rows,
                                                     exec_us)
@@ -608,6 +668,8 @@ class BatchRuntime:
                     value=p.finish(sub), group_rows=g.n_rows,
                     group_size=len(g.preps), batch_rows=batch_rows,
                     exec_us=exec_us, cached=g.cached)
+        tracer.event("unpack", t_split, time.perf_counter(),
+                     cat="pim.serve", requests=len(preps))
         if self.breaker is not None:
             # feed primary-path outcomes back; shed results never count --
             # they carry no evidence about the primary path's health
@@ -629,13 +691,14 @@ class BatchRuntime:
             for r in results:
                 if r is not None:
                     r.health = dict(health)
-        self.stats.requests += len(preps)
-        self.stats.fused_programs += sum(
-            1 for p in preps if getattr(p, "fused_ops", 1) > 1)
-        self.stats.batches += 1
-        self.stats.groups += len(plan)
-        self.stats.rows += batch_rows
-        self.stats.exec_s += exec_s
+        self.metrics.add_many({       # one lock: the whole batch's deltas
+            Stats.PREFIX + "requests": len(preps),
+            Stats.PREFIX + "fused_programs": sum(
+                1 for p in preps if getattr(p, "fused_ops", 1) > 1),
+            Stats.PREFIX + "batches": 1,
+            Stats.PREFIX + "groups": len(plan),
+            Stats.PREFIX + "rows": batch_rows,
+            Stats.PREFIX + "exec_s": exec_s})
         return results  # type: ignore[return-value]
 
     def _run_degraded(self, p: Prepared, dl: Optional[float], g: Group,

@@ -52,16 +52,16 @@ def test_bench_compare_gate(tmp_path):
 
 def test_bench_json_smoke(tmp_path):
     """The 8k-row kernel family emits in --json format, *and* the
-    --compare BENCH_7.json gate runs as part of the tier-1-adjacent suite
+    --compare BENCH_8.json gate runs as part of the tier-1-adjacent suite
     so word-layout regressions fail loudly here, not just in a manual
     benchmark run.  The compare threshold is loose (this host-shared CPU
-    jitters; BENCH_8.json records the real figures) -- the hard in-test
+    jitters; BENCH_9.json records the real figures) -- the hard in-test
     bar is the *relative* rows64-vs-rows32 assertion below, which load
     cannot skew."""
     out = tmp_path / "bench.json"
     proc = _run_bench(["--only", "kernel/fp16_add_8k_rows",
                        "--json", str(out), "--compare",
-                       os.path.join(REPO, "BENCH_7.json"),
+                       os.path.join(REPO, "BENCH_8.json"),
                        "--threshold", "100"], timeout=900)
     assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
     assert proc.stdout.startswith("name,us_per_call,derived")
@@ -79,6 +79,21 @@ def test_bench_json_smoke(tmp_path):
                if r["name"] == "kernel/fp16_add_8k_rows")
     assert row["levelized"] == 1 and row["levels"] > 0
     assert row["schedule"] == "slots"
+    # telemetry-era fields (DESIGN.md §15): every tracked kernel row now
+    # carries wall percentiles and the modeled device cycles/energy next
+    # to the headline min-of-reps wall time
+    for r in doc["rows"]:
+        if not r["name"].startswith("kernel/"):
+            continue
+        assert r["lat_p99_us"] >= r["lat_p50_us"] > 0, r["name"]
+        assert r["model_cycles"] > 0 and r["model_energy_nj"] > 0, r["name"]
+        assert r["model_us"] > 0, r["name"]
+    # the modeled device latency is schedule-derived, identical for every
+    # row executing the same fp16-add schedule regardless of backend
+    same_sched = [r for r in doc["rows"]
+                  if r.get("schedule") == "slots" and "fused" not in r
+                  and not r.get("verified")]
+    assert len({r["model_cycles"] for r in same_sched}) == 1
     # the paired-uint32 layout row rides the same family and must stay
     # within noise of the rows32 anchor on CPU (identical bit volume; the
     # halved word axis pays off on 64-bit datapaths, not XLA:CPU)
@@ -86,3 +101,50 @@ def test_bench_json_smoke(tmp_path):
                if r["name"] == "kernel/fp16_add_8k_rows_rows64")
     assert r64["layout"] == "rows64" and r64["rows_per_s"] > 0
     assert r64["us_per_call"] < 3 * row["us_per_call"]
+
+
+def test_serve_telemetry_smoke(tmp_path):
+    """--pim-serve under mixed traffic (ISSUE 9 acceptance): periodic
+    JSON stats lines with queue/exec percentiles and the cache hit rate,
+    a machine-parseable shutdown summary line, a Prometheus metrics file
+    carrying the tracked histogram names, and a Chrome trace with the
+    pipeline span taxonomy."""
+    reqs = [json.dumps({"op": ["add", "mul", "sub"][i % 3],
+                        "dtype": "uint8", "x": [1, 2, 3], "y": [3, 2, 1]})
+            for i in range(6)]
+    metrics = tmp_path / "metrics.prom"
+    trace = tmp_path / "trace.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--pim-serve",
+         "--pim-window-ms", "20", "--pim-stats-interval-ms", "1",
+         "--pim-metrics-file", str(metrics),
+         "--pim-trace-file", str(trace)],
+        input="\n".join(reqs) + "\n", cwd=REPO, env=_bench_env(),
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out_lines = [json.loads(l) for l in proc.stdout.splitlines()]
+    assert len(out_lines) == 6 and all("result" in l for l in out_lines)
+
+    jlines = [json.loads(l) for l in proc.stderr.splitlines()
+              if l.startswith("{")]
+    stats = [l for l in jlines if l["type"] == "stats"]
+    (summary,) = [l for l in jlines if l["type"] == "summary"]
+    assert stats, "no periodic stats line emitted"
+    assert "rows_per_s" in stats[0] and "cache" in stats[0]
+    assert summary["served"] == 6 and summary["errors"] == 0
+    lat = summary["latency"]
+    for h in ("queue_us", "request_us", "exec_us", "occupancy_rows"):
+        assert h in lat, h
+    assert lat["queue_us"]["p99"] >= lat["queue_us"]["p50"] > 0
+    assert 0.0 <= summary["cache"]["hit_rate"] <= 1.0
+
+    text = metrics.read_text()
+    for name in ("pim_serve_queue_us", "pim_serve_request_us",
+                 "pim_batch_exec_us", "pim_batch_occupancy_rows",
+                 "pim_cache_misses"):
+        assert name in text, f"{name} missing from metrics file"
+    assert 'quantile="0.99"' in text
+
+    tdoc = json.loads(trace.read_text())
+    names = {e["name"] for e in tdoc["traceEvents"]}
+    assert {"prepare", "enqueue", "exec"} <= names, names
