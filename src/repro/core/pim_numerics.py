@@ -27,37 +27,43 @@ def program_for(kind: str, op: str, width_or_fmt):
     kind: 'int-serial' | 'int-parallel' | 'fp-serial' | 'fp-parallel';
     width_or_fmt: bit width for int kinds, FORMATS name for fp kinds.
     Shared dispatch table of the ufunc frontend (``repro.pim_ufunc``) and
-    :class:`PIMVectorUnit`.
+    :class:`PIMVectorUnit`.  Every program built here carries its build
+    triple as provenance (``kops.note_provenance``) so the on-disk
+    artifact cache can rebuild + verify it when warming a fresh process.
     """
     if kind == "int-serial":
-        return {
+        prog = {
             "add": lambda n: bitserial.build_add(n),
             "sub": lambda n: bitserial.build_sub(n),
             "mul": lambda n: bitserial.build_mul(n),
             "div": lambda n: bitserial.build_div(n),
         }[op](width_or_fmt)
-    if kind == "int-parallel":
-        return {
+    elif kind == "int-parallel":
+        prog = {
             "add": lambda n: bitparallel.build_bp_add(n),
             "sub": lambda n: bitparallel.build_bp_sub(n),
             "mul": lambda n: bitparallel.build_bp_mul(n),
             "div": lambda n: bitparallel.build_bp_div(n, cpk=384),
         }[op](width_or_fmt)
-    fmt = FORMATS[width_or_fmt]
-    if kind == "fp-serial":
-        return {
-            "add": lambda f: bitserial_fp.build_fp_add(f),
-            "sub": lambda f: bitserial_fp.build_fp_sub(f),
-            "mul": lambda f: bitserial_fp.build_fp_mul(f),
-            "div": lambda f: bitserial_fp.build_fp_div(f),
-        }[op](fmt)
-    if kind == "fp-parallel":
-        return {
-            "add": lambda f: bitparallel_fp.build_bp_fp_add(f),
-            "mul": lambda f: bitparallel_fp.build_bp_fp_mul(f),
-            "div": lambda f: bitparallel_fp.build_bp_fp_div(f),
-        }[op](fmt)
-    raise ValueError(kind)
+    elif kind in ("fp-serial", "fp-parallel"):
+        fmt = FORMATS[width_or_fmt]
+        if kind == "fp-serial":
+            prog = {
+                "add": lambda f: bitserial_fp.build_fp_add(f),
+                "sub": lambda f: bitserial_fp.build_fp_sub(f),
+                "mul": lambda f: bitserial_fp.build_fp_mul(f),
+                "div": lambda f: bitserial_fp.build_fp_div(f),
+            }[op](fmt)
+        else:
+            prog = {
+                "add": lambda f: bitparallel_fp.build_bp_fp_add(f),
+                "mul": lambda f: bitparallel_fp.build_bp_fp_mul(f),
+                "div": lambda f: bitparallel_fp.build_bp_fp_div(f),
+            }[op](fmt)
+    else:
+        raise ValueError(kind)
+    kops.note_provenance(prog, ("program_for", kind, op, width_or_fmt))
+    return prog
 
 
 @gates.memoize_build
@@ -128,7 +134,9 @@ def fused_program_for(kind: str, graph: tuple, fmt: str = None):
     if last[0] == "ext":        # bare leaf: route through an identity copy
         nodes.append((build_identity(last[2]), {"x": last}))
         last = ("node", len(nodes) - 1, "z", last[2])
-    return gates.compose(nodes, {"z": (last[1], last[2])})
+    prog = gates.compose(nodes, {"z": (last[1], last[2])})
+    kops.note_provenance(prog, ("fused_program_for", kind, graph, fmt))
+    return prog
 
 
 def fused_out_width(kind: str, graph: tuple, fmt: str = None) -> int:

@@ -130,8 +130,67 @@ def _serial_model(program) -> "telemetry.ModeledCost":
 
 #: Compiled-program LRU lifecycle counters (``pim.cache.hits`` /
 #: ``misses`` / ``evictions`` on the global registry) -- what serving's
-#: periodic stats lines derive the cache hit rate from.
+#: periodic stats lines derive the cache hit rate from.  The disk tier
+#: (``runtime.artifact_cache``) adds ``disk_hits``/``disk_misses``/
+#: ``disk_writes``/``disk_errors``/``disk_evictions`` to the same group,
+#: and ``levelized`` below counts *fresh* levelizations -- the signal a
+#: warm-started replica drives to zero.
 _CACHE = telemetry.REGISTRY.group("pim.cache")
+
+# --------------------------------------------------------------------------
+# optional on-disk artifact tier (DESIGN.md §16)
+# --------------------------------------------------------------------------
+#
+# When installed, the disk cache sits *below* the in-memory LRU: an
+# in-memory schedule miss first tries ``load_schedule`` before paying
+# levelize, every fresh levelize writes through, and the levelized-
+# executor dispatcher AOT-compiles + serializes XLA executables per call
+# signature so a later process deserializes (~20ms) instead of tracing and
+# compiling (~700ms on the tracked fp16-add row).
+
+_artifacts = None       # Optional[runtime.artifact_cache.ArtifactCache]
+
+# Program build provenance -- how ``core.pim_numerics`` constructed each
+# program (the ``program_for``/``fused_program_for`` argument triple).
+# Written into on-disk schedule headers so ``ArtifactCache.warm()`` can
+# rebuild the program in a fresh process and verify its content hash.
+# Weak-keyed: provenance never pins a program alive.
+_provenance: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def set_artifact_cache(cache) -> None:
+    """Install (or, with None, remove) the process-wide on-disk artifact
+    cache consulted by the compiled-program machinery."""
+    global _artifacts
+    _artifacts = cache
+
+
+def artifact_cache():
+    """The installed on-disk artifact tier, or None."""
+    return _artifacts
+
+
+def note_provenance(program, tag: tuple) -> None:
+    """Record how ``program`` was built (a plain-data tag the artifact
+    cache persists and ``warm()`` replays)."""
+    try:
+        _provenance.setdefault(program, tag)
+    except TypeError:
+        pass
+
+
+def provenance_of(program):
+    return _provenance.get(program)
+
+
+def clear_compiled_cache() -> int:
+    """Drop every *unpinned* compiled-program entry (tests use this to
+    force cold in-memory state against a warm disk cache); returns the
+    number dropped."""
+    victims = [k for k in _compiled if k not in _pinned]
+    for k in victims:
+        del _compiled[k]
+    return len(victims)
 
 # Pinned entries (cache key -> pin refcount) are exempt from LRU
 # eviction: the batched serving runtime pins its hot working set so mixed
@@ -325,6 +384,13 @@ class _Compiled:
     static_chain: Dict[tuple, Callable] = dataclasses.field(
         default_factory=dict)
     serial_model: Optional["telemetry.ModeledCost"] = None
+    # AOT-compiled executables keyed by call-signature memo string
+    # (executor name + arg shapes/dtypes + static kwargs).  Populated from
+    # the disk tier (deserialize) or by lower().compile() write-through;
+    # ``aot_failed`` remembers signatures XLA could not AOT so the jit
+    # path is used without re-attempting every call.
+    aot: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+    aot_failed: set = dataclasses.field(default_factory=set)
 
     @property
     def weight(self) -> int:
@@ -353,12 +419,27 @@ class _Compiled:
         alloc = "dense" if kind == "dense" else "slots"
         s = self.scheds.get(alloc)
         if s is None:
-            if alloc == "dense":
-                s = levelize(program,
-                             max_width=plan.backend.level_max_width)
-            else:
-                s = levelize(program, alloc="slots",
-                             max_width=plan.backend.slot_width)
+            content = content_key(program)
+            if _artifacts is not None:
+                s = _artifacts.load_schedule(content, plan, alloc)
+                if s is not None and \
+                        set(s.ports) != set(program.ports):
+                    # key-collision / stale-entry guard: never trust a
+                    # disk schedule whose ports disagree with the program
+                    _CACHE.add("disk_errors")
+                    s = None
+            if s is None:
+                if alloc == "dense":
+                    s = levelize(program,
+                                 max_width=plan.backend.level_max_width)
+                else:
+                    s = levelize(program, alloc="slots",
+                                 max_width=plan.backend.slot_width)
+                _CACHE.add("levelized")
+                if _artifacts is not None:
+                    _artifacts.store_schedule(
+                        content, plan, alloc, s,
+                        provenance=provenance_of(program))
             self.scheds[alloc] = s
         return s
 
@@ -1064,6 +1145,50 @@ def _fit_packed(block: np.ndarray, n_words: int) -> np.ndarray:
     return np.concatenate([block, pad], axis=-1)
 
 
+def _aot_call(comp, program, plan: ExecPlan, fn, args: tuple, static: dict):
+    """Invoke a jitted executor, routing through the AOT-executable tier
+    when a disk artifact cache is installed.
+
+    Per exact call signature (executor name + operand shapes/dtypes +
+    static kwargs), the first process pays ``lower().compile()`` once and
+    serializes the XLA executable to disk; later processes (or a
+    ``warm()``-ed replica) deserialize it in milliseconds and skip tracing
+    entirely.  Any failure -- XLA refusing to serialize, version skew, a
+    deserialized executable rejecting the operands -- permanently marks
+    the signature failed for this entry and falls back to the plain jit
+    path, so AOT is strictly an optimization, never a correctness risk.
+    Mesh-sharded and trace-time-static paths never come through here."""
+    if _artifacts is None or not getattr(_artifacts, "aot", False):
+        return fn(*args, **static)
+    memo = "|".join((
+        fn.__name__,
+        ";".join(f"{tuple(a.shape)}:{a.dtype}" for a in args),
+        ";".join(f"{k}={static[k]!r}" for k in sorted(static))))
+    loaded = comp.aot.get(memo)
+    if loaded is not None:
+        try:
+            return loaded(*args)
+        except Exception:
+            del comp.aot[memo]
+            comp.aot_failed.add(memo)
+            return fn(*args, **static)
+    if memo in comp.aot_failed:
+        return fn(*args, **static)
+    content = content_key(program)
+    try:
+        loaded = _artifacts.load_executable(content, plan, memo)
+        if loaded is None:
+            loaded = fn.lower(*args, **static).compile()
+            _artifacts.store_executable(content, plan, memo, loaded,
+                                        provenance=provenance_of(program))
+        out = loaded(*args)
+    except Exception:
+        comp.aot_failed.add(memo)
+        return fn(*args, **static)
+    comp.aot[memo] = loaded
+    return out
+
+
 def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                         plan: ExecPlan,
                         pad_rows: Optional[int] = None, *,
@@ -1151,8 +1276,9 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                               in_widths=r.in_widths, out_widths=r.out_widths,
                               planes=planes)
             if mesh is None:
-                outs = fn(jnp.asarray(in_vals), r.in_idx, r.la, r.lb, r.lo,
-                          r.out_idx, **static)
+                outs = _aot_call(comp, program, plan, fn,
+                                 (jnp.asarray(in_vals), r.in_idx, r.la,
+                                  r.lb, r.lo, r.out_idx), static)
             else:
                 outs = _sharded_exec(fn, mesh, not is_pallas, 2, **static)(
                     jnp.asarray(in_vals), r.in_idx, r.la, r.lb, r.lo,
@@ -1209,8 +1335,9 @@ def _dispatch_levelized(program, inputs: Dict[str, np.ndarray], n_rows: int,
                        else pim_exec_ref_level_io)
             static = dict(n_cells=r.sched.n_cells, one_cell=r.one_cell)
         if mesh is None:
-            sub = exec_fn(jnp.asarray(in_rows), r.in_idx, r.la, r.lb, r.lo,
-                          r.out_idx, **static)
+            sub = _aot_call(comp, program, plan, exec_fn,
+                            (jnp.asarray(in_rows), r.in_idx, r.la, r.lb,
+                             r.lo, r.out_idx), static)
         else:
             sub = _sharded_exec(exec_fn, mesh, not is_pallas,
                                 in_rows.ndim, **static)(

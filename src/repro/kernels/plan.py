@@ -334,3 +334,79 @@ def as_plan(plan=None, *, backend=None, schedule=None, layout=None,
 #: The default plan: ref backend, slot schedule, rows32 layout.  The pin
 #: API and ``is_compiled`` use it when callers don't name a plan.
 DEFAULT_PLAN = ExecPlan()
+
+
+# --------------------------------------------------------------------------
+# tuned defaults (runtime.tune, DESIGN.md §16)
+# --------------------------------------------------------------------------
+#
+# The autotuner sweeps Backend tunables + schedule choice per (program
+# family, layout, backend) on the *current* device target and registers
+# winners here.  ``apply_tuned`` overlays them onto a plan at ufunc
+# resolution time -- but only onto fields still at their hand defaults, so
+# an explicit user choice (schedule=, a custom Backend, chunk_rows=)
+# always wins over the tuner.
+
+#: (family, layout_name, backend_name) -> override dict.  Families are
+#: "op:param" strings ("add:16", "fp_add:fp16"); override keys: schedule,
+#: slot_width, seg_levels, level_max_width, chunk_rows.
+_tuned: dict = {}
+
+#: Backend fields the tuner may override.
+TUNABLE_FIELDS = ("slot_width", "seg_levels", "level_max_width",
+                  "chunk_rows")
+
+
+def register_tuned(family: str, layout: str, backend: str,
+                   overrides: dict) -> None:
+    """Record tuned defaults for one (family, layout, backend) slot.
+    Unknown keys are rejected loudly -- a corrupt tuned.json should fail
+    install, not silently mistune."""
+    bad = set(overrides) - set(TUNABLE_FIELDS) - {"schedule"}
+    if bad:
+        raise ValueError(f"unknown tuned override keys {sorted(bad)}")
+    if "schedule" in overrides and overrides["schedule"] not in SCHEDULES:
+        raise ValueError(f"unknown tuned schedule "
+                         f"{overrides['schedule']!r}")
+    _tuned[(family, layout, backend)] = dict(overrides)
+
+
+def clear_tuned() -> None:
+    _tuned.clear()
+
+
+def tuned_overrides(family: str, layout: str, backend: str
+                    ) -> Optional[dict]:
+    return _tuned.get((family, layout, backend))
+
+
+def apply_tuned(plan: ExecPlan, family: Optional[str]) -> ExecPlan:
+    """Overlay registered tuned defaults for ``family`` onto ``plan``.
+
+    Conservative by construction: each override lands only when the
+    corresponding plan field still holds the hand default (the stock
+    ``BACKENDS`` descriptor value, ``DEFAULT_SCHEDULE``, unset
+    ``chunk_rows``), so anything the caller chose explicitly -- a custom
+    Backend, ``schedule=``, ``chunk_rows=`` -- is never overridden."""
+    if family is None or not _tuned:
+        return plan
+    ov = _tuned.get((family, plan.layout.name, plan.backend.name))
+    if not ov:
+        return plan
+    stock = BACKENDS.get(plan.backend.name)
+    if stock is None:
+        return plan
+    bk_changes = {}
+    for f in TUNABLE_FIELDS:
+        if f in ov and getattr(plan.backend, f) == getattr(stock, f):
+            bk_changes[f] = int(ov[f])
+    changes = {}
+    if bk_changes:
+        changes["backend"] = dataclasses.replace(plan.backend, **bk_changes)
+    if "schedule" in ov and plan.schedule == DEFAULT_SCHEDULE:
+        changes["schedule"] = ov["schedule"]
+    # plan-level chunk_rows (the ufunc frontend always populates it from
+    # its config default) only yields when still at the hand default
+    if "chunk_rows" in ov and plan.chunk_rows in (None, DEFAULT_CHUNK_ROWS):
+        changes["chunk_rows"] = int(ov["chunk_rows"])
+    return dataclasses.replace(plan, **changes) if changes else plan

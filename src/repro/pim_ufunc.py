@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 from typing import Callable, Dict, Optional
 
 import numpy as np
@@ -36,6 +37,7 @@ import numpy as np
 from .core.floatfmt import FORMATS
 from .core.pim_numerics import program_for
 from .kernels import ops as kops
+from .kernels import plan as kplan
 
 __all__ = ["add", "sub", "mul", "div",
            "fp_add", "fp_sub", "fp_mul", "fp_div",
@@ -82,6 +84,15 @@ class Config:
     layout: str = "rows32"
     faults: Optional[object] = None      # runtime.faults.FaultModel
     verify: Optional[object] = None      # bool | runtime.faults.VerifyPolicy
+    # Persistent-artifact tier (DESIGN.md §16): a directory for the on-disk
+    # compiled-artifact cache (None = disabled).  Setting it installs the
+    # cache process-wide on the next ufunc resolution and auto-loads any
+    # tuned.json the autotuner left beside it.
+    cache_dir: Optional[str] = None
+    # Apply autotuner-registered Backend/schedule defaults per program
+    # family (runtime.tune).  Explicit per-call choices always win; set
+    # False (or ``options(tuned=False)``) to force hand defaults.
+    tuned: bool = True
 
 
 config = Config()
@@ -119,10 +130,48 @@ def options(**kw):
             setattr(config, k, v)
 
 
-def _resolve(kw):
+_installed_cache_dir = None
+
+
+def _ensure_artifact_cache() -> None:
+    """Install (or drop) the process-wide on-disk artifact cache to match
+    ``config.cache_dir``, loading any tuned.json the autotuner persisted
+    beside it.  Idempotent per directory; runs at every ufunc resolution
+    so a ``configure(cache_dir=...)`` takes effect on the next call."""
+    global _installed_cache_dir
+    cd = config.cache_dir
+    if cd == _installed_cache_dir:
+        return
+    if cd is None:
+        kops.set_artifact_cache(None)
+        _installed_cache_dir = None
+        return
+    from .runtime.artifact_cache import ArtifactCache
+    cache = ArtifactCache(cd)
+    kops.set_artifact_cache(cache)
+    tuned_path = cache.tuned_path()
+    if os.path.exists(tuned_path):
+        from .runtime import tune
+        try:
+            tune.install(tuned_path)
+        except Exception:
+            pass        # a corrupt tuned.json never blocks execution
+    _installed_cache_dir = cd
+
+
+def _resolve(kw, family: Optional[str] = None):
     """Normalize ufunc keywords + module defaults into one ExecPlan (the
     boundary where convenience strings stop existing); returns
-    ``(plan, parallel)``."""
+    ``(plan, parallel)``.
+
+    ``family`` is the program-family tag ("add:16", "fp_mul:fp16") the
+    tuned-defaults overlay keys on: when the autotuner has registered
+    winners for (family, layout, backend) and the caller left the
+    corresponding knobs at their defaults, the tuned values apply
+    transparently (``kernels.plan.apply_tuned``).  An explicit ``plan=``
+    bypasses the overlay entirely."""
+    _ensure_artifact_cache()
+
     def opt(name, default):
         v = kw.pop(name, None)
         return default if v is None else v
@@ -130,7 +179,7 @@ def _resolve(kw):
     if "plan" in kw:
         plan = kw.pop("plan")
         for k in ("backend", "schedule", "layout", "chunk_rows", "mesh",
-                  "shards", "faults", "verify"):
+                  "shards", "faults", "verify", "tuned"):
             if kw.pop(k, None) is not None:
                 raise TypeError(
                     f"plan= is exclusive with the {k}= convenience keyword")
@@ -143,6 +192,7 @@ def _resolve(kw):
         raise ValueError(f"unknown backend {backend!r}")
     chunk_rows = opt("chunk_rows", config.chunk_rows)
     parallel = opt("parallel", config.parallel)
+    tuned = opt("tuned", config.tuned)
     schedule = opt("schedule", config.schedule)
     if schedule not in kops.SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r} "
@@ -167,6 +217,8 @@ def _resolve(kw):
     plan = kops.as_plan(backend=backend, schedule=schedule, layout=layout,
                         mesh=mesh, chunk_rows=chunk_rows,
                         faults=faults, verify=verify)
+    if tuned and family is not None:
+        plan = kplan.apply_tuned(plan, family)
     return plan, parallel
 
 
@@ -331,8 +383,8 @@ def _vmax(v):
 
 
 def _prepare_int(op, x, y, width, kw) -> Prepared:
-    plan, parallel = _resolve(kw)
     xr, yr, shape, w = _int_operands(op, x, y, width)
+    plan, parallel = _resolve(kw, family=f"{op}:{w}")
     prog = program_for("int-parallel" if parallel else "int-serial", op, w)
     if op == "div":
         if xr.size and _vmin(yr) == 0:
@@ -416,7 +468,6 @@ def _check_fp_bits(op, name, bits, fmt, reject_zero=False):
 def _prepare_fp(op, x, y, kw) -> Prepared:
     fmt = kw.pop("fmt", None)
     check = kw.pop("check", True)
-    plan, parallel = _resolve(kw)
     x, y = np.broadcast_arrays(np.asarray(x), np.asarray(y))
     if fmt is None:
         if x.dtype != y.dtype or x.dtype not in _NP_FMT:
@@ -447,6 +498,7 @@ def _prepare_fp(op, x, y, kw) -> Prepared:
         xb = x.ravel().astype(np.uint64)
         yb = y.ravel().astype(np.uint64)
         decode = lambda bits: bits.reshape(x.shape)
+    plan, parallel = _resolve(kw, family=f"fp_{op}:{fmt_name}")
     f = FORMATS[fmt_name]
     if check and xb.size:
         _check_fp_bits(f"fp_{op}", "x", xb, f)

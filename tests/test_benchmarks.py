@@ -52,16 +52,16 @@ def test_bench_compare_gate(tmp_path):
 
 def test_bench_json_smoke(tmp_path):
     """The 8k-row kernel family emits in --json format, *and* the
-    --compare BENCH_8.json gate runs as part of the tier-1-adjacent suite
+    --compare BENCH_9.json gate runs as part of the tier-1-adjacent suite
     so word-layout regressions fail loudly here, not just in a manual
     benchmark run.  The compare threshold is loose (this host-shared CPU
-    jitters; BENCH_9.json records the real figures) -- the hard in-test
+    jitters; BENCH_10.json records the real figures) -- the hard in-test
     bar is the *relative* rows64-vs-rows32 assertion below, which load
     cannot skew."""
     out = tmp_path / "bench.json"
     proc = _run_bench(["--only", "kernel/fp16_add_8k_rows",
                        "--json", str(out), "--compare",
-                       os.path.join(REPO, "BENCH_8.json"),
+                       os.path.join(REPO, "BENCH_9.json"),
                        "--threshold", "100"], timeout=900)
     assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
     assert proc.stdout.startswith("name,us_per_call,derived")

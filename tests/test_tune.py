@@ -1,0 +1,149 @@
+"""Backend autotuner (DESIGN.md §16): the default configuration can never
+lose the sweep, winners persist/install as a per-target tuned.json, the
+plan-resolution overlay applies tuned values only to knobs the caller left
+at hand defaults, and the CLI quick path runs end to end."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import pim_ufunc as pim
+from repro.kernels import plan as kplan
+from repro.runtime import tune
+from repro.runtime.artifact_cache import device_target
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _clean_overlay():
+    kplan.clear_tuned()
+    yield
+    kplan.clear_tuned()
+
+
+def test_candidates_default_first():
+    for quick in (False, True):
+        cands = tune.candidates(quick)
+        assert cands[0] == {}, "hand defaults must be the baseline"
+        keys = [json.dumps(c, sort_keys=True) for c in cands]
+        assert len(keys) == len(set(keys)), "duplicate sweep point"
+
+
+def test_parse_family():
+    assert tune.parse_family("add:16") == ("add", {"width": 16})
+    assert tune.parse_family("fp_mul:fp16") == ("fp_mul", {"fmt": "fp16"})
+    with pytest.raises(ValueError):
+        tune.parse_family("add")
+    with pytest.raises(ValueError):
+        tune.parse_family("fp_add:fp11")
+
+
+def test_tune_family_never_loses_to_defaults():
+    """The safety property the tracked benchmark rows rely on: whatever
+    the sweep measures, the winner's wall time is <= the hand-default
+    candidate's, because defaults are swept first and only strictly
+    faster candidates replace them."""
+    e = tune.tune_family("add:16", rows=256, reps=1, quick=True)
+    assert e["candidates"][0]["overrides"] == {}
+    assert e["us"] <= e["default_us"]
+    assert e["model_cycles"] > 0
+
+
+def test_save_install_and_overlay(tmp_path):
+    """A tuned.json round-trip: save to a cache directory, install, and
+    the ufunc frontend resolves tuned values -- but only onto knobs left
+    at hand defaults; explicit choices and ``tuned=False`` win."""
+    doc = {"version": tune.DOC_VERSION, "target": device_target(),
+           "entries": [{"family": "add:16", "layout": "rows32",
+                        "backend": "ref",
+                        "overrides": {"slot_width": 4,
+                                      "schedule": "dense"}}]}
+    path = tune.save(doc, str(tmp_path))
+    assert os.path.basename(path) == "tuned.json"
+    assert tune.install(path) == 1
+
+    x = np.arange(64, dtype=np.uint16)
+    prep = pim.prepare("add", x, x, width=16)
+    assert prep.plan.backend.slot_width == 4
+    assert prep.plan.schedule == "dense"
+
+    # an explicit schedule beats the overlay; untouched knobs still tune
+    prep = pim.prepare("add", x, x, width=16, schedule="slots-static")
+    assert prep.plan.schedule == "slots-static"
+    assert prep.plan.backend.slot_width == 4
+
+    # a different family is untouched
+    prep = pim.prepare("mul", x, x, width=16)
+    assert prep.plan.schedule == kplan.DEFAULT_SCHEDULE
+
+    # tuned=False forces hand defaults wholesale
+    with pim.options(tuned=False):
+        prep = pim.prepare("add", x, x, width=16)
+    assert prep.plan.schedule == kplan.DEFAULT_SCHEDULE
+    assert prep.plan.backend.slot_width == \
+        kplan.BACKENDS["ref"].slot_width
+
+
+def test_save_merges_per_target(tmp_path):
+    base = {"version": tune.DOC_VERSION, "target": device_target(),
+            "entries": [{"family": "add:16", "layout": "rows32",
+                         "backend": "ref", "overrides": {"slot_width": 4}}]}
+    tune.save(base, str(tmp_path))
+    update = {"version": tune.DOC_VERSION, "target": device_target(),
+              "entries": [{"family": "mul:16", "layout": "rows32",
+                           "backend": "ref",
+                           "overrides": {"slot_width": 8}}]}
+    path = tune.save(update, str(tmp_path))
+    with open(path) as f:
+        merged = json.load(f)
+    fams = {e["family"] for e in merged["entries"]}
+    assert fams == {"add:16", "mul:16"}
+
+
+def test_install_skips_other_targets_and_versions(tmp_path):
+    alien = {"version": tune.DOC_VERSION, "target": "tpu:v9",
+             "entries": [{"family": "add:16", "layout": "rows32",
+                          "backend": "ref", "overrides": {"slot_width": 4}}]}
+    assert tune.install(alien) == 0
+    stale = {"version": tune.DOC_VERSION + 1, "target": device_target(),
+             "entries": alien["entries"]}
+    assert tune.install(stale) == 0
+    # defaults-won entries (empty overrides) install nothing either
+    nop = {"version": tune.DOC_VERSION, "target": device_target(),
+           "entries": [{"family": "add:16", "layout": "rows32",
+                        "backend": "ref", "overrides": {}}]}
+    assert tune.install(nop) == 0
+
+
+def test_register_tuned_rejects_bad_overrides():
+    with pytest.raises((KeyError, ValueError)):
+        kplan.register_tuned("add:16", "rows32", "ref", {"bogus_knob": 1})
+    with pytest.raises((KeyError, ValueError)):
+        kplan.register_tuned("add:16", "rows32", "ref",
+                             {"schedule": "verilog"})
+
+
+def test_tune_cli_quick_smoke(tmp_path):
+    """The tier-1-adjacent CLI smoke: a --quick sweep of one family writes
+    a valid tuned.json beside the artifact cache."""
+    out = tmp_path / "cache"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.runtime.tune", "--quick",
+         "--families", "add:16", "--rows", "128", "--reps", "1",
+         "--out", str(out)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "add:16" in proc.stdout
+    with open(out / "tuned.json") as f:
+        doc = json.load(f)
+    assert doc["version"] == tune.DOC_VERSION
+    (e,) = doc["entries"]
+    assert e["family"] == "add:16" and e["us"] <= e["default_us"]
